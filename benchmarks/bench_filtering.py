@@ -1,0 +1,38 @@
+"""Paper Figs. 1-2: average filtering percentage of each MapReduce
+benchmark on web vs non-web corpora, measured with the JAX MapReduce
+engine (map-output bytes / map-input bytes, per shard)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import table
+from repro.mapreduce import JOBS, corpus, measure_fp
+
+
+def run(n_shards: int = 8, shard_tokens: int = 4096) -> str:
+    rows = []
+    for kind in ("web", "non-web"):
+        shards_t, shards_l = [], []
+        for s in range(n_shards):
+            t, l = corpus(kind, shard_tokens, seed=1000 + s)
+            shards_t.append(t)
+            shards_l.append(l)
+        st, sl = np.stack(shards_t), np.stack(shards_l)
+        for name, spec in JOBS.items():
+            fps = measure_fp(spec, st, sl)
+            rows.append([name, kind, float(np.mean(fps)),
+                         float(np.std(fps))])
+    out = table("Figs. 1-2 — filtering percentage by benchmark x "
+                "input type (mean ± std over shards)",
+                ["benchmark", "input", "FP mean", "FP std"], rows)
+    # the paper's key observations, as assertions
+    fp = {(r[0], r[1]): r[2] for r in rows}
+    assert fp[("Grep", "web")] < 0.5, "Grep is always MH (paper §4.1)"
+    assert abs(fp[("Permu", "non-web")] - 3.0) < 0.3, "Permu FP ~ 3"
+    assert all(r[3] < 0.2 * max(r[2], 1e-9) or r[0] == "Grep"
+               for r in rows), "per-shard FP std small (Eq. 2 premise)"
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

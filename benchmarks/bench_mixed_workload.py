@@ -1,0 +1,64 @@
+"""Paper §6.2 (Figs. 11-15, Table 10): the 100-job mixed workload
+(1/5/12 GB jobs) under all five algorithms."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import table
+from repro.sim.experiment import ALGOS, run_comparison
+
+BENCHES = ("WC", "SC", "II", "Grep", "Permu")
+
+
+def run(seed: int = 11) -> str:
+    res = run_comparison("mixed", seed=seed)
+    out = []
+
+    rows = []
+    for algo in ALGOS:
+        s = res[algo]
+        for b in BENCHES:
+            ml = s.map_locality[b]
+            rows.append([algo, b, ml.vps, ml.cen, ml.off_cen,
+                         s.reduce_locality[b]])
+    out.append(table("Figs. 11-12 — map/reduce locality, mixed workload",
+                     ["algo", "bench", "VPS-loc", "Cen-loc", "off-Cen",
+                      "reduce-loc"], rows))
+
+    rows = [[a, res[a].int_mb / 1024.0,
+             res[a].int_mb / res["fifo"].int_mb] for a in ALGOS]
+    out.append(table("Fig. 13 — INT (GB, and vs FIFO)",
+                     ["algo", "INT GB", "vs FIFO"], rows))
+
+    rows = [[a, res[a].wtt] for a in ALGOS]
+    out.append(table("Fig. 14 — workload turnaround time (s)",
+                     ["algo", "WTT"], rows))
+
+    rows = []
+    for a in ALGOS:
+        curve = res[a].completion_curve
+        # completion fraction at quartiles of the slowest algo's WTT
+        wtt_max = max(r.wtt for r in res.values())
+        for frac in (0.25, 0.5, 0.75, 1.0):
+            t = frac * wtt_max
+            done = max((f for tt, f in curve if tt <= t), default=0.0)
+            rows.append([a, t, done])
+    out.append(table("Fig. 15 — cumulative completion rate",
+                     ["algo", "time s", "fraction done"], rows))
+
+    rows = [[a, res[a].vps_load_mean, res[a].vps_load_std] for a in ALGOS]
+    out.append(table("Table 10 — VPS load, mixed workload",
+                     ["algo", "mean", "std"], rows))
+
+    # paper-claim checks: JoSS INT ~ 1/3 of baselines; JoSS-J best WTT
+    for joss in ("joss-t", "joss-j"):
+        for base in ("fifo", "fair", "capacity"):
+            assert res[joss].int_mb < 0.7 * res[base].int_mb, (joss, base)
+    wtts = {a: res[a].wtt for a in ALGOS}
+    assert wtts["joss-j"] <= min(w for a, w in wtts.items()
+                                 if a != "joss-j") * 1.05
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(run())

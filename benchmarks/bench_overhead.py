@@ -1,0 +1,66 @@
+"""Paper §6.3 (Figs. 16-17): scheduler overhead — per-job scheduling
+decision latency, per-slot assignment latency, and master-side storage.
+Includes the beyond-paper scale sweep: the same measurements on clusters
+up to 4096 hosts (the 1000+-node operating point)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import table
+from repro.core.joss import JossT, make_algorithm
+from repro.core.topology import HostId, VirtualCluster
+from repro.sim.workloads import PAPER_BENCHMARKS, _mk_job
+
+
+def _measure(hosts_per_pod, n_jobs: int = 200, blocks_per_job: int = 8):
+    cluster = VirtualCluster(hosts_per_pod)
+    rng = np.random.RandomState(0)
+    algo = JossT(cluster)
+    for i, bench in enumerate(PAPER_BENCHMARKS.values()):
+        algo.registry.record(
+            _mk_job(cluster, bench, 128.0, 0.0, rng, tag=f"p{i}"),
+            bench.fp)
+    jobs = []
+    names = list(PAPER_BENCHMARKS.values())
+    for i in range(n_jobs):
+        jobs.append(_mk_job(cluster, names[i % len(names)],
+                            128.0 * blocks_per_job, 0.0, rng,
+                            tag=f"j{i}"))
+    t0 = time.perf_counter()
+    for j in jobs:
+        algo.submit(j)
+    submit_us = (time.perf_counter() - t0) / n_jobs * 1e6
+
+    hosts = [h.hid for h in cluster.hosts()]
+    t0 = time.perf_counter()
+    n_assign = 0
+    for _ in range(4):
+        for hid in hosts:
+            if algo.next_map_task(hid) is not None:
+                n_assign += 1
+    assign_us = ((time.perf_counter() - t0) / max(n_assign, 1)) * 1e6
+    return submit_us, assign_us, algo.registry.storage_bytes
+
+
+def run() -> str:
+    rows = []
+    for hosts_per_pod in [(15, 15), (64, 64), (256, 256),
+                          (512, 512, 512, 512), (1024, 1024, 1024, 1024)]:
+        n = sum(hosts_per_pod)
+        submit_us, assign_us, storage = _measure(list(hosts_per_pod))
+        rows.append([f"{len(hosts_per_pod)}x{hosts_per_pod[0]}", n,
+                     submit_us, assign_us, storage])
+    out = table("Figs. 16-17 — scheduler overhead vs cluster size "
+                "(paper testbed = 2x15)",
+                ["pods x hosts", "total hosts", "submit µs/job",
+                 "assign µs/slot", "registry bytes"], rows)
+    # master overhead must stay sane at the 4096-host operating point
+    assert rows[-1][2] < 50_000, "submit latency must stay < 50 ms/job"
+    assert rows[-1][4] < 4096, "registry storage is O(benchmarks)"
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

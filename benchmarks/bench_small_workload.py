@@ -1,0 +1,60 @@
+"""Paper §6.1 (Figs. 7-10, Tables 8-9): the full 300-job small workload
+under all five algorithms."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import table
+from repro.sim.experiment import ALGOS, run_comparison
+from repro.sim.metrics import normalized_jtt
+
+BENCHES = ("WC", "SC", "II", "Grep", "Permu")
+
+
+def run(n_jobs: int = 300, seed: int = 7) -> str:
+    res = run_comparison("small", n_jobs=n_jobs, seed=seed)
+    out = []
+
+    rows = []
+    for algo in ALGOS:
+        s = res[algo]
+        for b in BENCHES:
+            ml = s.map_locality[b]
+            rows.append([algo, b, ml.vps, ml.cen, ml.off_cen,
+                         s.reduce_locality[b]])
+    out.append(table(
+        f"Figs. 7-8 — map/reduce data locality, small workload "
+        f"({n_jobs} jobs)",
+        ["algo", "bench", "VPS-loc", "Cen-loc", "off-Cen", "reduce-loc"],
+        rows))
+
+    rows = [[a, res[a].int_mb / 1024.0] for a in ALGOS]
+    out.append(table("Fig. 9 — inter-datacenter traffic (GB)",
+                     ["algo", "INT GB"], rows))
+
+    rows = []
+    njtt = normalized_jtt(list(res.values()), reference="joss-t")
+    for a in ALGOS:
+        rows.append([a] + [res[a].avg_jtt[b] for b in BENCHES])
+    out.append(table("Fig. 10 — average JTT (s)",
+                     ["algo"] + list(BENCHES), rows))
+    rows = [[a] + [njtt[a][b] for b in BENCHES] for a in ALGOS]
+    out.append(table("Table 8 — JTT normalized to JoSS-T",
+                     ["algo"] + list(BENCHES), rows))
+
+    rows = [[a, res[a].vps_load_mean, res[a].vps_load_std] for a in ALGOS]
+    out.append(table("Table 9 — VPS load (map tasks per VPS)",
+                     ["algo", "mean", "std"], rows))
+
+    # paper-claim checks
+    for joss in ("joss-t", "joss-j"):
+        for base in ("fifo", "fair", "capacity"):
+            assert res[joss].int_mb < res[base].int_mb, (joss, base)
+    mean_jtt = {a: float(np.mean([res[a].avg_jtt[b] for b in BENCHES]))
+                for a in ALGOS}
+    assert mean_jtt["joss-t"] == min(mean_jtt.values())
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(run())

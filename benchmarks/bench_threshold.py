@@ -1,0 +1,38 @@
+"""Paper §5 (Eq. 8): sweep the classification threshold td and measure
+simulated INT — the minimum must sit at td = k/(k-1)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import table
+from repro.core.classifier import best_threshold
+from repro.core.joss import JossT
+from repro.sim.cluster_sim import Simulator
+from repro.sim.workloads import (PAPER_BENCHMARKS, make_cluster,
+                                 profiling_prelude, small_workload)
+
+
+def run(n_jobs: int = 80, seed: int = 7) -> str:
+    tds = [0.5, 1.0, 1.5, 2.0, 3.0, 5.0, 1e9]
+    rows = []
+    ints = {}
+    for td in tds:
+        cluster = make_cluster((15, 15))
+        jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
+        algo = JossT(cluster, td=td)
+        for j in profiling_prelude(cluster):
+            algo.registry.record(j, j.true_fp)
+        res = Simulator(cluster, algo, jobs, seed=seed).run()
+        ints[td] = res.int_bytes
+        rows.append([f"{td:g}", res.int_bytes / 1024.0, res.wtt])
+    opt = best_threshold(2)
+    out = table(f"Eq. 8 — td sweep (k=2, optimal td={opt:g})",
+                ["td", "INT GB", "WTT s"], rows)
+    # the derived optimum must be within 5% of the sweep's best INT
+    best_measured = min(ints.values())
+    assert ints[2.0] <= best_measured * 1.05, ints
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

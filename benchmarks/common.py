@@ -1,0 +1,24 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+
+def table(title: str, headers: List[str], rows: List[List]) -> str:
+    out = [f"\n## {title}", "", "| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(
+            f"{x:.3f}" if isinstance(x, float) else str(x) for x in r)
+            + " |")
+    return "\n".join(out)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

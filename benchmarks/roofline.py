@@ -1,0 +1,57 @@
+"""Render the §Roofline table from dry-run JSON results.
+
+Usage: python -m benchmarks.roofline [results/baseline_all.json ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(paths: List[str]) -> List[Dict]:
+    rows: List[Dict] = []
+    for p in paths:
+        with open(p) as f:
+            rows += json.load(f)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    return f"{x*1e3:.1f}ms" if x < 10 else f"{x:.1f}s"
+
+
+def render(rows: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "useful FLOPs | roofline frac | mem/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    seen = {}
+    for r in rows:
+        if r.get("mesh") != mesh and r["status"] == "OK":
+            continue
+        seen[(r["arch"], r["shape"])] = r  # later files override earlier
+    for (arch, shape) in sorted(seen, key=lambda k: (k[0],
+                                                     ORDER.index(k[1]))):
+        r = seen[(arch, shape)]
+        if r["status"] == "SKIP":
+            out.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — | "
+                       f"{r.get('reason', '')[:40]} |")
+            continue
+        out.append(
+            f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {r['useful_flop_fraction']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | "
+            f"{r['memory']['per_device_total']/2**30:.1f}GiB |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    paths = sys.argv[1:] or ["results/baseline_all.json"]
+    rows = load(paths)
+    print("## Roofline, single-pod 16x16 (256 chips)\n")
+    print(render(rows, "16x16"))
+    print("\n## Multi-pod 2x16x16 (512 chips)\n")
+    print(render(rows, "2x16x16"))

@@ -1,0 +1,53 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Benchmark driver: one section per paper table/figure, plus the
+beyond-paper engine/scale measurements. Markdown to stdout (tee'd into
+bench_output.txt; EXPERIMENTS.md references these sections)."""
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced job counts (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_engine, bench_filtering,
+                            bench_mixed_workload, bench_overhead,
+                            bench_small_workload, bench_threshold)
+
+    sections = {
+        "filtering": lambda: bench_filtering.run(),
+        "threshold": lambda: bench_threshold.run(
+            n_jobs=40 if args.quick else 80),
+        "small": lambda: bench_small_workload.run(
+            n_jobs=60 if args.quick else 300),
+        "mixed": lambda: bench_mixed_workload.run(),
+        "overhead": lambda: bench_overhead.run(),
+        "engine": lambda: bench_engine.run(),
+    }
+    picked = (args.only.split(",") if args.only else list(sections))
+    failures = 0
+    print("# JoSS benchmark suite (paper tables/figures)")
+    for name in picked:
+        t0 = time.time()
+        try:
+            print(sections[name]())
+            print(f"\n[{name}: OK, {time.time() - t0:.1f}s]")
+        except AssertionError as e:
+            failures += 1
+            print(f"\n[{name}: CLAIM-CHECK FAILED: {e}]")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"\n[{name}: ERROR: {type(e).__name__}: {e}]")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

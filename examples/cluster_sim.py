@@ -1,0 +1,46 @@
+"""Paper-experiment driver: reruns §6's evaluation (reduced by default;
+--full for the exact 300/100-job workloads) and prints the headline
+comparison, including a beyond-paper large-cluster run.
+
+Run:  PYTHONPATH=src python examples/cluster_sim.py [--full]
+"""
+import argparse
+
+import numpy as np
+
+from repro.sim.experiment import ALGOS, run_comparison
+
+
+def show(res, title):
+    print(f"\n=== {title} ===")
+    print(f"{'algo':10s} {'INT GB':>8s} {'WTT s':>8s} {'VPS-loc':>8s} "
+          f"{'off-Cen':>8s} {'reduce-loc':>10s} {'load std':>9s}")
+    for a in ALGOS:
+        s = res[a]
+        ml = [s.map_locality[b] for b in s.map_locality]
+        vps = float(np.mean([m.vps for m in ml]))
+        off = float(np.mean([m.off_cen for m in ml]))
+        rl = float(np.mean(list(s.reduce_locality.values())))
+        print(f"{a:10s} {s.int_mb/1024:8.1f} {s.wtt:8.0f} {vps:8.2f} "
+              f"{off:8.2f} {rl:10.2f} {s.vps_load_std:9.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="exact paper workloads (300 + 100 jobs)")
+    args = ap.parse_args()
+    n_small = 300 if args.full else 60
+
+    show(run_comparison("small", n_jobs=n_small),
+         f"small workload ({n_small} x 1GB jobs, 2x15 VPS; paper §6.1)")
+    show(run_comparison("mixed"),
+         "mixed workload (100 jobs 1-12GB; paper §6.2)")
+    # beyond paper: a 4-pod, 256-host virtual cluster
+    show(run_comparison("small", n_jobs=n_small,
+                        hosts_per_pod=(64, 64, 64, 64)),
+         "beyond-paper scale: 4 pods x 64 hosts")
+
+
+if __name__ == "__main__":
+    main()

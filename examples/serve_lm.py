@@ -1,0 +1,70 @@
+"""Serving driver: batched prefill + decode with KV cache, fronted by the
+JoSS request router (policy A for fresh sessions, cache affinity for
+follow-ups, failover on pod loss).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--requests 8]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.topology import VirtualCluster
+from repro.models import build_model
+from repro.serve import JossServeRouter, Request
+from repro.train import make_prefill_step, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--arch", default="qwen3-4b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P, G = args.requests, args.prompt_len, args.gen_len
+
+    # --- route the batch across pods (control plane) --------------------
+    cluster = VirtualCluster([4, 4])
+    router = JossServeRouter(cluster)
+    for r in range(B):
+        session = f"sess{r % (B // 2)}"   # half the sessions recur
+        d = router.route(Request(f"req{r}", session=session,
+                                 prompt_tokens=P, decode_tokens=G))
+        print(f"route {d.rid}: pod {d.pod} (policy {d.policy}, "
+              f"cache_hit={d.cache_hit})")
+    print(f"router cache-hit rate: {router.cache_hit_rate():.2f}, "
+          f"load imbalance: {router.load_imbalance():.2f}")
+
+    # --- data plane: one pod's batch (prefill + greedy decode) ----------
+    prompts = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab, (B, P)), jnp.int32)
+    prefill = jax.jit(make_prefill_step(model, cache_len=P + G))
+    decode = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    t0 = time.time()
+    next_tok, cache = prefill(params, {"tokens": prompts})
+    prefill_s = time.time() - t0
+    out = [next_tok]
+    t0 = time.time()
+    for i in range(G - 1):
+        pos = jnp.int32(P + i)
+        next_tok, _, cache = decode(params, cache, out[-1], pos)
+        out.append(next_tok)
+    decode_s = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"prefill: {B}x{P} tokens in {prefill_s:.2f}s | "
+          f"decode: {G} steps in {decode_s:.2f}s "
+          f"({B * G / max(decode_s, 1e-9):.1f} tok/s)")
+    print("sample generation (request 0):", np.asarray(gen[0])[:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Task assigners: TTA (Fig. 5) and JTA (Fig. 6).
+
+Both pull tasks for an idle slot of host VPS_{c,l}:
+  * map slot:  MQ_FIFO first (Hadoop-FIFO semantics to profile new jobs),
+    else round-robin over cen_c's map queues. TTA takes the *head* task of
+    the chosen queue (fast assignment); JTA applies Hadoop-FIFO inside the
+    chosen queue (strict job order + locality preference -> VPS-locality).
+  * reduce slot: RQ_FIFO first, else round-robin over cen_c's reduce queues;
+    both assigners take the first *ready* reduce task.
+
+``ready`` for a reduce task is delegated to a predicate (the simulator wires
+it to "all map tasks of the job finished", Hadoop's shuffle gate simplified).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.job import MapTask, ReduceTask
+from repro.core.queues import ClusterQueues, TaskQueue
+from repro.core.topology import HostId, Locality, VirtualCluster
+
+
+def fifo_pick_map(queue: TaskQueue, host: HostId,
+                  cluster: VirtualCluster) -> Optional[MapTask]:
+    """Hadoop-FIFO map pick: strict job order, locality-preferring.
+
+    Considers only the earliest job present in the queue (the head task's
+    job, since queues are appended in submission order) and among its tasks
+    prefers host-local, then pod-local, then the head task.
+    """
+    head = queue.peek()
+    if head is None:
+        return None
+    job_id = head.job_id
+    best, best_rank = None, 3
+    for t in queue:
+        if t.job_id != job_id:
+            break  # strict FIFO job order
+        loc = cluster.locality_of(t.shard_id, host) \
+            if t.shard_id in cluster.shard_replicas else Locality.OFF_POD
+        rank = {Locality.HOST: 0, Locality.POD: 1, Locality.OFF_POD: 2}[loc]
+        if rank < best_rank:
+            best, best_rank = t, rank
+            if rank == 0:
+                break
+    if best is None:
+        best = head
+    queue.remove(best)
+    return best
+
+
+def head_pick_map(queue: TaskQueue, host: HostId,
+                  cluster: VirtualCluster) -> Optional[MapTask]:
+    """TTA map pick: plain head-of-queue (fast task assignment)."""
+    if not queue:
+        return None
+    return queue.popleft()
+
+
+def pick_ready_reduce(queue: TaskQueue,
+                      ready: Callable[[ReduceTask], bool]
+                      ) -> Optional[ReduceTask]:
+    """First ready reduce task in queue order."""
+    for t in queue:
+        if ready(t):
+            queue.remove(t)
+            return t
+    return None
+
+
+class BaseAssigner:
+    """Shared round-robin machinery of TTA/JTA (Figs. 5 and 6 differ only in
+    line 11: how a map task is picked from the chosen queue)."""
+
+    #: how this assigner picks from a non-FIFO map queue
+    map_pick = staticmethod(head_pick_map)
+    name = "base"
+
+    def __init__(self, cluster: VirtualCluster, queues: ClusterQueues):
+        self.cluster = cluster
+        self.queues = queues
+        # per-pod persistent round-robin indices I_map / I_red
+        self._i_map: Dict[int, int] = {}
+        self._i_red: Dict[int, int] = {}
+
+    # -- map slot --------------------------------------------------------------
+    def next_map_task(self, host: HostId) -> Optional[MapTask]:
+        # lines 6-8: MQ_FIFO first, with Hadoop-FIFO locality semantics
+        task = fifo_pick_map(self.queues.mq_fifo, host, self.cluster)
+        if task is not None:
+            return task
+        # lines 9-13: round-robin over this pod's map queues
+        pod_q = self.queues.pods[host.pod]
+        n = len(pod_q.map_queues)
+        i = self._i_map.get(host.pod, 0)
+        for step in range(n):
+            q = pod_q.map_queues[(i + step) % n]
+            task = self.map_pick(q, host, self.cluster)
+            if task is not None:
+                self._i_map[host.pod] = (i + step + 1) % n
+                return task
+        self._i_map[host.pod] = i % max(n, 1)
+        return None
+
+    # -- reduce slot -------------------------------------------------------------
+    def next_reduce_task(self, host: HostId,
+                         ready: Callable[[ReduceTask], bool]
+                         ) -> Optional[ReduceTask]:
+        # lines 15-17: RQ_FIFO first
+        task = pick_ready_reduce(self.queues.rq_fifo, ready)
+        if task is not None:
+            return task
+        # lines 18-22: round-robin over this pod's reduce queues
+        pod_q = self.queues.pods[host.pod]
+        n = len(pod_q.reduce_queues)
+        i = self._i_red.get(host.pod, 0)
+        for step in range(n):
+            q = pod_q.reduce_queues[(i + step) % n]
+            task = pick_ready_reduce(q, ready)
+            if task is not None:
+                self._i_red[host.pod] = (i + step + 1) % n
+                return task
+        self._i_red[host.pod] = i % max(n, 1)
+        return None
+
+
+class TTA(BaseAssigner):
+    """Task-driven Task Assigner (Fig. 5): fastest possible assignment."""
+
+    map_pick = staticmethod(head_pick_map)
+    name = "tta"
+
+
+class JTA(BaseAssigner):
+    """Job-driven Task Assigner (Fig. 6): Hadoop-FIFO within each queue to
+    further improve VPS-locality, at an assignment-latency cost.
+
+    The paper observes (Table 8, Fig. 7) that JTA both raises VPS-locality
+    and *delays* map execution. We model the mechanism explicitly: when the
+    chosen queue's head job has no host-local task for the requesting host,
+    JTA defers that host's assignment for up to ``max_defer`` heartbeats,
+    giving the holding host a chance to claim it (cf. delay scheduling [17],
+    which the paper's JTA approximates via Hadoop-FIFO locality preference).
+    After the defer budget is spent the task is assigned non-locally.
+    """
+
+    name = "jta"
+    max_defer = 1
+
+    def __init__(self, cluster: VirtualCluster, queues: ClusterQueues):
+        super().__init__(cluster, queues)
+        self._defers: Dict[object, int] = {}
+
+    def map_pick(self, queue: TaskQueue, host: HostId,
+                 cluster: VirtualCluster) -> Optional[MapTask]:
+        head = queue.peek()
+        if head is None:
+            return None
+        job_id = head.job_id
+        best, best_rank = None, 99
+        for t in queue:
+            if t.job_id != job_id:
+                break
+            loc = cluster.locality_of(t.shard_id, host) \
+                if t.shard_id in cluster.shard_replicas else Locality.OFF_POD
+            rank = {Locality.HOST: 0, Locality.POD: 1,
+                    Locality.OFF_POD: 2}[loc]
+            if rank < best_rank:
+                best, best_rank = t, rank
+                if rank == 0:
+                    break
+        if best is None:
+            return None
+        if best_rank > 0 and self.max_defer > 0:
+            key = (host, best.tid)
+            n = self._defers.get(key, 0)
+            if n < self.max_defer:
+                self._defers[key] = n + 1
+                return None  # wait a heartbeat for a local host to claim it
+        queue.remove(best)
+        self._defers.pop((host, best.tid), None)
+        return best

@@ -1,0 +1,142 @@
+"""Baseline schedulers the paper compares against (§3, §6): Hadoop FIFO [1],
+Fair [19], and Capacity [20].
+
+All three keep a *global* job list (no pod-level placement — they were built
+for single-LAN clusters) and differ only in which job serves an idle slot:
+
+  * FIFO     — strict submission order.
+  * Fair     — job with the fewest currently-running tasks (equal share).
+  * Capacity — multiple queues with capacity fractions; pick the least-used
+    queue, FIFO within it.
+
+Map picks prefer host-local (node-local) replicas *within the chosen job*;
+beyond that they are BLIND to the pod boundary: Hadoop's second locality
+tier is rack-locality, and a tenant's virtual cluster exposes no rack
+topology (paper §1/§3 — stock Hadoop "might be unable to provide a high
+map-data locality" there), so every non-node-local task looks equally
+'rack-local' and the first pending one is taken. Reduce picks take the
+first ready reduce task on whatever slot frees first — no reduce
+placement, exactly the behaviour the paper measures.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.job import Job, MapTask, ReduceTask, TaskState
+from repro.core.topology import HostId, Locality, VirtualCluster
+
+# node-local first; pod == off-pod (flat-rack blindness of stock Hadoop
+# in a virtual cluster, paper §1/§3)
+_LOC_RANK = {Locality.HOST: 0, Locality.POD: 1, Locality.OFF_POD: 1}
+
+
+class GlobalScheduler:
+    """Common machinery for the three Hadoop baselines."""
+
+    name = "global"
+
+    def __init__(self, cluster: VirtualCluster):
+        self.cluster = cluster
+        self.jobs: List[Job] = []
+        self.running_tasks: Dict[int, int] = {}  # job_id -> running count
+
+    # -- scheduling (submission) ------------------------------------------------
+    def submit(self, job: Job) -> None:
+        self.jobs.append(job)
+        self.running_tasks.setdefault(job.job_id, 0)
+
+    def record_completion(self, job: Job, measured_fp: float) -> None:
+        """Baselines learn nothing from FP; kept for interface parity."""
+
+    # -- bookkeeping hooks used by the simulator ---------------------------------
+    def task_started(self, task) -> None:
+        self.running_tasks[task.job_id] = self.running_tasks.get(
+            task.job_id, 0) + 1
+
+    def task_finished(self, task) -> None:
+        self.running_tasks[task.job_id] -= 1
+
+    # -- job ordering: the only thing the three baselines disagree on ------------
+    def job_order(self) -> List[Job]:
+        raise NotImplementedError
+
+    # -- slot service -------------------------------------------------------------
+    def next_map_task(self, host: HostId) -> Optional[MapTask]:
+        for job in self.job_order():
+            pending = [t for t in job.map_tasks
+                       if t.state == TaskState.PENDING]
+            if not pending:
+                continue
+            best, best_rank = None, 99
+            for t in pending:
+                if t.shard_id in self.cluster.shard_replicas:
+                    loc = self.cluster.locality_of(t.shard_id, host)
+                else:
+                    loc = Locality.OFF_POD
+                r = _LOC_RANK[loc]
+                if r < best_rank:
+                    best, best_rank = t, r
+                    if r == 0:
+                        break
+            return best
+        return None
+
+    def next_reduce_task(self, host: HostId,
+                         ready: Callable[[ReduceTask], bool]
+                         ) -> Optional[ReduceTask]:
+        for job in self.job_order():
+            for t in job.reduce_tasks:
+                if t.state == TaskState.PENDING and ready(t):
+                    return t
+        return None
+
+
+class FifoScheduler(GlobalScheduler):
+    """Hadoop MRv1 default: strict job submission order [1]."""
+
+    name = "fifo"
+
+    def job_order(self) -> List[Job]:
+        return self.jobs
+
+
+class FairScheduler(GlobalScheduler):
+    """Facebook fair scheduler [19]: equal share over time; we order jobs by
+    fewest running tasks (deficit first), then submission order."""
+
+    name = "fair"
+
+    def job_order(self) -> List[Job]:
+        return sorted(self.jobs,
+                      key=lambda j: (self.running_tasks.get(j.job_id, 0),
+                                     j.submit_time, j.job_id))
+
+
+class CapacityScheduler(GlobalScheduler):
+    """Yahoo! capacity scheduler [20]: n_queues queues with equal capacity;
+    jobs land in queues round-robin; serve the queue with the lowest
+    used-fraction, FIFO within the queue."""
+
+    name = "capacity"
+
+    def __init__(self, cluster: VirtualCluster, n_queues: int = 3):
+        super().__init__(cluster)
+        self.n_queues = n_queues
+        self._job_queue: Dict[int, int] = {}
+        self._next_q = 0
+
+    def submit(self, job: Job) -> None:
+        super().submit(job)
+        self._job_queue[job.job_id] = self._next_q
+        self._next_q = (self._next_q + 1) % self.n_queues
+
+    def job_order(self) -> List[Job]:
+        used = {q: 0 for q in range(self.n_queues)}
+        for j in self.jobs:
+            used[self._job_queue[j.job_id]] += self.running_tasks.get(
+                j.job_id, 0)
+        q_order = sorted(range(self.n_queues), key=lambda q: (used[q], q))
+        out: List[Job] = []
+        for q in q_order:
+            out.extend(j for j in self.jobs if self._job_queue[j.job_id] == q)
+        return out

@@ -1,0 +1,95 @@
+"""JoSS facade: JoSS-T (scheduler + TTA) and JoSS-J (scheduler + JTA).
+
+Presents the same pull interface as the Hadoop baselines so the simulator,
+the data pipeline, and the launcher can drive any of the five algorithms
+interchangeably (paper §6 evaluates exactly this set).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from repro.core.assigners import JTA, TTA, BaseAssigner
+from repro.core.classifier import FpRegistry
+from repro.core.job import Job, MapTask, ReduceTask
+from repro.core.scheduler import JossScheduler
+from repro.core.topology import HostId, VirtualCluster
+
+
+class Joss:
+    """One JoSS variant = Fig. 4 scheduler + one of the Fig. 5/6 assigners."""
+
+    name = "joss"
+    assigner_cls = TTA
+
+    def __init__(self, cluster: VirtualCluster,
+                 registry: Optional[FpRegistry] = None,
+                 td: Optional[float] = None):
+        self.cluster = cluster
+        self.scheduler = JossScheduler(cluster, registry=registry, td=td)
+        self.assigner: BaseAssigner = self.assigner_cls(
+            cluster, self.scheduler.queues)
+        self.running_tasks: Dict[int, int] = {}
+
+    # -- interface shared with baselines ----------------------------------------
+    def submit(self, job: Job) -> None:
+        self.scheduler.submit(job)
+        self.running_tasks.setdefault(job.job_id, 0)
+
+    def record_completion(self, job: Job, measured_fp: float) -> None:
+        self.scheduler.record_completion(job, measured_fp)
+
+    def task_started(self, task) -> None:
+        self.running_tasks[task.job_id] = self.running_tasks.get(
+            task.job_id, 0) + 1
+
+    def task_finished(self, task) -> None:
+        self.running_tasks[task.job_id] -= 1
+        self.scheduler.gc()
+
+    def next_map_task(self, host: HostId) -> Optional[MapTask]:
+        return self.assigner.next_map_task(host)
+
+    def next_reduce_task(self, host: HostId,
+                         ready: Callable[[ReduceTask], bool]
+                         ) -> Optional[ReduceTask]:
+        return self.assigner.next_reduce_task(host, ready)
+
+    # -- introspection ------------------------------------------------------------
+    @property
+    def registry(self) -> FpRegistry:
+        return self.scheduler.registry
+
+    def plan_of(self, job: Job):
+        rec = self.scheduler.records.get(job.job_id)
+        return None if rec is None else rec.plan
+
+
+class JossT(Joss):
+    """JoSS-T: fast task assignment (TTA). Best JTT on small workloads."""
+
+    name = "joss-t"
+    assigner_cls = TTA
+
+
+class JossJ(Joss):
+    """JoSS-J: locality-maximizing assignment (JTA). Best WTT on mixed."""
+
+    name = "joss-j"
+    assigner_cls = JTA
+
+
+def make_algorithm(name: str, cluster: VirtualCluster, **kw):
+    """Factory covering the paper's five evaluated algorithms."""
+    from repro.core.baselines import (CapacityScheduler, FairScheduler,
+                                      FifoScheduler)
+    table = {
+        "joss-t": JossT,
+        "joss-j": JossJ,
+        "fifo": FifoScheduler,
+        "fair": FairScheduler,
+        "capacity": CapacityScheduler,
+    }
+    if name not in table:
+        raise ValueError(f"unknown algorithm {name!r}; "
+                         f"choose from {sorted(table)}")
+    return table[name](cluster, **kw)

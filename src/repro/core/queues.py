@@ -1,0 +1,111 @@
+"""Per-pod task queues (paper §4).
+
+Each pod c owns permanent queues MQ_{c,0} / RQ_{c,0} (small jobs only) plus
+dynamically created per-large-job queues MQ_{c,p}/RQ_{c,q} (policy C), and the
+cluster owns global MQ_FIFO / RQ_FIFO for unprofiled jobs (Fig. 4 lines 4-6).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List, Optional
+
+from repro.core.job import MapTask, ReduceTask
+
+
+class TaskQueue:
+    """FIFO deque of tasks with O(1) append/popleft and removal by id."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._q: Deque = collections.deque()
+
+    def append(self, task) -> None:
+        self._q.append(task)
+
+    def extend(self, tasks) -> None:
+        self._q.extend(tasks)
+
+    def popleft(self):
+        return self._q.popleft()
+
+    def peek(self):
+        return self._q[0] if self._q else None
+
+    def remove(self, task) -> None:
+        self._q.remove(task)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+class PodQueues:
+    """All map/reduce queues of one pod.
+
+    Index 0 is the permanent queue; indices >= 1 are per-large-job queues
+    created by policy C and garbage-collected when drained.
+    """
+
+    def __init__(self, pod: int):
+        self.pod = pod
+        self.map_queues: List[TaskQueue] = [TaskQueue(f"MQ[{pod},0]")]
+        self.reduce_queues: List[TaskQueue] = [TaskQueue(f"RQ[{pod},0]")]
+
+    # -- permanent queues ----------------------------------------------------
+    @property
+    def mq0(self) -> TaskQueue:
+        return self.map_queues[0]
+
+    @property
+    def rq0(self) -> TaskQueue:
+        return self.reduce_queues[0]
+
+    # -- policy C dynamic queues ---------------------------------------------
+    def new_map_queue(self) -> TaskQueue:
+        q = TaskQueue(f"MQ[{self.pod},{len(self.map_queues)}]")
+        self.map_queues.append(q)
+        return q
+
+    def new_reduce_queue(self) -> TaskQueue:
+        q = TaskQueue(f"RQ[{self.pod},{len(self.reduce_queues)}]")
+        self.reduce_queues.append(q)
+        return q
+
+    def gc(self) -> None:
+        """Drop drained dynamic queues (keep index 0 forever)."""
+        self.map_queues = [self.map_queues[0]] + [
+            q for q in self.map_queues[1:] if q]
+        self.reduce_queues = [self.reduce_queues[0]] + [
+            q for q in self.reduce_queues[1:] if q]
+
+    # -- load ----------------------------------------------------------------
+    def unprocessed(self) -> int:
+        """Amount of unprocessed tasks queued at this pod (policy A input)."""
+        return (sum(len(q) for q in self.map_queues)
+                + sum(len(q) for q in self.reduce_queues))
+
+
+class ClusterQueues:
+    """Queue state for the whole cluster: per-pod queues + global FIFO."""
+
+    def __init__(self, k: int):
+        self.pods: Dict[int, PodQueues] = {c: PodQueues(c) for c in range(k)}
+        self.mq_fifo = TaskQueue("MQ_FIFO")
+        self.rq_fifo = TaskQueue("RQ_FIFO")
+
+    def least_loaded_pod(self) -> int:
+        """cen_w: least unprocessed tasks (Fig. 4 line 9); ties -> lowest id."""
+        return min(self.pods, key=lambda c: (self.pods[c].unprocessed(), c))
+
+    def total_pending(self) -> int:
+        return (len(self.mq_fifo) + len(self.rq_fifo)
+                + sum(p.unprocessed() for p in self.pods.values()))
+
+    def gc(self) -> None:
+        for p in self.pods.values():
+            p.gc()

@@ -1,0 +1,153 @@
+"""Virtual-cluster topology, from the tenant's perspective (paper §1, §4).
+
+The paper's tenant sees only (VPS, datacenter). The TPU adaptation sees only
+(host/chip, pod): physical rack/switch layout inside a pod is opaque, exactly
+as physical machines are opaque to the paper's tenant. Locality levels map as
+
+    VPS-locality  -> host-local shard (no network)
+    Cen-locality  -> intra-pod ICI
+    off-Cen       -> inter-pod DCN
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+
+class Locality(enum.Enum):
+    """Data-locality levels visible to a tenant (paper §1)."""
+
+    HOST = "host"        # paper: VPS-locality
+    POD = "pod"          # paper: Cen-locality
+    OFF_POD = "off_pod"  # paper: off-Cen
+
+    @property
+    def paper_name(self) -> str:
+        return {"host": "VPS-locality", "pod": "Cen-locality",
+                "off_pod": "off-Cen"}[self.value]
+
+
+@dataclasses.dataclass(frozen=True)
+class HostId:
+    """Identifies one executor (paper: VPS_{c,l})."""
+
+    pod: int    # datacenter index c
+    index: int  # VPS index l within the datacenter
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"host[{self.pod},{self.index}]"
+
+
+@dataclasses.dataclass
+class Host:
+    """One VPS: bounded concurrent map/reduce slots (paper §4 assumes 1+1)."""
+
+    hid: HostId
+    map_slots: int = 1
+    reduce_slots: int = 1
+    # shard ids whose replica lives on this host's local disk
+    local_shards: set = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class Pod:
+    """One datacenter cen_c of the virtual cluster."""
+
+    index: int
+    hosts: List[Host]
+
+    @property
+    def n_hosts(self) -> int:
+        return len(self.hosts)
+
+
+class VirtualCluster:
+    """A virtual MapReduce cluster of k pods (paper: k datacenters, k > 1).
+
+    Also models shard (block) placement: each shard has replicas on specific
+    hosts, mirroring HDFS block replicas (paper §2).
+    """
+
+    def __init__(self, hosts_per_pod: Sequence[int], *, map_slots: int = 1,
+                 reduce_slots: int = 1):
+        if len(hosts_per_pod) < 1:
+            raise ValueError("need at least one pod")
+        self.pods: List[Pod] = []
+        for c, n in enumerate(hosts_per_pod):
+            if n < 1:
+                raise ValueError(f"pod {c} must have >= 1 host")
+            hosts = [Host(HostId(c, l), map_slots, reduce_slots)
+                     for l in range(n)]
+            self.pods.append(Pod(c, hosts))
+        # shard id -> list of HostId replicas
+        self.shard_replicas: Dict[object, List[HostId]] = {}
+
+    # -- basic shape ---------------------------------------------------------
+    @property
+    def k(self) -> int:
+        """Number of pods (paper: k datacenters)."""
+        return len(self.pods)
+
+    @property
+    def n_hosts(self) -> int:
+        return sum(p.n_hosts for p in self.pods)
+
+    @property
+    def n_avg_hosts(self) -> float:
+        """N_avg_VPS = (sum_c N_VPS,c) / k (paper §4.1)."""
+        return self.n_hosts / self.k
+
+    def hosts(self) -> Iterator[Host]:
+        for p in self.pods:
+            yield from p.hosts
+
+    def host(self, hid: HostId) -> Host:
+        return self.pods[hid.pod].hosts[hid.index]
+
+    # -- shard placement -----------------------------------------------------
+    def place_shard(self, shard_id, replicas: Sequence[HostId]) -> None:
+        """Register a shard's replica locations (HDFS block placement)."""
+        if not replicas:
+            raise ValueError("a shard needs at least one replica")
+        self.shard_replicas[shard_id] = list(replicas)
+        for hid in replicas:
+            self.host(hid).local_shards.add(shard_id)
+
+    def replica_pods(self, shard_id) -> List[int]:
+        """Pods holding at least one replica of shard_id."""
+        return sorted({hid.pod for hid in self.shard_replicas[shard_id]})
+
+    def pods_holding(self, shard_ids: Sequence) -> Dict[int, set]:
+        """pod -> set of unique shards (paper: L_c, Fig. 4 line 14)."""
+        out: Dict[int, set] = {p.index: set() for p in self.pods}
+        for s in shard_ids:
+            for c in self.replica_pods(s):
+                out[c].add(s)
+        return out
+
+    # -- locality judgement --------------------------------------------------
+    def locality_of(self, shard_id, hid: HostId) -> Locality:
+        """Locality level of reading `shard_id` from host `hid` (paper §1)."""
+        replicas = self.shard_replicas[shard_id]
+        if any(r == hid for r in replicas):
+            return Locality.HOST
+        if any(r.pod == hid.pod for r in replicas):
+            return Locality.POD
+        return Locality.OFF_POD
+
+    def nearest_replica(self, shard_id, hid: HostId) -> Tuple[HostId, Locality]:
+        """Closest replica of shard_id as seen from host hid."""
+        best = None
+        best_loc = None
+        order = {Locality.HOST: 0, Locality.POD: 1, Locality.OFF_POD: 2}
+        for r in self.shard_replicas[shard_id]:
+            if r == hid:
+                loc = Locality.HOST
+            elif r.pod == hid.pod:
+                loc = Locality.POD
+            else:
+                loc = Locality.OFF_POD
+            if best is None or order[loc] < order[best_loc]:
+                best, best_loc = r, loc
+        return best, best_loc

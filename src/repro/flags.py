@@ -1,0 +1,19 @@
+"""Feature flags for perf A/B experiments (EXPERIMENTS.md §Perf).
+
+Env vars let the dry-run re-measure the pre-optimization baseline under
+the same analyzer without reverting code:
+
+  REPRO_MOE_DENSE=1   use the sort-based dense MoE dispatch instead of
+                      the expert-parallel shard_map all_to_all
+  REPRO_NO_BANDED=1   use masked-dense sliding-window attention instead
+                      of the banded O(S*window) path
+"""
+import os
+
+
+def moe_dense() -> bool:
+    return os.environ.get("REPRO_MOE_DENSE", "") == "1"
+
+
+def no_banded_attention() -> bool:
+    return os.environ.get("REPRO_NO_BANDED", "") == "1"

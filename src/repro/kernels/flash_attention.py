@@ -1,0 +1,127 @@
+"""Flash attention forward as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): instead of the CUDA warp-level algorithm,
+blocks are sized for VMEM and the MXU — q tiles of (block_q, head_dim) and
+kv tiles of (block_k, head_dim) stream HBM->VMEM; the online-softmax
+accumulator lives in VMEM scratch across the kv-block loop (the innermost
+grid dim), so each q tile is written back to HBM exactly once.
+
+Grid: (batch*heads, Sq/block_q, Sk/block_k); dims 0-1 parallel, dim 2 the
+sequential kv scan. Causal masking by absolute positions, so the same
+kernel serves prefill (qpos = arange) and windowed attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,   # inputs
+                 o_ref,                                      # output
+                 m_scr, l_scr, acc_scr,                      # VMEM scratch
+                 *, scale: float, causal: bool, window: int,
+                 block_k: int):
+    kv_idx = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                       # (block_q, d)
+    k = k_ref[0]                       # (block_k, d)
+    v = v_ref[0]
+    qp = qpos_ref[...]                 # (block_q,)
+    kp = kpos_ref[...]                 # (block_k,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (block_q, block_k)
+
+    ok = kp[None, :] >= 0
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        ok &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(ok, p, 0.0)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    qpos: Optional[jax.Array] = None,
+                    kpos: Optional[jax.Array] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, H, Sk, D)  ->  (B, H, Sq, D).
+
+    GQA callers broadcast k/v heads before the call (zero-copy reshape).
+    qpos/kpos default to arange; kpos == -1 marks invalid slots.
+    """
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    qpos = jnp.arange(Sq, dtype=jnp.int32) if qpos is None else qpos
+    kpos = jnp.arange(Sk, dtype=jnp.int32) if kpos is None else kpos
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        raise ValueError(f"Sq={Sq}/Sk={Sk} must tile by "
+                         f"({block_q},{block_k})")
+    scale = 1.0 / math.sqrt(D)
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+    grid = (B * H, Sq // block_q, Sk // block_k)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                               window=window, block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda b, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda b, i, j: (j,)),
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

@@ -1,0 +1,137 @@
+"""Chunked gated-linear-attention recurrence as a Pallas TPU kernel.
+
+The compute core of RWKV6 time-mix and hymba's SSM heads (see
+models/recurrence.py for the math). One grid cell = one (batch, head)
+pair; the kernel scans the sequence in chunks of ``chunk`` steps, keeping
+the (K, V) matrix state plus all per-chunk tiles in VMEM:
+
+  state        K x V            f32
+  r/k/v/w tile chunk x K|V      f32
+  pair decays  chunk x chunk    f32 (after the K-contraction)
+
+With chunk=64, K=V=64 the working set is ~200 KB — far under the ~16 MB
+VMEM budget, leaving headroom for double buffering. The sequential grid
+dim is the chunk index (TPU grids execute minor-most dim sequentially),
+so the state carries across grid steps in VMEM scratch without HBM
+round-trips — the TPU-idiomatic replacement for the CUDA warp-recurrence
+in the RWKV6 reference implementation (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel(r_ref, k_ref, v_ref, w_ref, u_ref,    # inputs
+                y_ref, s_out_ref,                     # outputs
+                state,                                # VMEM scratch
+                *, chunk: int, use_u: bool):
+    c_idx = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    rb = r_ref[0].astype(jnp.float32)          # (c, K)
+    kb = k_ref[0].astype(jnp.float32)
+    vb = v_ref[0].astype(jnp.float32)          # (c, V)
+    wb = w_ref[0].astype(jnp.float32)          # (c, K) log decays <= 0
+
+    cw = jnp.cumsum(wb, axis=0)                # inclusive cumulative logw
+    cw_prev = cw - wb
+    S = state[...]                             # (K, V)
+
+    # inter-chunk: y_t += (r_t * exp(cw_{t-1})) @ S
+    y = jax.lax.dot_general(rb * jnp.exp(cw_prev), S,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # intra-chunk pairwise decays: A[t,j] = sum_k r_t k_j e^{cw_{t-1}-cw_j}
+    c = rb.shape[0]
+    # (c, c, K) exponent tile; chunk is small so this fits VMEM
+    diff = cw_prev[:, None, :] - cw[None, :, :]
+    pair = jnp.exp(jnp.minimum(diff, 0.0))
+    A = jnp.einsum("ck,cjk,jk->cj", rb, pair, kb,
+                   preferred_element_type=jnp.float32)
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+    y += jax.lax.dot_general(A * tri, vb, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    # diagonal term (u bonus for RWKV6; plain r.k for SSM form)
+    if use_u:
+        du = jnp.sum(rb * u_ref[...] * kb, axis=-1)
+    else:
+        du = jnp.sum(rb * kb, axis=-1)
+    y += du[:, None] * vb
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S' = diag(e^{total}) S + sum_j (k_j e^{cw_c - cw_j}) v_j
+    w_all = cw[-1:, :]                         # (1, K)
+    k_scaled = kb * jnp.exp(w_all - cw)
+    state[...] = (S * jnp.exp(w_all[0])[:, None]
+                  + jax.lax.dot_general(k_scaled, vb,
+                                        (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _emit_state():
+        s_out_ref[0] = state[...]
+
+
+def gla_pallas(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+               u: Optional[jax.Array] = None, *, chunk: int = 64,
+               interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """r/k/logw: (B, T, H, K); v: (B, T, H, V); u: (H, K) or None.
+
+    Returns (y (B, T, H, V), final state (B, H, K, V)). Equivalent to
+    models.recurrence.gla_chunked (the jnp oracle is gla_ref).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    if T % chunk:
+        raise ValueError(f"T={T} must divide by chunk={chunk}")
+    n_chunks = T // chunk
+
+    # (B*H, T, K/V) layout: head-major so one grid cell owns one sequence
+    def to_bh(x, d):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, d)
+
+    rf, kf, wf = to_bh(r, K), to_bh(k, K), to_bh(logw, K)
+    vf = to_bh(v, V)
+    if u is None:
+        uf = jnp.zeros((H, K), jnp.float32)
+        use_u = False
+    else:
+        uf = u.astype(jnp.float32)
+        use_u = True
+    uf_bh = jnp.tile(uf, (B, 1))               # (B*H, K)
+
+    kernel = functools.partial(_gla_kernel, chunk=chunk, use_u=use_u)
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K, V), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, T, V), v.dtype),
+            jax.ShapeDtypeStruct((B * H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf_bh)
+    y = y.reshape(B, H, T, V).transpose(0, 2, 1, 3)
+    return y, s_fin.reshape(B, H, K, V)

@@ -1,0 +1,49 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+so the same call sites work in tests and production.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gla_scan import gla_pallas as _gla
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    qpos=None, kpos=None, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Flash attention. q/k/v: (B, S, H|G, D) model layout (GQA broadcast
+    handled here); returns (B, S, H, D)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    if G != H:  # GQA: broadcast kv heads to q heads
+        rep = H // G
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    out = _flash(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                 v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                 qpos=qpos, kpos=kpos, block_q=block_q, block_k=block_k,
+                 interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gla(r, k, v, logw, u=None, *, chunk: int = 64,
+        interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked GLA recurrence (RWKV6 / SSM heads)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gla(r, k, v, logw, u, chunk=chunk, interpret=interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.recurrence import gla_ref  # noqa: F401 (re-export)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0,
+                        qpos=None, kpos=None):
+    """(B,H,S,D)-layout wrapper around models.common.attention_ref."""
+    out = cm.attention_ref(q.transpose(0, 2, 1, 3),
+                           k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3),
+                           causal=causal, window=window,
+                           qpos=qpos, kpos=kpos)
+    return out.transpose(0, 2, 1, 3)
+
+
+def segment_sum_ref(keys: jax.Array, values: jax.Array, n_out: int):
+    """Sorted-key segment sum (mapreduce reduce oracle)."""
+    uniq, inv = jnp.unique(keys, return_inverse=True, size=n_out,
+                           fill_value=jnp.iinfo(keys.dtype).max)
+    out = jax.ops.segment_sum(values, inv, num_segments=n_out)
+    return uniq, out

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh with 512 placeholder devices, print memory/cost
+analysis, and emit the roofline terms (EXPERIMENTS.md §Dry-run/§Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+Exit code != 0 iff any requested cell fails to compile.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.hlo_analysis import (ICI_BW, Roofline, analyze_hlo,
+                                       roofline_from_hlo)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.common import shape_tree
+from repro.sharding import (DEFAULT_RULES, Rules, tree_shardings, use_rules)
+from repro.train import (OptConfig, TrainConfig, make_prefill_step,
+                         make_serve_step, make_train_step, opt_state_axes)
+
+
+def arch_rules(cfg, *, overrides: Optional[Dict[str, Any]] = None) -> Rules:
+    rules = DEFAULT_RULES
+    if cfg.fsdp:
+        # ZeRO-3-style weight sharding over 'data'; expert weights are
+        # gathered per layer by pjit before the EP shard_map (classic FSDP)
+        rules = rules.updated(embed="data", expert_in="data")
+    if overrides:
+        rules = rules.updated(**overrides)
+    return rules
+
+
+def _axes_is_leaf(x):
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, (str, tuple)) for a in x)
+
+
+def opt_shapes(param_shapes, state_dtype: str = "float32"
+               ) -> Dict[str, Any]:
+    dt = jnp.dtype(state_dtype)
+    mv = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt), param_shapes)
+    return {"m": mv,
+            "v": jax.tree_util.tree_map(lambda s: s, mv),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               rule_overrides: Optional[Dict[str, Any]] = None,
+               n_micro: Optional[int] = None,
+               opt_dtype: str = "float32",
+               donate: bool = True):
+    """Build + lower + compile one (arch, shape) cell. Returns result dict."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    if not cfg.supports(shape):
+        return {"arch": arch, "shape": shape, "status": "SKIP",
+                "reason": cfg.skip_reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rules = arch_rules(cfg, overrides=rule_overrides)
+    model = build_model(cfg)
+    specs = model.param_specs()
+    from repro.models.common import axes_tree, count_params
+    p_axes = axes_tree(specs)
+    p_shapes = shape_tree(specs)
+    param_shardings = tree_shardings(mesh, rules, p_axes, p_shapes)
+
+    t0 = time.time()
+    with use_rules(mesh, rules):
+        if cell.kind == "train":
+            micro = n_micro if n_micro is not None else (
+                4 if cell.name == "train_4k" else 1)
+            tcfg = TrainConfig(n_micro=micro,
+                               opt=OptConfig(state_dtype=opt_dtype))
+            step = make_train_step(model, tcfg)
+            o_axes = opt_state_axes(specs, mesh, rules, zero1=True)
+            oshapes = opt_shapes(p_shapes, opt_dtype)
+            opt_shardings = tree_shardings(mesh, rules, o_axes, oshapes)
+            batch = model.input_specs(cell)
+            b_axes = model.input_axes(cell)
+            batch_shardings = tree_shardings(mesh, rules, b_axes, batch)
+            fn = jax.jit(
+                step,
+                in_shardings=(param_shardings, opt_shardings,
+                              batch_shardings),
+                out_shardings=(param_shardings, opt_shardings, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = fn.lower(p_shapes, oshapes, batch)
+        elif cell.kind == "prefill":
+            step = make_prefill_step(model)
+            batch = model.input_specs(cell)
+            b_axes = model.input_axes(cell)
+            batch_shardings = tree_shardings(mesh, rules, b_axes, batch)
+            cache_shardings = tree_shardings(mesh, rules,
+                                             model.cache_axes(),
+                                             model.cache_specs(
+                                                 cell.global_batch,
+                                                 model.cache_len(cell)))
+            fn = jax.jit(step,
+                         in_shardings=(param_shardings, batch_shardings),
+                         out_shardings=(None, cache_shardings))
+            lowered = fn.lower(p_shapes, batch)
+        else:  # decode
+            step = make_serve_step(model)
+            inputs = model.input_specs(cell)
+            in_axes = model.input_axes(cell)
+            tok_sh = tree_shardings(mesh, rules, {"tokens":
+                                                  in_axes["tokens"]},
+                                    {"tokens": inputs["tokens"]})["tokens"]
+            cache_sh = tree_shardings(mesh, rules, model.cache_axes(),
+                                      inputs["cache"])
+            fn = jax.jit(step,
+                         in_shardings=(param_shardings, cache_sh, tok_sh,
+                                       None),
+                         out_shardings=(None, None, cache_sh),
+                         donate_argnums=(1,) if donate else ())
+            lowered = fn.lower(p_shapes, inputs["cache"], inputs["tokens"],
+                               inputs["pos"])
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    model_flops = model.model_flops(cell)
+    rl = roofline_from_hlo(hlo, n_dev, model_flops)
+
+    n_params = count_params(specs)
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    result = {
+        "arch": arch, "shape": shape, "status": "OK",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": n_dev,
+        "compile_s": round(compile_s, 1),
+        "n_params": n_params,
+        "n_active_params": model.n_active_params(),
+        "model_flops_global": model_flops,
+        "hlo_flops_per_dev": rl.totals.flops,
+        "hlo_mem_bytes_per_dev": rl.totals.mem_bytes,
+        "collective_bytes_per_dev": rl.totals.collective_bytes,
+        "per_collective": {k: round(v) for k, v
+                           in rl.totals.per_collective.items()},
+        "n_collectives": rl.totals.n_collectives,
+        "compute_s": rl.compute_s,
+        "memory_s": rl.memory_s,
+        "collective_s": rl.collective_s,
+        "dominant": rl.dominant,
+        "useful_flop_fraction": rl.useful_flop_fraction,
+        "roofline_fraction": rl.roofline_fraction,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "per_device_total": per_dev_bytes,
+        },
+        "xla_flops_once": cost.get("flops", -1.0) if cost else -1.0,
+    }
+    return result
+
+
+def fmt_row(r: Dict[str, Any]) -> str:
+    if r["status"] != "OK":
+        return (f"{r['arch']:16s} {r['shape']:12s} {r['status']}: "
+                f"{r.get('reason', r.get('error', ''))[:80]}")
+    return (f"{r['arch']:16s} {r['shape']:12s} mesh={r['mesh']:9s} "
+            f"compute={r['compute_s']*1e3:8.2f}ms "
+            f"memory={r['memory_s']*1e3:8.2f}ms "
+            f"coll={r['collective_s']*1e3:8.2f}ms "
+            f"dom={r['dominant']:10s} "
+            f"useful={r['useful_flop_fraction']:.2f} "
+            f"roofline={r['roofline_fraction']:.2f} "
+            f"mem/dev={r['memory']['per_device_total']/2**30:.2f}GiB "
+            f"[{r['compile_s']:.0f}s]")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--opt-dtype", default="float32",
+                    choices=("float32", "bfloat16"))
+    ap.add_argument("--json", default=None, help="append results to file")
+    ap.add_argument("--rules", default=None,
+                    help="JSON dict of logical-rule overrides")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        archs = [args.arch] if args.arch else sorted(ARCHS)
+        shapes = [args.shape] if args.shape else sorted(SHAPES)
+        cells = [(a, s) for a in archs for s in shapes]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    overrides = json.loads(args.rules) if args.rules else None
+
+    results = []
+    failed = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                r = lower_cell(arch, shape, multi_pod=mp,
+                               rule_overrides=overrides,
+                               n_micro=args.n_micro,
+                               opt_dtype=args.opt_dtype)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failed += 1
+                r = {"arch": arch, "shape": shape, "status": "FAIL",
+                     "mesh": "2x16x16" if mp else "16x16",
+                     "error": f"{type(e).__name__}: {e}",
+                     "traceback": traceback.format_exc()[-2000:]}
+            results.append(r)
+            print(fmt_row(r), flush=True)
+
+    if args.json:
+        existing = []
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                existing = json.load(f)
+        with open(args.json, "w") as f:
+            json.dump(existing + results, f, indent=1)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

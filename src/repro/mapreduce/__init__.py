@@ -1,0 +1,15 @@
+"""JAX MapReduce data plane.
+
+The paper's jobs (WordCount, SequenceCount, InvertedIndex, Grep, Permu) as
+pure-JAX map/combine/shuffle/reduce over sharded token arrays. The shuffle is
+`jax.lax.all_to_all` inside `shard_map`; the reduce is a sort + segment-sum
+(with a Pallas kernel available for the hot segment-reduce). JoSS's reduce
+placement (policies A/B) becomes the choice of which mesh axes the shuffle
+crosses and where the reduced output is sharded.
+"""
+from repro.mapreduce.jobs import JOBS, MapReduceSpec, corpus
+from repro.mapreduce.engine import (local_mapreduce, mesh_mapreduce,
+                                    measure_fp)
+
+__all__ = ["JOBS", "MapReduceSpec", "corpus", "local_mapreduce",
+           "mesh_mapreduce", "measure_fp"]

@@ -1,0 +1,10 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+Everything is parameterized by `repro.configs.base.ArchConfig`; parameters
+are plain pytrees (dicts of arrays) with logical sharding axes attached via
+`repro.models.common.ParamSpec`, so the same definitions drive CPU smoke
+tests, the 512-device dry-run, and TPU execution.
+"""
+from repro.models.registry import build_model, Model
+
+__all__ = ["build_model", "Model"]

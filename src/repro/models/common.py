@@ -1,0 +1,272 @@
+"""Shared model machinery: param specs with logical axes, norms, RoPE, and
+attention implementations (reference + chunked online-softmax).
+
+Logical axes used across the zoo (mapped to mesh axes by repro.sharding):
+
+  batch   - global batch                    -> ('pod', 'data')
+  seq     - sequence (activations only)     -> 'model' (sequence parallelism)
+  embed   - d_model                         -> 'data' under FSDP else None
+  qkv     - flattened heads*head_dim        -> 'model'
+  heads   - attention heads (activations)   -> 'model' when divisible
+  mlp     - feed-forward hidden             -> 'model'
+  vocab   - vocabulary                      -> 'model'
+  experts - MoE expert dim                  -> 'model'
+  layers  - stacked-layer leading dim       -> None (scan carrier)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declares one parameter: shape, dtype, init style, logical axes."""
+
+    shape: Tuple[int, ...]
+    dtype: Any
+    init: str              # 'normal', 'zeros', 'ones', 'embed', 'scaled'
+    axes: Tuple[Optional[str], ...]
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = Dict[str, Any]   # nested dict of ParamSpec / arrays
+
+
+def init_param(rng: jax.Array, spec: ParamSpec) -> jax.Array:
+    """Materialize one parameter (smoke tests / real training)."""
+    shape, dtype = spec.shape, spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "embed":
+        # 1/sqrt(d) keeps tied-embedding logits O(1) at init
+        std = spec.init_scale / math.sqrt(shape[-1])
+    elif spec.init == "scaled":       # fan-in scaled
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = spec.init_scale / math.sqrt(fan_in)
+    else:                              # 'normal'
+        std = 0.02 * spec.init_scale
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(rng: jax.Array, specs: ParamTree) -> ParamTree:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    rngs = jax.random.split(rng, len(leaves))
+    vals = [init_param(r, s) for r, s in zip(rngs, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def shape_tree(specs: ParamTree) -> ParamTree:
+    """ShapeDtypeStruct stand-ins (dry-run: no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def axes_tree(specs: ParamTree) -> ParamTree:
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def count_params(specs: ParamTree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+# ------------------------------------------------------------------- norms --
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention --
+def _mask_bias(qpos, kpos, causal: bool, window: int) -> jax.Array:
+    """Additive mask bias (0 or -inf) for explicit position grids.
+
+    kpos < 0 marks invalid (unwritten cache) slots.
+    """
+    ok = kpos[None, :] >= 0
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0,
+                  qpos: Optional[jax.Array] = None,
+                  kpos: Optional[jax.Array] = None) -> jax.Array:
+    """Reference attention. q: (B,Sq,H,D); k,v: (B,Sk,G,D) with H % G == 0.
+
+    qpos/kpos are absolute token positions (default arange); kpos == -1
+    marks invalid cache slots (masked out).
+    """
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    qpos = jnp.arange(Sq) if qpos is None else qpos
+    kpos = jnp.arange(k.shape[1]) if kpos is None else kpos
+    q = q.reshape(B, Sq, G, H // G, D)
+    scores = jnp.einsum("bsgqd,btgd->bgqst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(D)
+    scores = scores + _mask_bias(qpos, kpos, causal, window)
+    # rows with no valid key (fully masked) must not produce nan
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.where(jnp.isfinite(scores),
+                  jnp.exp(scores - jnp.where(jnp.isfinite(m), m, 0.0)), 0.0)
+    probs = e / jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bgqst,btgd->bsgqd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=0,
+                      qpos: Optional[jax.Array] = None,
+                      kpos: Optional[jax.Array] = None,
+                      block_k: int = 512) -> jax.Array:
+    """Online-softmax attention, scanning KV in blocks: O(Sq * block_k)
+    live memory. Matches attention_ref to float tolerance. This is the
+    dry-run / CPU / long-sequence path; the Pallas kernel is the TPU path.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    G = k.shape[2]
+    qpos = jnp.arange(Sq) if qpos is None else qpos
+    kpos = jnp.arange(Sk) if kpos is None else kpos
+    if Sk % block_k:
+        pad = block_k - Sk % block_k
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    Skp = k.shape[1]
+    n_blocks = Skp // block_k
+    qg = q.reshape(B, Sq, G, H // G, D)
+    scale = 1.0 / math.sqrt(D)
+
+    kb = k.reshape(B, n_blocks, block_k, G, D).swapaxes(0, 1)
+    vb = v.reshape(B, n_blocks, block_k, G, D).swapaxes(0, 1)
+    pb = kpos.reshape(n_blocks, block_k)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, kp = blk
+        s = jnp.einsum("bsgqd,btgd->bgqst", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + _mask_bias(qpos, kp, causal, window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # renormalize previous accumulator (guard -inf - -inf = nan)
+        alpha = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_new))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bgqst,btgd->bgqsd", p.astype(v.dtype), vblk)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, G, H // G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, G, H // G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, G, H // G, Sq, D), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    # (B,G,Hg,Sq,D) -> (B,Sq,H,D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+ATTN_IMPLS: Dict[str, Callable] = {
+    "ref": attention_ref,
+    "chunked": attention_chunked,
+}
+
+
+def make_attention(impl: str, **defaults) -> Callable:
+    if impl == "pallas":
+        from repro.kernels import ops as kops  # late import (optional path)
+        return partial(kops.flash_attention, **defaults)
+    fn = ATTN_IMPLS[impl]
+    return partial(fn, **defaults) if defaults else fn
+
+
+def attention_banded(q, k, v, *, window: int,
+                     qpos: Optional[jax.Array] = None,
+                     kpos: Optional[jax.Array] = None) -> jax.Array:
+    """Sliding-window attention in banded-block form: O(S*window) instead
+    of the O(S^2) masked dense path. q: (B,S,H,D); k,v: (B,S,G,D);
+    requires S % window == 0 and aligned q/k positions (self-attention).
+
+    Each q block of `window` rows attends its own block plus the previous
+    one (2*window keys) — exactly the reachable set under a causal
+    window-`window` mask.
+    """
+    B, S, H, D = q.shape
+    G = k.shape[2]
+    w = window
+    if S % w:
+        raise ValueError(f"S={S} must divide by window={w}")
+    nb = S // w
+    qpos = jnp.arange(S, dtype=jnp.int32) if qpos is None else qpos
+    kpos = jnp.arange(S, dtype=jnp.int32) if kpos is None else kpos
+
+    qb = q.reshape(B, nb, w, H, D).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(B, nb, w, G, D)
+    vb = v.reshape(B, nb, w, G, D)
+    zero_kv = jnp.zeros_like(kb[:, :1])
+    kprev = jnp.concatenate([zero_kv, kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([zero_kv, vb[:, :-1]], axis=1)
+    kcat = jnp.concatenate([kprev, kb], axis=2).transpose(1, 0, 2, 3, 4)
+    vcat = jnp.concatenate([vprev, vb], axis=2).transpose(1, 0, 2, 3, 4)
+    qp = qpos.reshape(nb, w)
+    kp = kpos.reshape(nb, w)
+    kp_prev = jnp.concatenate([jnp.full((1, w), -1, kp.dtype),
+                               kp[:-1]], axis=0)
+    kp_cat = jnp.concatenate([kp_prev, kp], axis=1)      # (nb, 2w)
+
+    def block(xs):
+        qi, ki, vi, qpi, kpi = xs
+        return attention_ref(qi, ki, vi, causal=True, window=w,
+                             qpos=qpi, kpos=kpi)
+
+    out = jax.lax.map(block, (qb, kcat, vcat, qp, kp_cat))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)

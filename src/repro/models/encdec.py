@@ -1,0 +1,284 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356). The conv/audio
+frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed log-mel frame embeddings (B, S, frontend_dim); a linear
+projection + pair-average stride-2 downsample stands in for the two convs.
+Encoder is bidirectional; decoder is causal with cross-attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+from repro.models.transformer import (TransformerLM, _final_norm_spec,
+                                      _norm_spec, apply_norm,
+                                      attention_specs, attn_out,
+                                      decode_attention_raw, mlp, mlp_specs,
+                                      project_qkv, softmax_xent)
+from repro.sharding import hint
+
+
+@dataclasses.dataclass
+class EncDecCache:
+    """Decoder self-attn cache + precomputed cross-attn K/V."""
+
+    k: jax.Array        # (L, B, S_max, G, hd) decoder self-attn
+    v: jax.Array
+    kpos: jax.Array     # (S_max,)
+    xk: jax.Array       # (L, B, S_enc, G, hd) cross-attn keys (static)
+    xv: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    EncDecCache,
+    lambda c: ((c.k, c.v, c.kpos, c.xk, c.xv), None),
+    lambda _, xs: EncDecCache(*xs))
+
+
+def _sinusoid(S: int, d: int) -> np.ndarray:
+    pos = np.arange(S)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10_000.0, dim / d)
+    out = np.zeros((S, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+class EncDecLM(TransformerLM):
+    """Whisper-medium shaped enc-dec; n_layers = decoder depth."""
+
+    # ------------------------------------------------------------- params --
+    def encoder_layer_specs(self) -> Dict[str, Any]:
+        cfg, L = self.cfg, self.cfg.encoder_layers
+        return {"ln1": _norm_spec(cfg, L),
+                "attn": attention_specs(cfg, L),
+                "ln2": _norm_spec(cfg, L),
+                "mlp": mlp_specs(cfg, L)}
+
+    def layer_specs(self) -> Dict[str, Any]:
+        cfg, L = self.cfg, self.cfg.n_layers
+        return {"ln1": _norm_spec(cfg, L),
+                "attn": attention_specs(cfg, L),
+                "ln_x": _norm_spec(cfg, L),
+                "xattn": attention_specs(cfg, L, cross=True),
+                "ln2": _norm_spec(cfg, L),
+                "mlp": mlp_specs(cfg, L)}
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs = super().param_specs()
+        specs["frontend"] = {
+            "proj": ParamSpec((cfg.frontend_dim, cfg.d_model), cfg.jdtype,
+                              "scaled", ("frontend", "embed")),
+        }
+        specs["encoder"] = self.encoder_layer_specs()
+        specs["enc_norm"] = _final_norm_spec(cfg)
+        return specs
+
+    # ------------------------------------------------------------ encoder --
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: (B, S, frontend_dim) -> (B, S//2, d) encoder states."""
+        cfg = self.cfg
+        B, S, F = frames.shape
+        x = jnp.einsum("bsf,fd->bsd", frames, params["frontend"]["proj"])
+        # stride-2 "conv" stub: average adjacent frames
+        x = 0.5 * (x[:, 0::2] + x[:, 1::2])
+        Se = x.shape[1]
+        x = x + jnp.asarray(_sinusoid(Se, cfg.d_model), x.dtype)
+        x = hint(x, ("batch", "seq", "embed"))
+        positions = jnp.arange(Se)
+
+        def body(p, h):
+            xa = apply_norm(cfg, p["ln1"], h)
+            q, k, v = project_qkv(cfg, p["attn"], xa, positions, rope=False)
+            o = cm.attention_chunked(q, k, v, causal=False,
+                                     qpos=positions, kpos=positions)
+            h = h + attn_out(p["attn"], o)
+            h = h + mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], h))
+            return hint(h, ("batch", "seq", "embed"))
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def step(carry, p):
+            return body(p, carry), None
+
+        x, _ = jax.lax.scan(step, x, params["encoder"])
+        return apply_norm(cfg, params["enc_norm"], x)
+
+    # ------------------------------------------------------------ decoder --
+    def _cross_kv(self, p, enc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        B, Se, _ = enc.shape
+        G, hd = cfg.n_kv_heads, cfg.hdim
+        k = jnp.einsum("bsd,dk->bsk", enc, p["wk"]).reshape(B, Se, G, hd)
+        v = jnp.einsum("bsd,dk->bsk", enc, p["wv"]).reshape(B, Se, G, hd)
+        return k, v
+
+    def _cross_attend(self, p, x: jax.Array, xk: jax.Array, xv: jax.Array
+                      ) -> jax.Array:
+        cfg = self.cfg
+        B, S, _ = x.shape
+        H, hd = cfg.n_heads, cfg.hdim
+        q = jnp.einsum("bsd,dk->bsk", x, p["wq"]).reshape(B, S, H, hd)
+        o = cm.attention_chunked(q, xk, xv, causal=False,
+                                 qpos=jnp.zeros((S,), jnp.int32),
+                                 kpos=jnp.zeros((xk.shape[1],), jnp.int32))
+        return attn_out(p, o)
+
+    def decoder_forward(self, params, tokens: jax.Array, enc: jax.Array
+                        ) -> jax.Array:
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        x = self.embed_tokens(params, tokens)
+        x = x + jnp.asarray(_sinusoid(S, cfg.d_model), x.dtype)
+
+        def body(p, h):
+            xa = apply_norm(cfg, p["ln1"], h)
+            q, k, v = project_qkv(cfg, p["attn"], xa, positions, rope=False)
+            o = cm.attention_chunked(q, k, v, causal=True,
+                                     qpos=positions, kpos=positions)
+            h = h + attn_out(p["attn"], o)
+            xk, xv = self._cross_kv(p["xattn"], enc)
+            h = h + self._cross_attend(p["xattn"],
+                                       apply_norm(cfg, p["ln_x"], h), xk, xv)
+            h = h + mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], h))
+            return hint(h, ("batch", "seq", "embed"))
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def step(carry, p):
+            return body(p, carry), None
+
+        x, _ = jax.lax.scan(step, x, params["layers"])
+        return self.unembed(params, x)
+
+    # -------------------------------------------------------------- entry --
+    def forward(self, params, batch, *, remat: bool = True) -> jax.Array:
+        enc = self.encode(params, batch["frames"])
+        return self.decoder_forward(params, batch["tokens"], enc)
+
+    def loss(self, params, batch, *, remat: bool = True):
+        logits = self.forward(params, batch, remat=remat)
+        tokens = batch["tokens"]
+        targets = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+        loss, denom = softmax_xent(logits, targets, mask)
+        return loss, {"loss": loss, "tokens": denom}
+
+    def prefill(self, params, batch, cache_len=None
+                ) -> Tuple[jax.Array, EncDecCache]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc = self.encode(params, batch["frames"])
+        positions = jnp.arange(S)
+        x = self.embed_tokens(params, tokens)
+        x = x + jnp.asarray(_sinusoid(S, cfg.d_model), x.dtype)
+
+        def step(carry, p):
+            h = carry
+            xa = apply_norm(cfg, p["ln1"], h)
+            q, k, v = project_qkv(cfg, p["attn"], xa, positions, rope=False)
+            o = cm.attention_chunked(q, k, v, causal=True,
+                                     qpos=positions, kpos=positions)
+            h = h + attn_out(p["attn"], o)
+            xk, xv = self._cross_kv(p["xattn"], enc)
+            h = h + self._cross_attend(p["xattn"],
+                                       apply_norm(cfg, p["ln_x"], h), xk, xv)
+            h = h + mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], h))
+            return hint(h, ("batch", "seq", "embed")), (k, v, xk, xv)
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(step, x, params["layers"])
+        logits = self.unembed(params, x)
+        from repro.models.transformer import ring_layout
+        ks, vs, kpos = ring_layout(ks, vs, S, cache_len)
+        cache = EncDecCache(k=ks, v=vs, kpos=kpos, xk=xks, xv=xvs)
+        return logits, cache
+
+    def decode_step(self, params, cache: EncDecCache, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, EncDecCache]:
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        S_max = cache.k.shape[2]
+        pe = jax.lax.dynamic_slice_in_dim(
+            jnp.asarray(_sinusoid(S_max, cfg.d_model), x.dtype),
+            pos % S_max, 1, axis=0)
+        x = x + pe[None]
+        write = (pos % S_max).astype(jnp.int32)
+        kpos = jnp.where(jnp.arange(S_max) == write, pos,
+                         cache.kpos).astype(jnp.int32)
+
+        def step(carry, xs):
+            h = carry
+            p, kc, vc, xk, xv = xs
+            xa = apply_norm(cfg, p["ln1"], h)
+            o, kc, vc = decode_attention_raw(cfg, p["attn"], xa, kc, vc,
+                                             pos, kpos, rope=False)
+            h = h + attn_out(p["attn"], o)
+            h = h + self._cross_attend(p["xattn"],
+                                       apply_norm(cfg, p["ln_x"], h), xk, xv)
+            h = h + mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], h))
+            return h, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(step, x, (params["layers"], cache.k,
+                                             cache.v, cache.xk, cache.xv))
+        logits = self.unembed(params, x)
+        return logits, EncDecCache(k=ks, v=vs, kpos=kpos,
+                                   xk=cache.xk, xv=cache.xv)
+
+    # ------------------------------------------------------------- shapes --
+    def cache_specs(self, B: int, S_max: int) -> EncDecCache:
+        cfg = self.cfg
+        G, hd = cfg.n_kv_heads, cfg.hdim
+        Se = S_max // 2
+        kv = (cfg.n_layers, B, S_max, G, hd)
+        xkv = (cfg.n_layers, B, Se, G, hd)
+        return EncDecCache(k=jax.ShapeDtypeStruct(kv, cfg.jdtype),
+                           v=jax.ShapeDtypeStruct(kv, cfg.jdtype),
+                           kpos=jax.ShapeDtypeStruct((S_max,), jnp.int32),
+                           xk=jax.ShapeDtypeStruct(xkv, cfg.jdtype),
+                           xv=jax.ShapeDtypeStruct(xkv, cfg.jdtype))
+
+    def cache_axes(self) -> EncDecCache:
+        kv = ("layers", "batch", "cache_seq", "kv_heads", None)
+        return EncDecCache(k=kv, v=kv, kpos=(None,), xk=kv, xv=kv)
+
+    def init_cache(self, B: int, S_max: int) -> EncDecCache:
+        cfg = self.cfg
+        G, hd = cfg.n_kv_heads, cfg.hdim
+        Se = S_max // 2
+        kv = (cfg.n_layers, B, S_max, G, hd)
+        xkv = (cfg.n_layers, B, Se, G, hd)
+        return EncDecCache(k=jnp.zeros(kv, cfg.jdtype),
+                           v=jnp.zeros(kv, cfg.jdtype),
+                           kpos=jnp.full((S_max,), -1, jnp.int32),
+                           xk=jnp.zeros(xkv, cfg.jdtype),
+                           xv=jnp.zeros(xkv, cfg.jdtype))
+
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                                   cfg.jdtype)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": self.cache_specs(B, S)}
+
+    def input_axes(self, cell: ShapeCell) -> Dict[str, Any]:
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": ("batch", "seq"),
+                    "frames": ("batch", "seq", "frontend")}
+        return {"tokens": ("batch", None), "pos": (),
+                "cache": self.cache_axes()}

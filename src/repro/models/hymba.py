@@ -1,0 +1,233 @@
+"""Hymba (arXiv:2411.13676): each layer runs attention heads and SSM heads
+in PARALLEL on the same input, averages their (normalized) outputs, then a
+dense FFN. Sliding-window attention + O(1) SSM state => long_500k runs.
+
+Adaptation note (DESIGN.md): the paper's Mamba heads are implemented as
+multi-head GLA with ssm_state=16 key channels and data-dependent decay
+w = exp(-softplus(dt)·a) — the same selective-decay recurrence expressed in
+the head-parallel form our shared chunked kernel computes. Per-head output
+normalization before fusion follows the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+from repro.models.recurrence import gla_chunked, gla_step
+from repro.models.transformer import (TransformerLM, _norm_spec, apply_norm,
+                                      attention_specs, attn_out,
+                                      decode_attention_raw, mlp, mlp_specs,
+                                      project_qkv)
+from repro.sharding import hint
+
+
+@dataclasses.dataclass
+class HymbaCache:
+    """Sliding-window KV ring buffer + SSM state + shift state."""
+
+    k: jax.Array          # (L, B, W, G, hd)
+    v: jax.Array
+    kpos: jax.Array       # (W,) stored positions, -1 = empty
+    ssm: jax.Array        # (L, B, H, N, hd) float32 GLA state
+    shift: jax.Array      # (L, B, d) previous token for dt/B/C projections
+
+
+jax.tree_util.register_pytree_node(
+    HymbaCache,
+    lambda c: ((c.k, c.v, c.kpos, c.ssm, c.shift), None),
+    lambda _, xs: HymbaCache(*xs))
+
+
+class HymbaLM(TransformerLM):
+    """Parallel attention + SSM heads; sliding-window attention."""
+
+    def ssm_specs(self, L: int) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        d, dt = cfg.d_model, cfg.jdtype
+        H, hd, N = cfg.n_heads, cfg.hdim, cfg.ssm_state
+        return {
+            "wx": ParamSpec((L, d, H * hd), dt, "scaled",
+                            ("layers", "embed", "qkv")),
+            "wB": ParamSpec((L, d, H * N), dt, "scaled",
+                            ("layers", "embed", "heads")),
+            "wC": ParamSpec((L, d, H * N), dt, "scaled",
+                            ("layers", "embed", "heads")),
+            "wdt": ParamSpec((L, d, H), dt, "scaled",
+                             ("layers", "embed", "heads")),
+            "a_log": ParamSpec((L, H, N), jnp.float32, "zeros",
+                               ("layers", "heads", None)),
+            "dt_bias": ParamSpec((L, H), jnp.float32, "zeros",
+                                 ("layers", "heads")),
+            "wo": ParamSpec((L, H * hd, d), dt, "scaled",
+                            ("layers", "qkv", "embed")),
+            "norm": ParamSpec((L, H * hd), jnp.float32, "ones",
+                              ("layers", "qkv")),
+        }
+
+    def layer_specs(self) -> Dict[str, Any]:
+        cfg, L = self.cfg, self.cfg.n_layers
+        return {
+            "ln1": _norm_spec(cfg, L),
+            "attn": attention_specs(cfg, L),
+            "attn_norm": ParamSpec((L, cfg.n_heads * cfg.hdim), jnp.float32,
+                                   "ones", ("layers", "qkv")),
+            "ssm": self.ssm_specs(L),
+            "ln2": _norm_spec(cfg, L),
+            "mlp": mlp_specs(cfg, L),
+        }
+
+    # ------------------------------------------------------------ SSM mix --
+    def _ssm_inputs(self, p, x: jax.Array):
+        cfg = self.cfg
+        B, T, d = x.shape
+        H, hd, N = cfg.n_heads, cfg.hdim, cfg.ssm_state
+        xv = (x @ p["wx"]).reshape(B, T, H, hd)
+        Bm = (x @ p["wB"]).reshape(B, T, H, N)
+        Cm = (x @ p["wC"]).reshape(B, T, H, N)
+        dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32)
+                             + p["dt_bias"])                     # (B,T,H)
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (H,N) < 0
+        logw = dt[..., None] * a                                 # <= 0
+        k = Bm.astype(jnp.float32) * dt[..., None]               # dt·B
+        xv = hint(xv, ("batch", "seq", "heads", None))
+        return Cm, k.astype(x.dtype), xv, logw
+
+    def _ssm_mix(self, p, x: jax.Array, x_prev: Optional[jax.Array] = None,
+                 state: Optional[jax.Array] = None):
+        cfg = self.cfg
+        B, T, d = x.shape
+        H, hd = cfg.n_heads, cfg.hdim
+        Cm, k, xv, logw = self._ssm_inputs(p, x)
+        if T == 1 and state is not None:
+            y, S = gla_step(state, Cm[:, 0], k[:, 0], xv[:, 0], logw[:, 0])
+            y = y[:, None]
+        else:
+            y, S = gla_chunked(Cm, k, xv, logw,
+                               chunk=32 if T % 32 == 0 else T,
+                               initial_state=state)
+        y = cm.rms_norm(y.reshape(B, T, H, hd),
+                        p["norm"].reshape(H, hd)).reshape(B, T, H * hd)
+        return y.astype(x.dtype) @ p["wo"], S
+
+    # ------------------------------------------------------- layer bodies --
+    def _fused_mix(self, p, h: jax.Array, positions: jax.Array):
+        """Parallel attention + SSM on the same normed input, averaged."""
+        cfg = self.cfg
+        B, T, _ = h.shape
+        q, k, v = project_qkv(cfg, p["attn"], h, positions)
+        from repro.models.transformer import causal_attention
+        o = causal_attention(cfg, q, k, v, positions)
+        o = cm.rms_norm(o, p["attn_norm"].reshape(cfg.n_heads, cfg.hdim))
+        attn_y = attn_out(p["attn"], o.astype(h.dtype))
+        ssm_y, _ = self._ssm_mix(p["ssm"], h)
+        return 0.5 * (attn_y + ssm_y)
+
+    def layer_body(self, p, x: jax.Array, positions: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = apply_norm(cfg, p["ln1"], x)
+        x = x + self._fused_mix(p, h, positions)
+        x = x + mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+        return hint(x, ("batch", "seq", "embed"))
+
+    # ------------------------------------------------------------- decode --
+    def cache_len(self, cell: ShapeCell) -> int:
+        return min(cell.seq_len, self.cfg.sliding_window)
+
+    def cache_specs(self, B: int, W: int) -> HymbaCache:
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        H, G, hd, N = cfg.n_heads, cfg.n_kv_heads, cfg.hdim, cfg.ssm_state
+        kv = (L, B, W, G, hd)
+        return HymbaCache(
+            k=jax.ShapeDtypeStruct(kv, cfg.jdtype),
+            v=jax.ShapeDtypeStruct(kv, cfg.jdtype),
+            kpos=jax.ShapeDtypeStruct((W,), jnp.int32),
+            ssm=jax.ShapeDtypeStruct((L, B, H, N, hd), jnp.float32),
+            shift=jax.ShapeDtypeStruct((L, B, d), cfg.jdtype))
+
+    def cache_axes(self) -> HymbaCache:
+        kv = ("layers", "batch", "cache_seq", "kv_heads", None)
+        return HymbaCache(k=kv, v=kv, kpos=(None,),
+                          ssm=("layers", "batch", "heads", None, None),
+                          shift=("layers", "batch", "embed"))
+
+    def init_cache(self, B: int, W: int) -> HymbaCache:
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        H, G, hd, N = cfg.n_heads, cfg.n_kv_heads, cfg.hdim, cfg.ssm_state
+        kv = (L, B, W, G, hd)
+        return HymbaCache(k=jnp.zeros(kv, cfg.jdtype),
+                          v=jnp.zeros(kv, cfg.jdtype),
+                          kpos=jnp.full((W,), -1, jnp.int32),
+                          ssm=jnp.zeros((L, B, H, N, hd), jnp.float32),
+                          shift=jnp.zeros((L, B, d), cfg.jdtype))
+
+    def prefill(self, params, batch, cache_len=None
+                ) -> Tuple[jax.Array, HymbaCache]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        x = self.embed_tokens(params, tokens)
+
+        from repro.models.transformer import causal_attention
+
+        def step(carry, layer_p):
+            h0 = carry
+            h = apply_norm(cfg, layer_p["ln1"], h0)
+            q, k, v = project_qkv(cfg, layer_p["attn"], h, positions)
+            o = causal_attention(cfg, q, k, v, positions)
+            o = cm.rms_norm(o.reshape(B, S, cfg.n_heads, cfg.hdim),
+                            layer_p["attn_norm"].reshape(cfg.n_heads,
+                                                         cfg.hdim))
+            attn_y = attn_out(layer_p["attn"], o.astype(h.dtype))
+            ssm_y, Sst = self._ssm_mix(layer_p["ssm"], h)
+            h0 = h0 + 0.5 * (attn_y + ssm_y)
+            h0 = h0 + mlp(cfg, layer_p["mlp"],
+                          apply_norm(cfg, layer_p["ln2"], h0))
+            return h0, (k, v, Sst, h[:, -1].astype(cfg.jdtype))
+
+        x, (ks, vs, ssm, shift) = jax.lax.scan(step, x, params["layers"])
+        logits = self.unembed(params, x)
+        from repro.models.transformer import ring_layout
+        ks, vs, kpos = ring_layout(ks, vs, S, cache_len,
+                                   window=cfg.sliding_window)
+        cache = HymbaCache(k=ks, v=vs, kpos=kpos, ssm=ssm, shift=shift)
+        return logits, cache
+
+    def decode_step(self, params, cache: HymbaCache, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, HymbaCache]:
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        W = cache.k.shape[2]
+        write = (pos % W).astype(jnp.int32)
+        kpos = jnp.where(jnp.arange(W) == write, pos,
+                         cache.kpos).astype(jnp.int32)
+
+        def step(carry, xs):
+            h0 = carry
+            layer_p, kc, vc, Sst, shift = xs
+            h = apply_norm(cfg, layer_p["ln1"], h0)
+            o, kc, vc = decode_attention_raw(cfg, layer_p["attn"], h, kc,
+                                             vc, pos, kpos)
+            o = cm.rms_norm(o, layer_p["attn_norm"].reshape(cfg.n_heads,
+                                                            cfg.hdim))
+            attn_y = attn_out(layer_p["attn"], o.astype(h.dtype))
+            ssm_y, Sst = self._ssm_mix(layer_p["ssm"], h, state=Sst)
+            h0 = h0 + 0.5 * (attn_y + ssm_y)
+            h0 = h0 + mlp(cfg, layer_p["mlp"],
+                          apply_norm(cfg, layer_p["ln2"], h0))
+            return h0, (kc, vc, Sst, h[:, -1].astype(cfg.jdtype))
+
+        x, (ks, vs, ssm, shift) = jax.lax.scan(
+            step, x, (params["layers"], cache.k, cache.v,
+                      cache.ssm, cache.shift))
+        logits = self.unembed(params, x)
+        return logits, HymbaCache(k=ks, v=vs, kpos=kpos, ssm=ssm,
+                                  shift=shift)

@@ -1,0 +1,224 @@
+"""Mixture-of-Experts FFN with top-k routing, capacity-bounded sort-based
+dispatch (dropping on overflow), expert parallelism over the 'model' mesh
+axis, and an optional parallel dense-residual FFN (arctic).
+
+Dispatch is sort-based (argsort over flattened (token, expert-choice) pairs)
+rather than one-hot-einsum based: it avoids the (tokens, E, C) dispatch
+tensor entirely, so it scales to arctic's 128 experts at 1M tokens/step.
+The token->expert shuffle is exactly a MapReduce shuffle; JoSS's reduce-
+placement insight maps to *where* the combine happens (see DESIGN.md §4 and
+the hierarchical all_to_all variant in repro/sharding/collectives.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamSpec
+from repro.models import common as cm
+from repro.models.transformer import (TransformerLM, _norm_spec, apply_norm,
+                                      attention_specs, mlp, mlp_specs,
+                                      self_attention)
+from repro.sharding import hint
+
+
+def moe_specs(cfg: ArchConfig, L: int) -> Dict[str, ParamSpec]:
+    E, d, f, dt = cfg.n_experts, cfg.d_model, cfg.d_ff, cfg.jdtype
+    fin = 2 * f if cfg.act == "swiglu" else f
+    return {
+        "router": ParamSpec((L, d, E), jnp.float32, "scaled",
+                            ("layers", "embed", "experts")),
+        # 'expert_in' (not 'embed'): expert weights are EP-sharded over
+        # 'model' and must stay whole per rank for the shard_map dispatch;
+        # ZeRO-1 shards their optimizer state over 'data' instead.
+        "wi": ParamSpec((L, E, d, fin), dt, "scaled",
+                        ("layers", "experts", "expert_in", "expert_mlp")),
+        "wo": ParamSpec((L, E, f, d), dt, "scaled",
+                        ("layers", "experts", "expert_mlp", "expert_in")),
+    }
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    """Per-expert capacity, rounded up to a TPU-friendly multiple of 128."""
+    c = cfg.capacity_factor * n_tokens * cfg.moe_topk / cfg.n_experts
+    return max(128, int(-(-c // 128) * 128))
+
+
+def route(cfg: ArchConfig, router: jax.Array, xt: jax.Array
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Token->expert choices. xt: (T, d) -> (gates (T,k), experts (T,k),
+    aux load-balancing loss)."""
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.moe_topk)
+    gates = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    E = cfg.n_experts
+    density = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(
+        1.0) / topi.size
+    mean_prob = probs.mean(axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+    return gates.astype(xt.dtype), topi, aux
+
+
+def moe_ffn(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux loss). Sort-based dispatch."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.moe_topk
+    C = capacity(cfg, T)
+    xt = x.reshape(T, d)
+    xt = hint(xt, ("batch", "embed"))
+
+    gates, topi, aux = route(cfg, p["router"], xt)
+
+    # flatten (token, choice) pairs and sort by destination expert
+    e_flat = topi.reshape(-1)                      # (T*k,)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    g_flat = gates.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    es, ts, gs = e_flat[order], t_flat[order], g_flat[order]
+    starts = jnp.searchsorted(es, jnp.arange(E, dtype=es.dtype))
+    rank = jnp.arange(T * k, dtype=jnp.int32) - starts[es].astype(jnp.int32)
+    keep = rank < C
+    dest = jnp.where(keep, es.astype(jnp.int32) * C + rank, E * C)
+
+    # scatter tokens into the (E*C, d) expert buffer ("the shuffle")
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[dest].set(xt[ts])
+    buf = buf[:-1].reshape(E, C, d)
+    buf = hint(buf, ("experts", None, "embed"))
+
+    # expert FFN
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    y = hint(y, ("experts", None, "embed"))
+
+    # combine ("the reduce"): weighted scatter-add back to token order
+    yf = jnp.concatenate([y.reshape(E * C, d),
+                          jnp.zeros((1, d), y.dtype)], axis=0)
+    vals = yf[dest] * (gs * keep.astype(gs.dtype))[:, None]
+    out = jnp.zeros((T, d), x.dtype).at[ts].add(vals.astype(x.dtype))
+    return out.reshape(B, S, d), aux
+
+
+class MoETransformerLM(TransformerLM):
+    """Transformer with MoE FFN (dbrx) + optional dense residual (arctic)."""
+
+    def layer_specs(self) -> Dict[str, Any]:
+        cfg, L = self.cfg, self.cfg.n_layers
+        specs = {
+            "ln1": _norm_spec(cfg, L),
+            "attn": attention_specs(cfg, L),
+            "ln2": _norm_spec(cfg, L),
+            "moe": moe_specs(cfg, L),
+        }
+        if cfg.moe_dense_residual:
+            # arctic: parallel dense FFN (hidden = d_model) beside the MoE
+            import dataclasses as _dc
+            dense_cfg = _dc.replace(cfg, d_ff=cfg.d_model)
+            specs["dense_mlp"] = mlp_specs(dense_cfg, L)
+        return specs
+
+    def layer_body(self, p, x: jax.Array, positions: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = x + self_attention(cfg, p["attn"], apply_norm(cfg, p["ln1"], x),
+                               positions)
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + self._moe_block(p, h)
+        return hint(x, ("batch", "seq", "embed"))
+
+    def moe_weight_axes_note(self) -> str:
+        return ("expert weights: ('layers','experts','expert_in',"
+                "'expert_mlp') — EP over 'model', replicated over "
+                "(pod,data); ZeRO-1 shards m/v over 'data'.")
+
+    def n_active_params(self) -> int:
+        """6·N_active·D roofline accounting: experts count at k/E weight."""
+        total = 0
+        specs = self.param_specs()
+        leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda s: isinstance(s, ParamSpec))
+        for s in leaves:
+            n = int(np.prod(s.shape))
+            if "experts" in s.axes and len(s.shape) >= 3:
+                n = n * self.cfg.moe_topk // self.cfg.n_experts
+            total += n
+        return total
+
+    def _moe_block(self, layer_p, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        # expert-parallel all_to_all dispatch when a mesh is active;
+        # falls back to the dense sort-based path on a single device
+        from repro.models.moe_ep import moe_ffn_ep
+        mo, _ = moe_ffn_ep(cfg, layer_p["moe"], h)
+        if cfg.moe_dense_residual:
+            import dataclasses as _dc
+            dense_cfg = _dc.replace(cfg, d_ff=cfg.d_model)
+            mo = mo + mlp(dense_cfg, layer_p["dense_mlp"], h)
+        return mo
+
+    def prefill(self, params, batch, cache_len=None):
+        from repro.models.transformer import (DecodeCache, apply_norm,
+                                              attn_out, project_qkv,
+                                              ring_layout)
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        x = self.embed_tokens(params, tokens)
+
+        def step(carry, layer_p):
+            h = carry
+            xa = apply_norm(cfg, layer_p["ln1"], h)
+            q, k, v = project_qkv(cfg, layer_p["attn"], xa, positions)
+            o = cm.attention_chunked(q, k, v, causal=True,
+                                     window=cfg.sliding_window,
+                                     qpos=positions, kpos=positions)
+            h = h + attn_out(layer_p["attn"], o)
+            h = h + self._moe_block(layer_p, apply_norm(cfg, layer_p["ln2"],
+                                                        h))
+            return hint(h, ("batch", "seq", "embed")), (k, v)
+
+        x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+        logits = self.unembed(params, x)
+        ks, vs, kpos = ring_layout(ks, vs, S, cache_len,
+                                   window=cfg.sliding_window)
+        return logits, DecodeCache(k=ks, v=vs, kpos=kpos, extras={})
+
+    # decode path reuses TransformerLM's attention caching; the MoE FFN is
+    # called with S=1 (T=B tokens) and a small capacity.
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        from repro.models.transformer import (DecodeCache, decode_attention,
+                                              apply_norm as _an)
+        x = self.embed_tokens(params, tokens)
+        S_max = cache.k.shape[2]
+        write = (pos % S_max).astype(jnp.int32)
+        kpos = jnp.where(jnp.arange(S_max) == write, pos,
+                         cache.kpos).astype(jnp.int32)
+
+        def step(carry, xs):
+            h = carry
+            layer_p, kc, vc = xs
+            xa = _an(cfg, layer_p["ln1"], h)
+            o, kc, vc = decode_attention(cfg, layer_p["attn"], xa, kc, vc,
+                                         pos, kpos)
+            h = h + o
+            hn = _an(cfg, layer_p["ln2"], h)
+            return h + self._moe_block(layer_p, hn), (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(step, x, (params["layers"],
+                                             cache.k, cache.v))
+        logits = self.unembed(params, x)
+        from repro.models.transformer import DecodeCache as DC
+        return logits, DC(k=ks, v=vs, kpos=kpos, extras={})

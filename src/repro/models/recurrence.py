@@ -1,0 +1,112 @@
+"""Chunked gated-linear-attention (GLA) recurrence.
+
+The shared compute core of the RWKV6 (Finch) time-mix and the hymba SSM
+heads. Per head with K key channels and V value channels, state S in
+R^{K x V}:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (diag(u) k_t^T v_t + S_{t-1})        # u-bonus (RWKV6); u=None
+                                                   # gives y_t = r_t S_t-form
+                                                   # used by the SSM heads.
+
+Computed chunk-parallel: within a chunk of length c the pairwise decay
+products are materialized as exp(cum_logw_{t-1} - cum_logw_j) for j <= t-1,
+whose exponent is always <= 0, so the chunked path is unconditionally
+stable in float32 (no flash-linear-attention sub-block rescaling needed).
+
+Shapes: r, k, logw: (B, T, H, K); v: (B, T, H, V); u: (H, K) or None.
+Returns y: (B, T, H, V) and the final state (B, H, K, V).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                u: Optional[jax.Array] = None, *, chunk: int = 32,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, T)
+    if T % c:
+        raise ValueError(f"T={T} must be divisible by chunk={c}")
+    n = T // c
+    f32 = jnp.float32
+
+    rc = r.astype(f32).reshape(B, n, c, H, K).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(f32).reshape(B, n, c, H, K).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(B, n, c, H, V).transpose(1, 0, 3, 2, 4)
+    wc = logw.astype(f32).reshape(B, n, c, H, K).transpose(1, 0, 3, 2, 4)
+    # now (n, B, H, c, K/V)
+
+    S0 = (jnp.zeros((B, H, K, V), f32) if initial_state is None
+          else initial_state.astype(f32))
+    tri = jnp.tril(jnp.ones((c, c), f32), k=-1)  # strictly-lower: j <= t-1
+
+    def chunk_step(S, xs):
+        rb, kb, vb, wb = xs                      # (B, H, c, K/V)
+        cw = jnp.cumsum(wb, axis=2)              # cum logw inclusive
+        cw_prev = cw - wb                        # cum logw over i < t
+        # inter-chunk: y_t += (r_t * prod_{i<t} w_i) @ S
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", rb * jnp.exp(cw_prev), S)
+        # intra-chunk: pairwise decays, exponent <= 0 for j <= t-1
+        diff = cw_prev[:, :, :, None, :] - cw[:, :, None, :, :]  # (B,H,c,c,K)
+        A = jnp.einsum("bhck,bhcjk,bhjk->bhcj",
+                       rb, jnp.exp(jnp.minimum(diff, 0.0)), kb)
+        A = A * tri
+        y_intra = jnp.einsum("bhcj,bhjv->bhcv", A, vb)
+        # diagonal (current-token) term
+        if u is not None:
+            du = jnp.einsum("bhck,hk,bhck->bhc", rb, u.astype(f32), kb)
+        else:
+            du = jnp.einsum("bhck,bhck->bhc", rb, kb)
+        y_diag = du[..., None] * vb
+        # state update: S' = diag(prod w) S + sum_j (k_j * prod_{i>j} w_i) v_j
+        w_all = cw[:, :, -1:, :]                 # total chunk decay
+        k_scaled = kb * jnp.exp(w_all - cw)      # exponent <= 0
+        S_new = S * jnp.exp(w_all[:, :, 0, :, None]) + jnp.einsum(
+            "bhck,bhcv->bhkv", k_scaled, vb)
+        return S_new, y_inter + y_intra + y_diag
+
+    S_fin, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, V)
+    return y.astype(v.dtype), S_fin
+
+
+def gla_step(state: jax.Array, r: jax.Array, k: jax.Array, v: jax.Array,
+             logw: jax.Array, u: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. state: (B, H, K, V); r/k/logw: (B, H, K);
+    v: (B, H, V). Returns (y (B, H, V), new state)."""
+    f32 = jnp.float32
+    r32, k32, v32 = r.astype(f32), k.astype(f32), v.astype(f32)
+    kv = k32[..., :, None] * v32[..., None, :]            # (B,H,K,V)
+    if u is not None:
+        att = state + u.astype(f32)[None, :, :, None] * kv
+    else:
+        att = state + kv
+    y = jnp.einsum("bhk,bhkv->bhv", r32, att)
+    new_state = state * jnp.exp(logw.astype(f32))[..., None] + kv
+    return y.astype(v.dtype), new_state
+
+
+def gla_ref(r, k, v, logw, u=None, *, initial_state=None):
+    """Sequential oracle for tests: step-by-step scan over T."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    S0 = (jnp.zeros((B, H, K, V), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        y, S_new = gla_step(S, rt, kt, vt, wt, u)
+        return S_new, y
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          logw.swapaxes(0, 1))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1).astype(v.dtype), S_fin

@@ -1,0 +1,36 @@
+"""build_model: ArchConfig -> model instance, by family."""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.configs.base import ArchConfig
+from repro.configs import get_config
+
+
+def build_model(cfg: Union[ArchConfig, str]):
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    fam = cfg.family
+    if fam == "dense":
+        from repro.models.transformer import TransformerLM
+        return TransformerLM(cfg)
+    if fam == "moe":
+        from repro.models.moe import MoETransformerLM
+        return MoETransformerLM(cfg)
+    if fam == "ssm":
+        from repro.models.rwkv6 import Rwkv6LM
+        return Rwkv6LM(cfg)
+    if fam == "hybrid":
+        from repro.models.hymba import HymbaLM
+        return HymbaLM(cfg)
+    if fam == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if fam == "vlm":
+        from repro.models.vlm import VlmLM
+        return VlmLM(cfg)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# type alias for annotations
+Model = object

@@ -1,0 +1,470 @@
+"""Decoder-only transformer LM: GQA attention (optional qk-norm, qkv bias,
+sliding window), swiglu/gelu FFN or MoE FFN, scan-over-layers, KV-cache
+prefill/decode. Covers qwen2.5-14b, granite-3-2b, qwen3-4b, stablelm-12b and
+is the backbone for the MoE (arctic/dbrx) and VLM (internvl2) families.
+
+All parameters are ParamSpec trees with logical sharding axes; activations
+carry ``hint`` constraints so the same code lowers on 1 CPU device and the
+512-chip production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+from repro.sharding import hint
+
+
+# ------------------------------------------------------------------ specs --
+def _norm_spec(cfg: ArchConfig, L: int) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((L, d), jnp.float32, "ones",
+                                   ("layers", "embed")),
+                "bias": ParamSpec((L, d), jnp.float32, "zeros",
+                                  ("layers", "embed"))}
+    return {"scale": ParamSpec((L, d), jnp.float32, "ones",
+                               ("layers", "embed"))}
+
+
+def _final_norm_spec(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), jnp.float32, "ones", ("embed",)),
+                "bias": ParamSpec((d,), jnp.float32, "zeros", ("embed",))}
+    return {"scale": ParamSpec((d,), jnp.float32, "ones", ("embed",))}
+
+
+def apply_norm(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array
+               ) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return cm.layer_norm(x, p["scale"], p["bias"])
+    return cm.rms_norm(x, p["scale"])
+
+
+def attention_specs(cfg: ArchConfig, L: int, *, cross: bool = False
+                    ) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.hdim
+    H, G = cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.jdtype
+    specs: Dict[str, ParamSpec] = {
+        "wq": ParamSpec((L, d, H * hd), dt, "scaled", ("layers", "embed", "qkv")),
+        "wk": ParamSpec((L, d, G * hd), dt, "scaled", ("layers", "embed", "qkv")),
+        "wv": ParamSpec((L, d, G * hd), dt, "scaled", ("layers", "embed", "qkv")),
+        "wo": ParamSpec((L, H * hd, d), dt, "scaled", ("layers", "qkv", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = ParamSpec((L, H * hd), dt, "zeros", ("layers", "qkv"))
+        specs["bk"] = ParamSpec((L, G * hd), dt, "zeros", ("layers", "qkv"))
+        specs["bv"] = ParamSpec((L, G * hd), dt, "zeros", ("layers", "qkv"))
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = ParamSpec((L, hd), jnp.float32, "ones",
+                                    ("layers", None))
+        specs["k_norm"] = ParamSpec((L, hd), jnp.float32, "ones",
+                                    ("layers", None))
+    return specs
+
+
+def mlp_specs(cfg: ArchConfig, L: int) -> Dict[str, ParamSpec]:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.jdtype
+    if cfg.act == "swiglu":
+        return {"wi": ParamSpec((L, d, 2 * f), dt, "scaled",
+                                ("layers", "embed", "mlp")),
+                "wo": ParamSpec((L, f, d), dt, "scaled",
+                                ("layers", "mlp", "embed"))}
+    return {"wi": ParamSpec((L, d, f), dt, "scaled",
+                            ("layers", "embed", "mlp")),
+            "wo": ParamSpec((L, f, d), dt, "scaled",
+                            ("layers", "mlp", "embed"))}
+
+
+# ---------------------------------------------------------------- compute --
+def project_qkv(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array,
+                positions: jax.Array, *, rope: bool = True
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,G,hd), with bias/qk-norm/RoPE."""
+    B, S, _ = x.shape
+    H, G, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hdim
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, G, hd)
+    v = v.reshape(B, S, G, hd)
+    if "q_norm" in p:
+        q = cm.rms_norm(q, p["q_norm"])
+        k = cm.rms_norm(k, p["k_norm"])
+    if rope:
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+    q = hint(q, ("batch", "seq", "heads", None))
+    k = hint(k, ("batch", "seq", "kv_heads", None))
+    v = hint(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def attn_out(p: Dict[str, jax.Array], o: jax.Array) -> jax.Array:
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, -1)
+    return jnp.einsum("bsk,kd->bsd", o, p["wo"])
+
+
+def causal_attention(cfg: ArchConfig, q, k, v, positions, *,
+                     block_k: int = 1024) -> jax.Array:
+    """Causal self-attention dispatch: banded O(S*w) for sliding windows,
+    chunked online-softmax otherwise."""
+    from repro import flags
+    S = q.shape[1]
+    w = cfg.sliding_window
+    if w and S % w == 0 and S >= 2 * w and not flags.no_banded_attention():
+        return cm.attention_banded(q, k, v, window=w, qpos=positions,
+                                   kpos=positions)
+    return cm.attention_chunked(q, k, v, causal=True, window=w,
+                                qpos=positions, kpos=positions,
+                                block_k=min(block_k, max(S, 128)))
+
+
+def self_attention(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array,
+                   positions: jax.Array, *, causal: bool = True,
+                   block_k: int = 1024) -> jax.Array:
+    """Full-sequence self-attention (train / prefill path)."""
+    q, k, v = project_qkv(cfg, p, x, positions)
+    if causal:
+        o = causal_attention(cfg, q, k, v, positions, block_k=block_k)
+    else:
+        o = cm.attention_chunked(q, k, v, causal=False,
+                                 qpos=positions, kpos=positions,
+                                 block_k=min(block_k, max(q.shape[1],
+                                                          128)))
+    return attn_out(p, o)
+
+
+def decode_attention_raw(cfg: ArchConfig, p: Dict[str, jax.Array],
+                         x: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, pos: jax.Array,
+                         kpos: jax.Array, *, rope: bool = True
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a (B, S_max, G, hd) cache slice.
+
+    Returns (pre-projection heads (B,1,H,hd), updated k_cache, v_cache).
+    ``kpos`` is the (S_max,) stored-position array (-1 = empty slot) — for
+    a plain cache it is arange masked by <= pos; for ring buffers it is
+    maintained by the caller.
+    """
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = project_qkv(cfg, p, x, positions, rope=rope)
+    # ring-buffer write slot: position pos lives at slot = pos % S_max
+    write = (pos % k_cache.shape[1]).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, write, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, write, 0, 0))
+    k_cache = hint(k_cache, ("batch", "cache_seq", "kv_heads", None))
+    v_cache = hint(v_cache, ("batch", "cache_seq", "kv_heads", None))
+    o = cm.attention_ref(q, k_cache, v_cache, causal=True,
+                         window=cfg.sliding_window,
+                         qpos=positions, kpos=kpos)
+    return o, k_cache, v_cache
+
+
+def decode_attention(cfg: ArchConfig, p: Dict[str, jax.Array],
+                     x: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, kpos: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """decode_attention_raw + output projection: returns (B,1,d)."""
+    o, k_cache, v_cache = decode_attention_raw(cfg, p, x, k_cache, v_cache,
+                                               pos, kpos)
+    return attn_out(p, o), k_cache, v_cache
+
+
+def mlp(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    h = hint(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array,
+                 mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Stable cross entropy over a (possibly vocab-sharded) logits array.
+
+    Uses the iota-compare trick for the true-logit gather (sharding-friendly:
+    no host-size one_hot, no cross-shard gather).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab = logits.shape[-1]
+    onehot_sum = jnp.sum(
+        jnp.where(jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                           logits.ndim - 1)
+                  == targets[..., None], logits, 0.0), axis=-1)
+    nll = (lse - onehot_sum) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom, denom
+
+
+def ring_layout(ks: jax.Array, vs: jax.Array, S: int,
+                cache_len: Optional[int], *, window: int = 0
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Lay out prefill K/V (L,B,S,G,hd) as a ring cache of ``cache_len``
+    slots where slot = position % cache_len (the decode-write invariant).
+
+    Returns (k, v, kpos) with kpos[slot] = stored position or -1.
+    """
+    C = cache_len or (min(S, window) if window else S)
+    if window:
+        C = min(C, window) if S >= window else C
+    if S >= C:
+        # keep the last C positions, rotated so slot = pos % C
+        ks, vs = ks[:, :, S - C:], vs[:, :, S - C:]
+        shift = (S - C) % C
+        ks = jnp.roll(ks, shift, axis=2)
+        vs = jnp.roll(vs, shift, axis=2)
+        kpos = jnp.roll(jnp.arange(S - C, S, dtype=jnp.int32), shift)
+    else:
+        pad = C - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                                jnp.full((pad,), -1, jnp.int32)])
+    return ks, vs, kpos
+
+
+@dataclasses.dataclass
+class DecodeCache:
+    """KV cache pytree for the transformer families."""
+
+    k: jax.Array          # (L, B, S_max, G, hd)
+    v: jax.Array
+    kpos: jax.Array       # (S_max,) stored positions, -1 = empty
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+jax.tree_util.register_pytree_node(
+    DecodeCache,
+    lambda c: ((c.k, c.v, c.kpos, c.extras), None),
+    lambda _, xs: DecodeCache(*xs))
+
+
+class TransformerLM:
+    """Dense decoder-only LM. Subclasses override ``ffn_*`` / layer body."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params --
+    def layer_specs(self) -> Dict[str, Any]:
+        cfg, L = self.cfg, self.cfg.n_layers
+        return {
+            "ln1": _norm_spec(cfg, L),
+            "attn": attention_specs(cfg, L),
+            "ln2": _norm_spec(cfg, L),
+            "mlp": mlp_specs(cfg, L),
+        }
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        V = cfg.padded_vocab
+        specs: Dict[str, Any] = {
+            "embed": ParamSpec((V, cfg.d_model), cfg.jdtype,
+                               "embed", ("vocab", "embed")),
+            "layers": self.layer_specs(),
+            "final_norm": _final_norm_spec(cfg),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ParamSpec((cfg.d_model, V), cfg.jdtype,
+                                         "scaled", ("embed", "vocab"))
+        return specs
+
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        return cm.init_tree(rng, self.param_specs())
+
+    def n_params(self) -> int:
+        return cm.count_params(self.param_specs())
+
+    def n_active_params(self) -> int:
+        return self.n_params()
+
+    # ------------------------------------------------------------ forward --
+    def embed_tokens(self, params, tokens: jax.Array) -> jax.Array:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return hint(x, ("batch", "seq", "embed"))
+
+    def layer_body(self, p, x: jax.Array, positions: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = x + self_attention(cfg, p["attn"], apply_norm(cfg, p["ln1"], x),
+                               positions)
+        x = x + mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+        return hint(x, ("batch", "seq", "embed"))
+
+    def backbone(self, params, x: jax.Array, positions: jax.Array,
+                 *, remat: bool = True) -> jax.Array:
+        body = self.layer_body
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def step(carry, layer_p):
+            return body(layer_p, carry, positions), None
+
+        x, _ = jax.lax.scan(step, x, params["layers"])
+        return x
+
+    def unembed(self, params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = apply_norm(cfg, params["final_norm"], x)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        if cfg.padded_vocab != cfg.vocab:  # mask the padding tail
+            pad_mask = jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, logits.ndim - 1) >= cfg.vocab
+            logits = jnp.where(pad_mask, jnp.asarray(-1e9, logits.dtype),
+                               logits)
+        return hint(logits, ("batch", "seq", "vocab"))
+
+    def forward(self, params, batch: Dict[str, jax.Array], *,
+                remat: bool = True) -> jax.Array:
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        x = self.embed_tokens(params, tokens)
+        x = self.backbone(params, x, jnp.arange(S), remat=remat)
+        return self.unembed(params, x)
+
+    def loss(self, params, batch: Dict[str, jax.Array], *,
+             remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        tokens = batch["tokens"]
+        logits = self.forward(params, batch, remat=remat)
+        targets = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+        loss, denom = softmax_xent(logits, targets, mask)
+        return loss, {"loss": loss, "tokens": denom}
+
+    # ------------------------------------------------------------- decode --
+    def cache_len(self, cell: ShapeCell) -> int:
+        w = self.cfg.sliding_window
+        return min(cell.seq_len, w) if w else cell.seq_len
+
+    def cache_specs(self, B: int, S_max: int) -> DecodeCache:
+        cfg = self.cfg
+        shp = (cfg.n_layers, B, S_max, cfg.n_kv_heads, cfg.hdim)
+        return DecodeCache(
+            k=jax.ShapeDtypeStruct(shp, cfg.jdtype),
+            v=jax.ShapeDtypeStruct(shp, cfg.jdtype),
+            kpos=jax.ShapeDtypeStruct((S_max,), jnp.int32),
+            extras={})
+
+    def cache_axes(self) -> DecodeCache:
+        ax = ("layers", "batch", "cache_seq", "kv_heads", None)
+        return DecodeCache(k=ax, v=ax, kpos=(None,), extras={})
+
+    def init_cache(self, B: int, S_max: int) -> DecodeCache:
+        cfg = self.cfg
+        shp = (cfg.n_layers, B, S_max, cfg.n_kv_heads, cfg.hdim)
+        return DecodeCache(k=jnp.zeros(shp, cfg.jdtype),
+                           v=jnp.zeros(shp, cfg.jdtype),
+                           kpos=jnp.full((S_max,), -1, jnp.int32),
+                           extras={})
+
+    def prefill(self, params, batch: Dict[str, jax.Array],
+                cache_len: Optional[int] = None
+                ) -> Tuple[jax.Array, DecodeCache]:
+        """Run the prompt, return (full logits, filled cache).
+
+        ``cache_len`` reserves headroom for subsequent decode steps; the
+        cache layout is a ring keyed by slot = position % cache_len.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        x = self.embed_tokens(params, tokens)
+
+        def step(carry, layer_p):
+            h = carry
+            xa = apply_norm(cfg, layer_p["ln1"], h)
+            q, k, v = project_qkv(cfg, layer_p["attn"], xa, positions)
+            o = cm.attention_chunked(q, k, v, causal=True,
+                                     window=cfg.sliding_window,
+                                     qpos=positions, kpos=positions)
+            h = h + attn_out(layer_p["attn"], o)
+            h = h + mlp(cfg, layer_p["mlp"], apply_norm(cfg, layer_p["ln2"], h))
+            h = hint(h, ("batch", "seq", "embed"))
+            return h, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+        logits = self.unembed(params, x)
+        ks, vs, kpos = ring_layout(ks, vs, S, cache_len,
+                                   window=cfg.sliding_window)
+        cache = DecodeCache(k=hint(ks, ("layers", "batch", "cache_seq",
+                                        "kv_heads", None)),
+                            v=hint(vs, ("layers", "batch", "cache_seq",
+                                        "kv_heads", None)),
+                            kpos=kpos, extras={})
+        return logits, cache
+
+    def decode_step(self, params, cache: DecodeCache, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, DecodeCache]:
+        """One decode step: tokens (B,1) at position ``pos`` (scalar)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        S_max = cache.k.shape[2]
+        write = (pos % S_max).astype(jnp.int32)
+        kpos = jnp.where(jnp.arange(S_max) == write, pos,
+                         cache.kpos).astype(jnp.int32)
+
+        def step(carry, xs):
+            h = carry
+            layer_p, kc, vc = xs
+            xa = apply_norm(cfg, layer_p["ln1"], h)
+            o, kc, vc = decode_attention(cfg, layer_p["attn"], xa, kc, vc,
+                                         pos, kpos)
+            h = h + o
+            h = h + mlp(cfg, layer_p["mlp"], apply_norm(cfg, layer_p["ln2"], h))
+            return h, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(step, x, (params["layers"],
+                                             cache.k, cache.v))
+        logits = self.unembed(params, x)
+        return logits, DecodeCache(k=ks, v=vs, kpos=kpos, extras={})
+
+    # ------------------------------------------------------------- shapes --
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        B, S = cell.global_batch, cell.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": tok}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": self.cache_specs(B, self.cache_len(cell))}
+
+    def input_axes(self, cell: ShapeCell) -> Dict[str, Any]:
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": ("batch", "seq")}
+        return {"tokens": ("batch", None), "pos": (),
+                "cache": self.cache_axes()}
+
+    # FLOPs bookkeeping for the roofline (MODEL_FLOPS = 6·N·D dense)
+    def model_flops(self, cell: ShapeCell) -> float:
+        N = self.n_active_params()
+        if cell.kind == "train":
+            return 6.0 * N * cell.global_batch * cell.seq_len
+        if cell.kind == "prefill":
+            return 2.0 * N * cell.global_batch * cell.seq_len
+        return 2.0 * N * cell.global_batch  # one decoded token per request

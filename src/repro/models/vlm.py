@@ -1,0 +1,118 @@
+"""InternVL2-26b-shaped VLM (arXiv:2404.16821). The InternViT frontend is a
+STUB per the assignment: ``input_specs()`` provides precomputed patch
+embeddings (B, vis_tokens, vis_dim). A 2-layer MLP projector maps them into
+the LM embedding space; they become a non-causal-loss prefix ahead of the
+text tokens, and the InternLM2-style backbone (GQA, swiglu) runs causally
+over [prefix, text]. Text length is seq_len - vis_tokens so the total
+sequence matches the assigned shape cell exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.common import ParamSpec
+from repro.models.transformer import (DecodeCache, TransformerLM,
+                                      softmax_xent)
+from repro.sharding import hint
+
+
+class VlmLM(TransformerLM):
+    """Patch-prefix VLM over the dense transformer backbone."""
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs = super().param_specs()
+        specs["projector"] = {
+            "ln": ParamSpec((cfg.vis_dim,), jnp.float32, "ones", ("vis",)),
+            "w1": ParamSpec((cfg.vis_dim, cfg.d_model), cfg.jdtype,
+                            "scaled", ("vis", "embed")),
+            "w2": ParamSpec((cfg.d_model, cfg.d_model), cfg.jdtype,
+                            "scaled", ("embed", "embed")),
+        }
+        return specs
+
+    def text_len(self, cell: ShapeCell) -> int:
+        return cell.seq_len - self.cfg.vis_tokens
+
+    def project_patches(self, params, patches: jax.Array) -> jax.Array:
+        from repro.models.common import rms_norm
+        p = params["projector"]
+        x = rms_norm(patches, p["ln"])
+        x = jnp.einsum("bnv,vd->bnd", x, p["w1"])
+        x = jax.nn.gelu(x.astype(jnp.float32)).astype(x.dtype)
+        x = jnp.einsum("bnd,de->bne", x, p["w2"])
+        return hint(x, ("batch", "seq", "embed"))
+
+    def _embed_multimodal(self, params, batch) -> jax.Array:
+        prefix = self.project_patches(params, batch["patches"])
+        text = self.embed_tokens(params, batch["tokens"])
+        return jnp.concatenate([prefix.astype(text.dtype), text], axis=1)
+
+    def forward(self, params, batch, *, remat: bool = True) -> jax.Array:
+        x = self._embed_multimodal(params, batch)
+        S = x.shape[1]
+        x = self.backbone(params, x, jnp.arange(S), remat=remat)
+        return self.unembed(params, x)
+
+    def loss(self, params, batch, *, remat: bool = True):
+        logits = self.forward(params, batch, remat=remat)
+        n_vis = self.cfg.vis_tokens
+        tokens = batch["tokens"]
+        text_logits = logits[:, n_vis:]
+        targets = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+        loss, denom = softmax_xent(text_logits, targets, mask)
+        return loss, {"loss": loss, "tokens": denom}
+
+    def prefill(self, params, batch, cache_len=None
+                ) -> Tuple[jax.Array, DecodeCache]:
+        """Prefix + prompt in one pass; cache covers both."""
+        cfg = self.cfg
+        x = self._embed_multimodal(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)
+        from repro.models.transformer import (apply_norm, attn_out, mlp,
+                                              project_qkv)
+        from repro.models import common as cm
+
+        def step(carry, layer_p):
+            h = carry
+            xa = apply_norm(cfg, layer_p["ln1"], h)
+            q, k, v = project_qkv(cfg, layer_p["attn"], xa, positions)
+            o = cm.attention_chunked(q, k, v, causal=True,
+                                     qpos=positions, kpos=positions)
+            h = h + attn_out(layer_p["attn"], o)
+            h = h + mlp(cfg, layer_p["mlp"],
+                        apply_norm(cfg, layer_p["ln2"], h))
+            return hint(h, ("batch", "seq", "embed")), (k, v)
+
+        x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+        logits = self.unembed(params, x)
+        from repro.models.transformer import ring_layout
+        ks, vs, kpos = ring_layout(ks, vs, S, cache_len)
+        return logits, DecodeCache(k=ks, v=vs, kpos=kpos, extras={})
+
+    # decode_step inherited: positions already include the prefix offset.
+
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        cfg = self.cfg
+        B = cell.global_batch
+        St = self.text_len(cell)
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": jax.ShapeDtypeStruct((B, St), jnp.int32),
+                    "patches": jax.ShapeDtypeStruct(
+                        (B, cfg.vis_tokens, cfg.vis_dim), cfg.jdtype)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                "cache": self.cache_specs(B, cell.seq_len)}
+
+    def input_axes(self, cell: ShapeCell) -> Dict[str, Any]:
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": ("batch", "seq"),
+                    "patches": ("batch", "seq", "vis")}
+        return {"tokens": ("batch", None), "pos": (),
+                "cache": self.cache_axes()}

@@ -1,0 +1,8 @@
+"""Cluster runtime: heartbeats, failure detection, straggler mitigation,
+elastic re-meshing. The control-plane twin of the JoSS scheduler."""
+from repro.runtime.health import (HealthTracker, HostState,
+                                  SpeculativeLauncher)
+from repro.runtime.elastic import ElasticPlan, plan_elastic_remesh
+
+__all__ = ["HealthTracker", "HostState", "SpeculativeLauncher",
+           "ElasticPlan", "plan_elastic_remesh"]

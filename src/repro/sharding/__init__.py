@@ -1,0 +1,9 @@
+"""Distribution layer: logical axes -> PartitionSpec, hierarchical
+collectives, and the activation-hint mechanism models use."""
+from repro.sharding.partition import (DEFAULT_RULES, Rules, hint,
+                                      logical_to_spec, mesh_axis_size,
+                                      named_sharding, tree_shardings,
+                                      use_rules)
+
+__all__ = ["DEFAULT_RULES", "Rules", "hint", "logical_to_spec",
+           "mesh_axis_size", "named_sharding", "tree_shardings", "use_rules"]

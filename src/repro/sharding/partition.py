@@ -1,0 +1,154 @@
+"""Logical-axis -> PartitionSpec rules with divisibility fallback.
+
+Models declare *logical* axes on every parameter (ParamSpec.axes) and on
+activations (via ``hint``). A ``Rules`` object maps logical names to mesh
+axes; any mapping whose dimension is not divisible by the mesh-axis size
+falls back to replication for that dim (the standard MaxText-style rule).
+
+The active (mesh, rules) pair is installed with ``use_rules`` — models call
+``hint(x, axes)`` unconditionally; outside a ``use_rules`` scope it is a
+no-op, so CPU smoke tests run the exact same model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+
+    table: Tuple[Tuple[str, AxisVal], ...]
+
+    @classmethod
+    def make(cls, mapping: Dict[str, AxisVal]) -> "Rules":
+        return cls(tuple(mapping.items()))
+
+    def get(self, name: Optional[str]) -> AxisVal:
+        if name is None:
+            return None
+        for k, v in self.table:
+            if k == name:
+                return v
+        return None
+
+    def updated(self, **overrides: AxisVal) -> "Rules":
+        d = dict(self.table)
+        d.update(overrides)
+        return Rules(tuple(d.items()))
+
+
+#: the default production rules for the (pod, data, model) mesh.
+#: 'embed'/'mlp_fsdp' etc. are overridden per-arch by the launcher.
+DEFAULT_RULES = Rules.make({
+    "batch": ("pod", "data"),
+    "batch_nopod": "data",
+    "seq": None,              # sequence parallelism: override to 'model'
+    "cache_seq": "model",     # flash-decoding: KV cache length sharded
+    "embed": None,
+    "fsdp": "data",           # weight-stationary FSDP axis (when enabled)
+    "vocab": "model",
+    "qkv": "model",           # flattened heads*head_dim weight columns
+    "heads": "model",         # attention-head activations
+    "kv_heads": None,         # GQA kv heads usually < model size -> replicate
+    "mlp": "model",
+    "experts": "model",       # expert parallelism
+    "expert_mlp": None,
+    "layers": None,
+    "state": None,            # recurrent state channels
+    "frontend": None,
+    "vis": None,
+})
+
+
+def mesh_axis_size(mesh: Mesh, axis: AxisVal) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.axis_names else 1
+    n = 1
+    for a in axis:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def logical_to_spec(mesh: Mesh, rules: Rules,
+                    axes: Sequence[Optional[str]],
+                    shape: Optional[Sequence[int]] = None) -> P:
+    """Build a PartitionSpec, dropping mappings that don't divide the dim."""
+    out = []
+    used: set = set()
+    names = set(mesh.axis_names)
+    for i, name in enumerate(axes):
+        axis = rules.get(name)
+        if axis is not None:
+            flat = tuple(a for a in ((axis,) if isinstance(axis, str)
+                                     else tuple(axis)) if a in names)
+            axis = (flat[0] if len(flat) == 1 else flat) if flat else None
+        if axis is not None:
+            if any(a in used for a in flat):
+                axis = None  # a mesh axis may appear at most once in a spec
+            elif shape is not None and shape[i] % mesh_axis_size(mesh, axis):
+                axis = None  # divisibility fallback -> replicate
+            else:
+                used.update(flat)
+        out.append(axis)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, rules: Rules,
+                   axes: Sequence[Optional[str]],
+                   shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, rules, axes, shape))
+
+
+def tree_shardings(mesh: Mesh, rules: Rules, axes_tree, shape_tree=None):
+    """Map a tree of logical-axes tuples (+ aligned shapes) to shardings."""
+    if shape_tree is None:
+        return jax.tree_util.tree_map(
+            lambda ax: named_sharding(mesh, rules, ax),
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        lambda ax, sds: named_sharding(mesh, rules, ax, sds.shape),
+        axes_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ------------------------------------------------------------- hint scope --
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "active_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Rules):
+    """Install (mesh, rules) so model-internal ``hint`` calls bind to it."""
+    tok = _ACTIVE.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def hint(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside use_rules."""
+    active = _ACTIVE.get()
+    if active is None:
+        return x
+    mesh, rules = active
+    spec = logical_to_spec(mesh, rules, axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def current_rules() -> Optional[Tuple[Mesh, Rules]]:
+    return _ACTIVE.get()

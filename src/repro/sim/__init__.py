@@ -1,0 +1,14 @@
+"""Discrete-event simulator of a virtual MapReduce cluster (paper §6).
+
+Validates the JoSS claims (map/reduce locality, INT, JTT/WTT, load balance)
+against FIFO/Fair/Capacity at the paper's scale and beyond (k pods, many
+hosts), without real VPSs. The same JoSS control-plane code that drives the
+JAX data pipeline is exercised here.
+"""
+from repro.sim.cluster_sim import SimConfig, SimResult, Simulator
+from repro.sim.workloads import (PAPER_BENCHMARKS, make_cluster,
+                                 mixed_workload, small_workload)
+from repro.sim.metrics import summarize
+
+__all__ = ["SimConfig", "SimResult", "Simulator", "PAPER_BENCHMARKS",
+           "make_cluster", "mixed_workload", "small_workload", "summarize"]

@@ -1,0 +1,313 @@
+"""Discrete-event simulation of MapReduce execution on a virtual cluster.
+
+Timing model (tenant-visible, matching the paper's three locality levels):
+
+  map duration    = overhead + input/read_bw(locality) + input/map_rate
+  shuffle read    = sum over mapper sources of bytes/read_bw(locality)
+  reduce duration = overhead + shuffle read + reduce_input/reduce_rate
+
+Reduce tasks become *ready* when all map tasks of the job finished (Hadoop's
+shuffle gate, simplified; identical for every algorithm so comparisons are
+fair). Inter-pod bytes (INT) count every off-pod map read and every cross-pod
+shuffle transfer, exactly the paper's INT metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.job import Job, MapTask, ReduceTask, TaskState
+from repro.core.topology import HostId, Locality, VirtualCluster
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """Rates in MB/s, times in seconds; defaults roughly calibrated to the
+    paper's testbed (2-core VPS, SSD, LAN-within-datacenter, WAN across)."""
+
+    disk_bw: float = 400.0      # host-local read
+    pod_bw: float = 110.0       # intra-pod (LAN) per-stream
+    dcn_bw: float = 35.0        # inter-pod (WAN) per-stream
+    map_rate: float = 25.0      # map function processing rate
+    reduce_rate: float = 50.0   # reduce function processing rate
+    task_overhead: float = 1.0  # JVM/task start cost
+    heartbeat: float = 3.0      # slot-offer interval (Hadoop heartbeat)
+    fp_noise: float = 0.0       # relative noise on measured FP
+    # straggler injection: host -> slowdown factor (>1 = slower)
+    slow_hosts: Optional[Dict[HostId, float]] = None
+    # speculative execution (framework feature; off for paper-faithful runs)
+    speculative: bool = False
+    spec_slack: float = 1.8     # relaunch when task exceeds slack * p50 runtime
+
+    def read_bw(self, loc: Locality) -> float:
+        return {Locality.HOST: self.disk_bw, Locality.POD: self.pod_bw,
+                Locality.OFF_POD: self.dcn_bw}[loc]
+
+
+@dataclasses.dataclass
+class TaskLog:
+    job: Job
+    task: object
+    host: HostId
+    start: float
+    finish: float
+    locality: Optional[Locality]  # None for reduce tasks
+    bytes_local: float = 0.0
+    bytes_pod: float = 0.0
+    bytes_offpod: float = 0.0
+    speculative: bool = False
+
+
+@dataclasses.dataclass
+class SimResult:
+    algorithm: str
+    task_logs: List[TaskLog]
+    job_submit: Dict[int, float]
+    job_finish: Dict[int, float]
+    int_bytes: float            # inter-pod traffic (MB)
+    pod_bytes: float            # intra-pod traffic (MB)
+    wtt: float
+    jobs: List[Job]
+    scheduler_decision_time: float = 0.0  # cumulative wall time in scheduler
+
+    def jtt(self, job: Job) -> float:
+        return self.job_finish[job.job_id] - self.job_submit[job.job_id]
+
+
+class Simulator:
+    """Runs one workload under one algorithm. Deterministic given the seed."""
+
+    def __init__(self, cluster: VirtualCluster, algorithm, jobs: List[Job],
+                 config: Optional[SimConfig] = None, seed: int = 0):
+        self.cluster = cluster
+        self.algo = algorithm
+        self.jobs = jobs
+        self.cfg = config or SimConfig()
+        self.rng = np.random.RandomState(seed)
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------------ run --
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        events: List[Tuple[float, int, str, object]] = []
+
+        def push(t, kind, payload):
+            heapq.heappush(events, (t, next(self._seq), kind, payload))
+
+        for job in self.jobs:
+            push(job.submit_time, "submit", job)
+
+        # slot state
+        map_free = {h.hid: h.map_slots for h in self.cluster.hosts()}
+        red_free = {h.hid: h.reduce_slots for h in self.cluster.hosts()}
+        maps_left = {j.job_id: j.m for j in self.jobs}
+        reds_left = {j.job_id: len(j.reduce_tasks) for j in self.jobs}
+        job_by_id = {j.job_id: j for j in self.jobs}
+        # mapper placements for shuffle accounting: job -> [(host, out_bytes)]
+        map_out: Dict[int, List[Tuple[HostId, float]]] = {
+            j.job_id: [] for j in self.jobs}
+        running: Dict[object, TaskLog] = {}
+        task_logs: List[TaskLog] = []
+        job_submit: Dict[int, float] = {}
+        job_finish: Dict[int, float] = {}
+        int_bytes = 0.0
+        pod_bytes = 0.0
+        submitted: set = set()
+        now = 0.0
+        # speculative-execution bookkeeping (straggler mitigation)
+        done_pairs: set = set()              # (job_id, map_index) finished
+        backups: Dict[Tuple[int, int], int] = {}
+        map_durations: List[float] = []
+
+        def ready_reduce(t: ReduceTask) -> bool:
+            return (t.job_id in submitted and maps_left[t.job_id] == 0)
+
+        def host_slow(hid: HostId) -> float:
+            if cfg.slow_hosts:
+                return cfg.slow_hosts.get(hid, 1.0)
+            return 1.0
+
+        def start_map(t: MapTask, hid: HostId, now: float):
+            nonlocal int_bytes, pod_bytes
+            job = job_by_id[t.job_id]
+            size = job.shard_bytes[t.index]
+            if t.shard_id in self.cluster.shard_replicas:
+                _, loc = self.cluster.nearest_replica(t.shard_id, hid)
+            else:
+                loc = Locality.OFF_POD
+            read_t = size / cfg.read_bw(loc)
+            comp_t = size / cfg.map_rate * job.cost_scale
+            dur = (cfg.task_overhead + read_t + comp_t) * host_slow(hid)
+            t.state = TaskState.RUNNING
+            t.host, t.locality = hid, loc
+            log = TaskLog(job, t, hid, now, now + dur, loc)
+            if loc is Locality.POD:
+                log.bytes_pod = size
+                pod_bytes += size
+            elif loc is Locality.OFF_POD:
+                log.bytes_offpod = size
+                int_bytes += size
+            else:
+                log.bytes_local = size
+            running[t.tid] = log
+            map_free[hid] -= 1
+            self.algo.task_started(t)
+            push(now + dur, "map_done", t)
+
+        def start_reduce(t: ReduceTask, hid: HostId, now: float):
+            nonlocal int_bytes, pod_bytes
+            job = job_by_id[t.job_id]
+            fp = job.true_fp
+            r = len(job.reduce_tasks)
+            log = TaskLog(job, t, hid, now, 0.0, None)
+            read_t = 0.0
+            for (src, out_bytes) in map_out[job.job_id]:
+                share = out_bytes * fp / r
+                if src == hid:
+                    log.bytes_local += share
+                    read_t += share / cfg.disk_bw
+                elif src.pod == hid.pod:
+                    log.bytes_pod += share
+                    pod_bytes += share
+                    read_t += share / cfg.pod_bw
+                else:
+                    log.bytes_offpod += share
+                    int_bytes += share
+                    read_t += share / cfg.dcn_bw
+            total_in = (log.bytes_local + log.bytes_pod + log.bytes_offpod)
+            comp_t = total_in / cfg.reduce_rate * job.cost_scale
+            dur = (cfg.task_overhead + read_t + comp_t) * host_slow(hid)
+            t.state = TaskState.RUNNING
+            t.host = hid
+            log.finish = now + dur
+            running[t.tid] = log
+            red_free[hid] -= 1
+            self.algo.task_started(t)
+            push(now + dur, "reduce_done", t)
+
+        all_hosts = [h.hid for h in self.cluster.hosts()]
+
+        def launch_backups(now: float):
+            """MapReduce speculative execution: duplicate a map task that
+            exceeds spec_slack x the median duration onto a free host
+            (another pod preferred) — first copy to finish wins."""
+            if len(map_durations) < 5:
+                return
+            threshold = cfg.spec_slack * float(np.median(map_durations))
+            for log in list(running.values()):
+                t = log.task
+                if not isinstance(t, MapTask):
+                    continue
+                pair = (t.job_id, t.index)
+                if (pair in done_pairs or backups.get(pair, 0) > 0
+                        or now - log.start <= threshold):
+                    continue
+                cands = [h for h in all_hosts
+                         if map_free[h] > 0 and h != log.host]
+                if not cands:
+                    continue
+                cands.sort(key=lambda h: (h.pod == log.host.pod,
+                                          h.pod, h.index))
+                shadow = MapTask(t.job_id, t.index, t.shard_id,
+                                 t.input_bytes, attempt=t.attempt + 1)
+                backups[pair] = backups.get(pair, 0) + 1
+                start_map(shadow, cands[0], now)
+
+        def dispatch(now: float):
+            # heartbeat order is arbitrary in a real cluster; shuffle so no
+            # algorithm benefits from host enumeration order
+            order = list(all_hosts)
+            self.rng.shuffle(order)
+            progress = True
+            while progress:
+                progress = False
+                for hid in order:
+                    while map_free[hid] > 0:
+                        t = self.algo.next_map_task(hid)
+                        if t is None:
+                            break
+                        start_map(t, hid, now)
+                        progress = True
+                    while red_free[hid] > 0:
+                        t = self.algo.next_reduce_task(hid, ready_reduce)
+                        if t is None:
+                            break
+                        start_reduce(t, hid, now)
+                        progress = True
+            if cfg.speculative:
+                launch_backups(now)
+
+        # total outstanding work, to know when the heartbeat chain may stop
+        unfinished = sum(j.m + len(j.reduce_tasks) for j in self.jobs)
+        hb_scheduled = False
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if kind == "hb":
+                hb_scheduled = False
+                dispatch(now)
+                if unfinished > 0:
+                    push(now + cfg.heartbeat, "hb", None)
+                    hb_scheduled = True
+                continue
+            if kind == "submit":
+                job = payload
+                job_submit[job.job_id] = now
+                submitted.add(job.job_id)
+                self.algo.submit(job)
+                if not hb_scheduled:
+                    push(now + cfg.heartbeat, "hb", None)
+                    hb_scheduled = True
+            elif kind == "map_done":
+                t = payload
+                log = running.pop(t.tid)
+                pair = (t.job_id, t.index)
+                if pair in done_pairs:
+                    # a speculative twin already finished this map task
+                    map_free[log.host] += 1
+                    self.algo.task_finished(t)
+                    continue
+                done_pairs.add(pair)
+                t.state = TaskState.DONE
+                log.finish = now
+                log.speculative = t.attempt > 0
+                task_logs.append(log)
+                map_durations.append(log.finish - log.start)
+                job = job_by_id[t.job_id]
+                map_out[job.job_id].append(
+                    (log.host, job.shard_bytes[t.index]))
+                maps_left[t.job_id] -= 1
+                unfinished -= 1
+                map_free[log.host] += 1
+                self.algo.task_finished(t)
+            elif kind == "reduce_done":
+                t = payload
+                log = running.pop(t.tid)
+                t.state = TaskState.DONE
+                log.finish = now
+                task_logs.append(log)
+                reds_left[t.job_id] -= 1
+                unfinished -= 1
+                red_free[log.host] += 1
+                self.algo.task_finished(t)
+                if reds_left[t.job_id] == 0 and maps_left[t.job_id] == 0:
+                    job = job_by_id[t.job_id]
+                    job_finish[job.job_id] = now
+                    fp = job.true_fp
+                    if cfg.fp_noise:
+                        fp *= float(1.0 + cfg.fp_noise
+                                    * self.rng.standard_normal())
+                    self.algo.record_completion(job, max(fp, 0.0))
+            dispatch(now)
+
+        wtt = (max(job_finish.values()) - min(job_submit.values())
+               if job_finish else 0.0)
+        return SimResult(
+            algorithm=getattr(self.algo, "name", type(self.algo).__name__),
+            task_logs=task_logs, job_submit=job_submit,
+            job_finish=job_finish, int_bytes=int_bytes, pod_bytes=pod_bytes,
+            wtt=wtt, jobs=self.jobs)

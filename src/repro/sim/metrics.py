@@ -1,0 +1,94 @@
+"""Metrics of paper §6.1/§6.2: map-data locality (Eqs. 9-11), reduce-data
+locality, INT, JTT (+ normalized, Table 8), WTT, VPS load (Tables 9-10),
+cumulative completion (Fig. 15)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.job import MapTask
+from repro.core.topology import Locality
+from repro.sim.cluster_sim import SimResult
+
+
+@dataclasses.dataclass
+class LocalityRates:
+    vps: float      # Eq. (9)
+    cen: float      # Eq. (10)
+    off_cen: float  # Eq. (11)
+
+
+@dataclasses.dataclass
+class Summary:
+    algorithm: str
+    map_locality: Dict[str, LocalityRates]          # per benchmark
+    reduce_locality: Dict[str, float]               # per benchmark
+    int_mb: float
+    avg_jtt: Dict[str, float]                       # per benchmark
+    wtt: float
+    vps_load_mean: float
+    vps_load_std: float
+    completion_curve: List[Tuple[float, float]]     # (time, fraction done)
+
+
+def _bench_of(log) -> str:
+    return log.job.name
+
+
+def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
+              ) -> Summary:
+    maps = [l for l in res.task_logs if isinstance(l.task, MapTask)]
+    reds = [l for l in res.task_logs if not isinstance(l.task, MapTask)]
+    names = benchmarks or sorted({_bench_of(l) for l in res.task_logs})
+
+    map_loc: Dict[str, LocalityRates] = {}
+    for b in names:
+        ls = [l for l in maps if _bench_of(l) == b]
+        n = max(1, len(ls))
+        v = sum(1 for l in ls if l.locality is Locality.HOST) / n
+        c = sum(1 for l in ls if l.locality is Locality.POD) / n
+        map_loc[b] = LocalityRates(v, c, max(0.0, 1.0 - v - c))
+
+    red_loc: Dict[str, float] = {}
+    for b in names:
+        ls = [l for l in reds if _bench_of(l) == b]
+        tot = sum(l.bytes_local + l.bytes_pod + l.bytes_offpod for l in ls)
+        loc = sum(l.bytes_local + l.bytes_pod for l in ls)
+        red_loc[b] = loc / tot if tot > 0 else 1.0
+
+    jtt: Dict[str, float] = {}
+    for b in names:
+        js = [j for j in res.jobs if j.name == b
+              and j.job_id in res.job_finish]
+        jtt[b] = (float(np.mean([res.jtt(j) for j in js])) if js else 0.0)
+
+    per_host: Dict[object, int] = {}
+    for l in maps:
+        per_host[l.host] = per_host.get(l.host, 0) + 1
+    loads = np.array(list(per_host.values()), dtype=float)
+
+    finishes = sorted(res.job_finish.values())
+    n_jobs = max(1, len(res.job_finish))
+    curve = [(t, (i + 1) / n_jobs) for i, t in enumerate(finishes)]
+
+    return Summary(
+        algorithm=res.algorithm, map_locality=map_loc,
+        reduce_locality=red_loc, int_mb=res.int_bytes, avg_jtt=jtt,
+        wtt=res.wtt,
+        vps_load_mean=float(loads.mean()) if loads.size else 0.0,
+        vps_load_std=float(loads.std(ddof=0)) if loads.size else 0.0,
+        completion_curve=curve)
+
+
+def normalized_jtt(summaries: List[Summary], reference: str = "joss-t"
+                   ) -> Dict[str, Dict[str, float]]:
+    """Table 8: JTT of each algorithm normalized to the reference."""
+    ref = next(s for s in summaries if s.algorithm == reference)
+    out: Dict[str, Dict[str, float]] = {}
+    for s in summaries:
+        out[s.algorithm] = {
+            b: (s.avg_jtt[b] / ref.avg_jtt[b] if ref.avg_jtt.get(b) else 0.0)
+            for b in s.avg_jtt}
+    return out

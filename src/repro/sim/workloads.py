@@ -1,0 +1,138 @@
+"""Paper workloads (§6, Tables 5-7) and cluster/topology builders.
+
+Five benchmarks with the measured average filtering percentages of Table 5;
+the small workload (300 x ~1 GB jobs, SWIM-like heavy-tailed arrivals with
+mean 27.70 s / std 36.52 s) and the mixed workload (100 jobs of 1/5/12 GB,
+Poisson arrivals with mean 42.26 s). Block size 128 MB, one replica per block
+(paper §6), blocks placed uniformly at random over all hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.job import Job
+from repro.core.topology import HostId, VirtualCluster
+
+MB = 1.0  # all byte quantities in the sim are in MB
+BLOCK_MB = 128.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Benchmark:
+    name: str
+    fp: float          # Table 5 average filtering percentage
+    input_type: str    # input-data classifier verdict
+
+
+# paper Table 5
+PAPER_BENCHMARKS: Dict[str, Benchmark] = {
+    "WC": Benchmark("WC", 1.039, "web"),
+    "SC": Benchmark("SC", 0.569, "web"),
+    "II": Benchmark("II", 1.166, "web"),
+    "Grep": Benchmark("Grep", 0.10, "web"),
+    "Permu": Benchmark("Permu", 3.0, "non-web"),
+}
+
+
+def make_cluster(hosts_per_pod: Sequence[int] = (15, 15), *,
+                 map_slots: int = 1, reduce_slots: int = 1) -> VirtualCluster:
+    """Paper testbed: 2 datacenters (Dallas/Atlanta) x 15 VPS, 1+1 slots."""
+    return VirtualCluster(hosts_per_pod, map_slots=map_slots,
+                          reduce_slots=reduce_slots)
+
+
+def _place_blocks(cluster: VirtualCluster, job_tag: str, n_blocks: int,
+                  rng: np.random.RandomState, replication: int = 1
+                  ) -> List[str]:
+    """Uniform random block placement (HDFS with the paper's 1 replica)."""
+    all_hosts = [h.hid for h in cluster.hosts()]
+    ids = []
+    for b in range(n_blocks):
+        sid = f"{job_tag}/B{b}"
+        picks = rng.choice(len(all_hosts), size=min(replication,
+                                                    len(all_hosts)),
+                           replace=False)
+        cluster.place_shard(sid, [all_hosts[int(p)] for p in picks])
+        ids.append(sid)
+    return ids
+
+
+def _mk_job(cluster: VirtualCluster, bench: Benchmark, size_mb: float,
+            submit_time: float, rng: np.random.RandomState,
+            tag: str, replication: int = 1) -> Job:
+    n_blocks = max(1, int(np.ceil(size_mb / BLOCK_MB)))
+    ids = _place_blocks(cluster, tag, n_blocks, rng, replication)
+    sizes = [BLOCK_MB] * n_blocks
+    sizes[-1] = size_mb - BLOCK_MB * (n_blocks - 1)
+    return Job(name=bench.name, code_key=bench.name,
+               input_type=bench.input_type, shard_ids=ids,
+               shard_bytes=[float(s) for s in sizes], n_reducers=1,
+               true_fp=bench.fp, submit_time=submit_time)
+
+
+def _swim_arrivals(n: int, mean: float, std: float,
+                   rng: np.random.RandomState) -> np.ndarray:
+    """SWIM-like heavy-tailed inter-arrival times matched to (mean, std)
+    via a gamma distribution (Table 6: 27.70 s / 36.52 s)."""
+    theta = std ** 2 / mean
+    k = mean / theta
+    return rng.gamma(k, theta, size=n)
+
+
+def small_workload(cluster: VirtualCluster, seed: int = 7,
+                   n_jobs: int = 300, replication: int = 1) -> List[Job]:
+    """Table 6: 300 x ~1 GB jobs (60 WC / 59 SC / 59 II / 61 Grep / 61 Permu),
+    each 8 map tasks, SWIM-like arrivals."""
+    rng = np.random.RandomState(seed)
+    counts = {"WC": 60, "SC": 59, "II": 59, "Grep": 61, "Permu": 61}
+    scale = n_jobs / 300.0
+    names: List[str] = []
+    for b, c in counts.items():
+        names += [b] * max(1, int(round(c * scale)))
+    names = names[:n_jobs] if len(names) >= n_jobs else names + \
+        ["WC"] * (n_jobs - len(names))
+    rng.shuffle(names)
+    gaps = _swim_arrivals(len(names), 27.70, 36.52, rng)
+    t = np.cumsum(gaps)
+    jobs = []
+    for i, (name, ti) in enumerate(zip(names, t)):
+        jobs.append(_mk_job(cluster, PAPER_BENCHMARKS[name], 1024.0,
+                            float(ti), rng, tag=f"small{i}",
+                            replication=replication))
+    return jobs
+
+
+def mixed_workload(cluster: VirtualCluster, seed: int = 11,
+                   replication: int = 1) -> List[Job]:
+    """Table 7: 64 x 1 GB (26 WC, 20 II, 10 SC, 5 Grep, 3 Permu),
+    19 x 5 GB Permu, 17 x 12 GB (6 WC, 11 II); Poisson arrivals mean 42.26 s."""
+    rng = np.random.RandomState(seed)
+    spec = ([("WC", 1)] * 26 + [("II", 1)] * 20 + [("SC", 1)] * 10
+            + [("Grep", 1)] * 5 + [("Permu", 1)] * 3
+            + [("Permu", 5)] * 19
+            + [("WC", 12)] * 6 + [("II", 12)] * 11)
+    rng.shuffle(spec)
+    gaps = rng.exponential(42.26, size=len(spec))
+    t = np.cumsum(gaps)
+    jobs = []
+    for i, ((name, gb), ti) in enumerate(zip(spec, t)):
+        jobs.append(_mk_job(cluster, PAPER_BENCHMARKS[name], gb * 1024.0,
+                            float(ti), rng, tag=f"mixed{i}",
+                            replication=replication))
+    return jobs
+
+
+def profiling_prelude(cluster: VirtualCluster, seed: int = 3) -> List[Job]:
+    """One tiny job per (benchmark, input-type) submitted ahead of a workload
+    so JoSS's FP registry is warm (the paper's steady state, where H already
+    contains the hash of every recurring job)."""
+    rng = np.random.RandomState(seed)
+    jobs = []
+    for i, bench in enumerate(PAPER_BENCHMARKS.values()):
+        jobs.append(_mk_job(cluster, bench, 2 * BLOCK_MB, float(i),
+                            rng, tag=f"prelude{i}"))
+    return jobs

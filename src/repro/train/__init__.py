@@ -1,0 +1,12 @@
+"""Training substrate: AdamW (+ZeRO-1 state sharding), microbatched
+train_step with remat, int8 error-feedback gradient compression,
+checkpointing, and elastic/fault-tolerance runtime."""
+from repro.train.optimizer import (OptConfig, adamw_init, adamw_update,
+                                   lr_schedule, opt_state_axes)
+from repro.train.step import (TrainConfig, init_train_state,
+                              make_prefill_step, make_serve_step,
+                              make_train_step)
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_schedule",
+           "opt_state_axes", "TrainConfig", "init_train_state",
+           "make_prefill_step", "make_serve_step", "make_train_step"]

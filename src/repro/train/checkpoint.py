@@ -1,0 +1,204 @@
+"""Fault-tolerant checkpointing: atomic, sharded, manifest-committed.
+
+Layout (one directory per step):
+
+    <root>/step_000123/
+        shard_00000.npz     # flattened leaf arrays (this host's slice)
+        ...
+        MANIFEST.json       # written LAST; a checkpoint without a
+                            # manifest is incomplete and ignored
+
+Writes go to ``step_xxx.tmp`` and are renamed only after the manifest is
+fsync'd — a host dying mid-write can never corrupt the latest checkpoint
+(restart resumes from the previous complete step). ``latest_step`` +
+``restore`` give auto-resume; ``AsyncCheckpointer`` overlaps serialization
+with the next train step (the device->host copy is the only sync part).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_NATIVE_KINDS = "biufc"
+
+
+def _encode(a: np.ndarray) -> Tuple[np.ndarray, str]:
+    """npz-safe encoding: non-native dtypes (bf16, fp8) as raw bytes."""
+    a = np.asarray(a)
+    if a.dtype.kind in _NATIVE_KINDS:
+        return a, a.dtype.name
+    raw = np.ascontiguousarray(a).view(np.uint8).reshape(
+        a.shape + (a.dtype.itemsize,))
+    return raw, a.dtype.name
+
+
+def _decode(raw: np.ndarray, dtype_name: str) -> np.ndarray:
+    try:
+        dt = np.dtype(dtype_name)
+    except TypeError:
+        dt = np.dtype(getattr(ml_dtypes, dtype_name))
+    if raw.dtype.kind in _NATIVE_KINDS and raw.dtype.name == dtype_name:
+        return raw
+    return raw.view(dt).reshape(raw.shape[:-1])
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(root: str, step: int, tree, *, shard_leaves: int = 64,
+         extra_meta: Optional[Dict[str, Any]] = None) -> str:
+    """Blocking atomic save. Returns the committed directory."""
+    final = os.path.join(root, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _leaf_paths(tree)
+    manifest: Dict[str, Any] = {
+        "step": step, "n_leaves": len(leaves), "shards": [],
+        "time": time.time(), "meta": extra_meta or {},
+    }
+    for si in range(0, len(leaves), shard_leaves):
+        chunk = leaves[si:si + shard_leaves]
+        fname = f"shard_{si // shard_leaves:05d}.npz"
+        arrays = {}
+        dtypes = {}
+        for k, v in chunk:
+            arrays[k], dtypes[k] = _encode(np.asarray(v))
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["shards"].append(
+            {"file": fname, "keys": [k for k, _ in chunk],
+             "dtypes": dtypes})
+    mpath = os.path.join(tmp, "MANIFEST.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(root: str) -> Optional[int]:
+    """Highest step with a complete (manifest-committed) checkpoint."""
+    if not os.path.isdir(root):
+        return None
+    best = None
+    for name in os.listdir(root):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if not os.path.exists(os.path.join(root, name, "MANIFEST.json")):
+            continue
+        try:
+            step = int(name.split("_")[1])
+        except ValueError:
+            continue
+        best = step if best is None else max(best, step)
+    return best
+
+
+def restore(root: str, tree_like, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like``; returns (tree, step).
+
+    Raises FileNotFoundError if no complete checkpoint exists.
+    """
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {root}")
+    d = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    data: Dict[str, np.ndarray] = {}
+    for sh in manifest["shards"]:
+        with np.load(os.path.join(d, sh["file"])) as z:
+            for k in sh["keys"]:
+                data[k] = _decode(z[k], sh.get("dtypes", {}).get(
+                    k, z[k].dtype.name))
+    flat = jax.tree_util.tree_flatten_with_path(tree_like)
+    paths, treedef = flat
+    leaves = []
+    for path, like in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want = getattr(like, "shape", None)
+        if want is not None and tuple(arr.shape) != tuple(want):
+            raise ValueError(f"leaf {key!r} shape {arr.shape} != {want}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), leaves)
+    return tree, step
+
+
+def gc_old(root: str, keep: int = 3) -> List[str]:
+    """Delete all but the newest ``keep`` complete checkpoints."""
+    if not os.path.isdir(root):
+        return []
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(root)
+        if n.startswith("step_") and not n.endswith(".tmp")
+        and os.path.exists(os.path.join(root, n, "MANIFEST.json")))
+    removed = []
+    for s in steps[:-keep] if keep else steps:
+        p = os.path.join(root, f"step_{s:09d}")
+        shutil.rmtree(p)
+        removed.append(p)
+    return removed
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with training: ``submit`` copies device
+    arrays to host synchronously (cheap) and writes on a worker thread.
+    At most one write in flight; a newer submit waits for the previous."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_committed: Optional[int] = None
+        self._err: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def submit(self, step: int, tree,
+               extra_meta: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            try:
+                save(self.root, step, host_tree, extra_meta=extra_meta)
+                gc_old(self.root, self.keep)
+                self.last_committed = step
+            except BaseException as e:  # noqa: BLE001 - surfaced in wait()
+                self._err = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()

@@ -1,0 +1,54 @@
+"""Int8 gradient compression with error feedback.
+
+At multi-pod scale the cross-pod (DCN) gradient all-reduce is the dominant
+collective; quantizing the cross-pod leg to int8 cuts those bytes 4x
+(bf16->int8 would be 2x; we quantize from the f32 accumulator). Error
+feedback (Seide et al., 1-bit SGD lineage) keeps the quantization noise
+from biasing convergence: the residual of each step is added back before
+the next quantization.
+
+On-real-hardware this wraps the DCN leg of the hierarchical all-reduce; in
+this repo the quantize->dequantize round-trip runs inside train_step (the
+arithmetic is identical; the transport win is accounted in the roofline's
+collective term, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, error_feedback: Optional[Any]
+                        ) -> Tuple[Any, Any]:
+    """Quantize+dequantize each gradient leaf with error feedback.
+
+    Returns (decompressed grads, new error-feedback state)."""
+    if error_feedback is None:
+        error_feedback = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error_feedback)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))

@@ -1,0 +1,147 @@
+"""AdamW in pure JAX with optional ZeRO-1 sharding of optimizer state.
+
+State is a pytree mirroring params: {m, v} in float32 plus a scalar step.
+``zero1_axes`` derives logical axes for m/v that additionally shard the
+largest replicated dim over the 'fsdp' (data) mesh axis — optimizer state
+is the largest memory consumer at scale, and unlike the params it is never
+needed gathered, so ZeRO-1 is free parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.sharding.partition import (Rules, logical_to_spec,
+                                      mesh_axis_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # moment storage dtype: float32, or bfloat16 to halve optimizer-state
+    # memory (the 8-bit-Adam-style lever for the giant MoE archs; math
+    # still runs in f32)
+    state_dtype: str = "float32"
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params, state_dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(state_dtype)
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dt), params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: OptConfig, grads, state, params
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    state_dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:  # no decay on norms/bias
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(state_dt), v.astype(state_dt))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+# --------------------------------------------------------------- sharding --
+def zero1_leaf_axes(spec: ParamSpec, mesh, rules: Rules) -> Tuple:
+    """Axes for one param's m/v: param axes + 'fsdp' on the largest free
+    dim (ZeRO-1). Falls back to the param axes when nothing shards."""
+    fs = mesh_axis_size(mesh, rules.get("fsdp"))
+    if fs <= 1:
+        return spec.axes
+    base = logical_to_spec(mesh, rules, spec.axes, spec.shape)
+    # mesh axes already consumed by the param's own sharding
+    used = set()
+    for entry in base:
+        if entry is None:
+            continue
+        for a in (entry,) if isinstance(entry, str) else entry:
+            used.add(a)
+    fsdp_axis = rules.get("fsdp")
+    flat_fsdp = ((fsdp_axis,) if isinstance(fsdp_axis, str)
+                 else tuple(fsdp_axis or ()))
+    if any(a in used for a in flat_fsdp):
+        return spec.axes
+    # largest dim whose logical axis maps to nothing and divides fs
+    cand = None
+    base_full = list(base) + [None] * (len(spec.shape) - len(base))
+    for i, dim in enumerate(spec.shape):
+        if base_full[i] is None and dim % fs == 0:
+            if cand is None or dim > spec.shape[cand]:
+                cand = i
+    if cand is None:
+        return spec.axes
+    axes = list(spec.axes)
+    axes[cand] = "fsdp"
+    return tuple(axes)
+
+
+def opt_state_axes(param_specs, mesh, rules: Rules, *, zero1: bool = True):
+    """Logical-axes tree for the optimizer state."""
+    def leaf(spec: ParamSpec):
+        return zero1_leaf_axes(spec, mesh, rules) if zero1 else spec.axes
+
+    mv = jax.tree_util.tree_map(
+        leaf, param_specs, is_leaf=lambda s: isinstance(s, ParamSpec))
+    return {"m": mv, "v": jax.tree_util.tree_map(
+        lambda x: x, mv, is_leaf=lambda x: isinstance(x, tuple)),
+        "step": ()}

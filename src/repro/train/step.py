@@ -1,0 +1,107 @@
+"""train_step / serve_step builders: microbatch gradient accumulation,
+remat, optional gradient compression, AdamW update. These are the functions
+the launcher jits with in/out shardings and the dry-run lowers at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    n_micro: int = 1              # gradient-accumulation microbatches
+    remat: bool = True
+    compress_grads: bool = False  # int8 error-feedback (train/compress.py)
+
+
+def _tree_zeros_f32(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_train_step(model, tcfg: TrainConfig = TrainConfig()
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With n_micro > 1 the batch's leading dim is split and grads
+    are accumulated in float32 via lax.scan (bounds activation memory; the
+    production lever for the memory roofline term)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, remat=tcfg.remat)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        n = tcfg.n_micro
+        if n == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                batch)
+
+            def acc(carry, mb):
+                loss_sum, g_acc = carry
+                (loss, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_sum + loss, g_acc), None
+
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc, (jnp.float32(0.0), _tree_zeros_f32(params)), micro)
+            loss = loss_sum / n
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            metrics = {"loss": loss}
+
+        if tcfg.compress_grads:
+            from repro.train.compress import compress_decompress
+            grads, cerr = compress_decompress(grads, opt_state.get("ef"))
+            opt_state = dict(opt_state, ef=cerr)
+
+        ef = opt_state.pop("ef", None) if isinstance(opt_state, dict) else None
+        params, opt_state, opt_metrics = adamw_update(
+            tcfg.opt, grads, opt_state, params)
+        if ef is not None:
+            opt_state["ef"] = ef
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, rng, tcfg: TrainConfig = TrainConfig()):
+    params = model.init(rng)
+    opt_state = adamw_init(params, tcfg.opt.state_dtype)
+    if tcfg.compress_grads:
+        opt_state["ef"] = _tree_zeros_f32(params)
+    return params, opt_state
+
+
+def make_serve_step(model) -> Callable:
+    """serve_step(params, cache, tokens, pos) -> (next_tokens, logits,
+    cache) — one greedy decode step for the whole request batch."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        next_tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tokens, logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(model, cache_len: Optional[int] = None) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, cache_len=cache_len)
+        next_tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tokens, cache
+
+    return prefill_step

@@ -1,0 +1,97 @@
+"""Checkpointing: roundtrip fidelity, atomicity, auto-resume, async, gc."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"params": {"embed": jnp.asarray(rng.randn(16, 8), jnp.float32),
+                       "layers": {"w": jnp.asarray(rng.randn(2, 8, 8),
+                                                   jnp.bfloat16)}},
+            "opt": {"m": jnp.zeros((16, 8)), "step": jnp.int32(7)}}
+
+
+def assert_tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 3, t)
+    restored, step = ckpt.restore(str(tmp_path), t)
+    assert step == 3
+    assert_tree_equal(t, restored)
+
+
+def test_latest_and_resume(tmp_path):
+    t = tree()
+    for s in (1, 5, 9):
+        ckpt.save(str(tmp_path), s, t)
+    assert ckpt.latest_step(str(tmp_path)) == 9
+    _, step = ckpt.restore(str(tmp_path), t)
+    assert step == 9
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 1, t)
+    # simulate a crash mid-write at step 2: directory without manifest
+    broken = tmp_path / "step_000000002"
+    broken.mkdir()
+    (broken / "shard_00000.npz").write_bytes(b"partial garbage")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    _, step = ckpt.restore(str(tmp_path), t)
+    assert step == 1
+
+
+def test_tmp_dir_never_visible(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 4, t)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 1, t)
+    other = tree()
+    other["params"]["embed"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), other)
+
+
+def test_gc_keeps_newest(tmp_path):
+    t = tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, t)
+    removed = ckpt.gc_old(str(tmp_path), keep=2)
+    assert len(removed) == 4
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    _, step = ckpt.restore(str(tmp_path), t)
+    assert step == 5
+
+
+def test_async_checkpointer(tmp_path):
+    t = tree()
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ac.submit(s, t)
+    ac.wait()
+    assert ac.last_committed == 3
+    restored, step = ckpt.restore(str(tmp_path), t)
+    assert step == 3
+    assert_tree_equal(t, restored)
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "nope"), tree())

@@ -1,0 +1,85 @@
+"""§4.1 job classification: Eq. 3 (RH/MH), Eq. 4 (small/large), the FP
+registry (Fig. 4 lines 1-6), and the web/non-web input classifier."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FpRegistry, Job, JobClassifier, JobKind,
+                        VirtualCluster, classify_input_type)
+
+
+def mk_job(m, fp=1.0, name="j", input_type="web"):
+    return Job(name=name, code_key=name, input_type=input_type,
+               shard_ids=[f"{name}/B{i}" for i in range(m)],
+               shard_bytes=[128.0] * m, true_fp=fp)
+
+
+def test_unknown_until_profiled():
+    cluster = VirtualCluster([15, 15])
+    reg = FpRegistry()
+    clf = JobClassifier(cluster, reg)
+    job = mk_job(8, fp=3.0)
+    assert clf.classify(job) is JobKind.UNKNOWN
+    reg.record(job, 3.0)
+    assert clf.classify(mk_job(8, name="j")) is JobKind.SMALL_RH
+
+
+def test_eq3_rh_vs_mh_boundary():
+    """td = k/(k-1) = 2 for two pods; FP just above/below classifies RH/MH."""
+    cluster = VirtualCluster([15, 15])
+    reg = FpRegistry()
+    clf = JobClassifier(cluster, reg)
+    for fp, expect in ((2.01, JobKind.SMALL_RH), (2.0, JobKind.SMALL_MH),
+                       (1.2, JobKind.SMALL_MH)):
+        name = f"job{fp}"
+        j = mk_job(8, fp=fp, name=name)
+        reg.record(j, fp)
+        assert clf.classify(j) is expect, fp
+
+
+def test_eq4_small_vs_large():
+    cluster = VirtualCluster([15, 15])   # N_avg_VPS = 15
+    reg = FpRegistry()
+    clf = JobClassifier(cluster, reg)
+    small = mk_job(15, name="s")
+    large = mk_job(16, name="l")
+    for j in (small, large):
+        reg.record(j, 1.0)
+    assert clf.classify(small) is JobKind.SMALL_MH
+    assert clf.classify(large) is JobKind.LARGE
+
+
+@given(m=st.integers(1, 100), fp=st.floats(0, 10),
+       pods=st.lists(st.integers(1, 40), min_size=2, max_size=6))
+@settings(max_examples=200, deadline=None)
+def test_classification_total(m, fp, pods):
+    """Every profiled job lands in exactly one of the three classes."""
+    cluster = VirtualCluster(pods)
+    reg = FpRegistry()
+    clf = JobClassifier(cluster, reg)
+    j = mk_job(m, fp=fp, name=f"j{m}_{fp}")
+    reg.record(j, fp)
+    kind = clf.classify(j)
+    n_avg = sum(pods) / len(pods)
+    if m <= n_avg:
+        assert kind in (JobKind.SMALL_MH, JobKind.SMALL_RH)
+        assert (kind is JobKind.SMALL_RH) == (fp > cluster.k /
+                                              (cluster.k - 1))
+    else:
+        assert kind is JobKind.LARGE
+
+
+def test_fp_registry_running_average_and_storage():
+    reg = FpRegistry()
+    j = mk_job(4, name="wc")
+    reg.record(j, 1.0)
+    reg.record(j, 2.0)
+    assert reg.fp_of(j) == pytest.approx(1.5)
+    assert reg.storage_bytes == 20  # one record, ~20 bytes (paper §6.3)
+
+
+def test_input_type_classifier():
+    web = "<page><title>X</title><revision><text>hello</text></revision>"
+    txt = "the quick brown fox jumps over the lazy dog " * 20
+    assert classify_input_type(web) == "web"
+    assert classify_input_type(txt) == "non-web"
+    assert classify_input_type("") == "non-web"

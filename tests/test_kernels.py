@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles, interpret=True, swept over shapes
+and dtypes (the per-kernel allclose requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gla_scan import gla_pallas
+from repro.kernels import ops
+from repro.kernels.ref import flash_attention_ref
+from repro.models.recurrence import gla_ref
+
+ATTN_SHAPES = [
+    # (B, H, Sq, Sk, D, block_q, block_k)
+    (1, 1, 128, 128, 32, 64, 64),
+    (2, 4, 256, 256, 64, 128, 128),
+    (1, 2, 128, 384, 64, 64, 128),   # cross: Sk > Sq
+    (2, 3, 64, 64, 16, 64, 64),
+]
+
+
+@pytest.mark.parametrize("B,H,Sq,Sk,D,bq,bk", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_allclose(B, H, Sq, Sk, D, bq, bk, dtype, causal):
+    if causal and Sk != Sq:
+        pytest.skip("causal requires aligned positions here")
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, H, Sq, D), dtype)
+    k = jnp.asarray(rng.randn(B, H, Sk, D), dtype)
+    v = jnp.asarray(rng.randn(B, H, Sk, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True,
+                          block_q=bq, block_k=bk)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=atol, rtol=1e-2)
+
+
+def test_flash_attention_sliding_window():
+    rng = np.random.RandomState(1)
+    B, H, S, D, W = 1, 2, 256, 32, 64
+    q = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=W, interpret=True,
+                          block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=True, window=W)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=1e-2)
+
+
+def test_flash_attention_masked_kpos():
+    """kpos == -1 slots (unwritten cache) must be ignored."""
+    rng = np.random.RandomState(2)
+    B, H, Sq, Sk, D = 1, 1, 64, 128, 32
+    q = jnp.asarray(rng.randn(B, H, Sq, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, H, Sk, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, Sk, D), jnp.float32)
+    kpos = jnp.where(jnp.arange(Sk) < 100, jnp.arange(Sk), -1)
+    qpos = jnp.arange(64) + 36  # queries see all valid keys
+    out = flash_attention(q, k, v, causal=True, qpos=qpos, kpos=kpos,
+                          interpret=True, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=True, qpos=qpos, kpos=kpos)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=1e-2)
+
+
+GLA_SHAPES = [
+    # (B, T, H, K, V, chunk)
+    (1, 64, 1, 8, 8, 16),
+    (2, 128, 3, 16, 32, 32),
+    (1, 256, 2, 64, 64, 64),
+    (2, 96, 2, 16, 16, 32),
+]
+
+
+@pytest.mark.parametrize("B,T,H,K,V,chunk", GLA_SHAPES)
+@pytest.mark.parametrize("use_u", [True, False])
+def test_gla_pallas_allclose(B, T, H, K, V, chunk, use_u):
+    rng = np.random.RandomState(0)
+    r = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    k = jnp.asarray(rng.randn(B, T, H, K), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(B, T, H, V), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.randn(B, T, H, K), jnp.float32
+                                ).clip(-3, 1))
+    u = (jnp.asarray(rng.randn(H, K), jnp.float32) * 0.1) if use_u else None
+    y, s = gla_pallas(r, k, v, logw, u, chunk=chunk, interpret=True)
+    y_ref, s_ref = gla_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(y, y_ref, atol=7e-4, rtol=2e-3)
+    np.testing.assert_allclose(s, s_ref, atol=7e-4, rtol=2e-3)
+
+
+def test_gla_pallas_bf16_values():
+    rng = np.random.RandomState(3)
+    B, T, H, K, V = 1, 64, 2, 16, 16
+    r = jnp.asarray(rng.randn(B, T, H, K), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(B, T, H, K), jnp.bfloat16) * 0.3
+    v = jnp.asarray(rng.randn(B, T, H, V), jnp.bfloat16)
+    logw = -jnp.exp(jnp.asarray(rng.randn(B, T, H, K), jnp.float32
+                                ).clip(-3, 1))
+    y, s = gla_pallas(r, k, v, logw, None, chunk=32, interpret=True)
+    y_ref, s_ref = gla_ref(r, k, v, logw, None)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=0.15, rtol=5e-2)
+
+
+def test_ops_wrapper_gqa_broadcast():
+    """ops.flash_attention accepts model-layout GQA (G < H) inputs."""
+    rng = np.random.RandomState(4)
+    B, S, H, G, D = 2, 128, 8, 2, 32
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, G, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, G, D), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=64, block_k=64)
+    from repro.models.common import attention_ref
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=1e-2)
+
+
+def test_banded_attention_matches_masked_dense():
+    """attention_banded == attention_ref with the same sliding window."""
+    from repro.models.common import attention_banded, attention_ref
+    rng = np.random.RandomState(7)
+    B, S, H, G, D, W = 2, 256, 4, 2, 16, 64
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, G, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, G, D), jnp.float32)
+    out = attention_banded(q, k, v, window=W)
+    ref = attention_ref(q, k, v, causal=True, window=W)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=1e-2)

@@ -1,0 +1,50 @@
+"""Launch-path integration: a real dry-run cell (lower+compile on 512
+placeholder devices) and the roofline pipeline, in a subprocess."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dryrun_cell_compiles(tmp_path):
+    out_json = tmp_path / "cell.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)  # dryrun sets its own 512-device flag
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-3-2b", "--shape", "decode_32k",
+         "--json", str(out_json)],
+        env=env, capture_output=True, text=True, timeout=560, cwd=REPO)
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    rows = json.loads(out_json.read_text())
+    assert rows[0]["status"] == "OK"
+    assert rows[0]["n_devices"] == 256
+    assert rows[0]["dominant"] == "memory"   # decode = cache-read bound
+    assert rows[0]["collective_bytes_per_dev"] > 0
+    assert rows[0]["memory"]["per_device_total"] > 0
+
+
+def test_dryrun_multipod_cell(tmp_path):
+    out_json = tmp_path / "cell_mp.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "rwkv6-7b", "--shape", "long_500k", "--multi-pod",
+         "--json", str(out_json)],
+        env=env, capture_output=True, text=True, timeout=560, cwd=REPO)
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    rows = json.loads(out_json.read_text())
+    assert rows[0]["status"] == "OK"
+    assert rows[0]["n_devices"] == 512
+    assert rows[0]["mesh"] == "2x16x16"
+
+
+def test_skip_cells_are_recorded():
+    from repro.configs import ARCHS
+    skips = [(a, s) for a, c in ARCHS.items() for s in c.skip_shapes]
+    assert len(skips) == 8  # 8 full-attention archs skip long_500k
+    assert all(s == "long_500k" for _, s in skips)
+    assert all(ARCHS[a].skip_reason for a, _ in skips)

@@ -1,0 +1,75 @@
+"""JAX MapReduce engine vs a Python-dict oracle + FP measurements
+(reproducing the paper's Figs. 1-2 qualitative structure)."""
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.mapreduce import JOBS, corpus, local_mapreduce, measure_fp
+from repro.mapreduce.jobs import EMPTY, word_len
+
+
+def python_wordcount(tokens):
+    c = collections.Counter(int(t) for t in tokens if t >= 0)
+    return c
+
+
+def test_wordcount_matches_python_oracle():
+    tok, lng = corpus("non-web", 2048, seed=1)
+    k, v, n = local_mapreduce(JOBS["WC"], jnp.asarray(tok),
+                              jnp.asarray(lng))
+    got = {int(kk): int(vv) for kk, vv in zip(np.asarray(k), np.asarray(v))
+           if kk != EMPTY}
+    expect = python_wordcount(tok)
+    assert got == dict(expect)
+    assert int(n) == len(expect)
+
+
+def test_grep_counts_pattern_occurrences():
+    from repro.mapreduce.jobs import grep_map_factory, MapReduceSpec
+    tok, lng = corpus("web", 1024, seed=2)
+    pattern = int(tok[10])
+    spec = MapReduceSpec("Grep", grep_map_factory(pattern), 1, False)
+    k, v, n = local_mapreduce(spec, jnp.asarray(tok), jnp.asarray(lng))
+    assert int(v.sum()) == int((tok == pattern).sum())
+
+
+def test_fp_depends_on_input_type():
+    """Paper Figs. 1-2: FP of a benchmark differs by input type, and Grep
+    FP << WC FP <= Permu FP ~= 3."""
+    tok_w, lng_w = corpus("web", 8192, seed=3)
+    tok_t, lng_t = corpus("non-web", 8192, seed=4)
+    fps = {}
+    for name in ("WC", "SC", "Grep", "Permu"):
+        fw = float(measure_fp(JOBS[name], tok_w[None], lng_w[None])[0])
+        ft = float(measure_fp(JOBS[name], tok_t[None], lng_t[None])[0])
+        fps[name] = (fw, ft)
+    assert fps["Grep"][0] < 0.2
+    assert fps["Permu"][0] == pytest.approx(3.0, abs=0.2)
+    assert fps["Permu"][1] == pytest.approx(3.0, abs=0.2)
+    # web vs non-web FP differs markedly for WC (markup length effect)
+    assert abs(fps["WC"][0] - fps["WC"][1]) > 0.1
+
+
+def test_fp_stable_across_shards():
+    """Paper §4.1: per-shard FP std is small relative to the mean for a
+    fixed input type -> the averaged-FP reduction (Eq. 2) is sound."""
+    shards_t, shards_l = [], []
+    for s in range(8):
+        t, l = corpus("web", 4096, seed=100 + s)
+        shards_t.append(t)
+        shards_l.append(l)
+    fps = measure_fp(JOBS["WC"], np.stack(shards_t), np.stack(shards_l))
+    assert float(np.std(fps)) < 0.15 * float(np.mean(fps))
+
+
+def test_word_len_deterministic_and_typed():
+    ids = np.array([1, 1, 70, 70, 200], np.int32)
+    l1, l2 = word_len(ids), word_len(ids)
+    np.testing.assert_array_equal(l1, l2)
+    assert l1[0] == l1[1]
+    # markup ids are long on average (paper Table 2 vs Table 4)
+    markup = word_len(np.arange(0, 64, dtype=np.int32)).mean()
+    content = word_len(np.arange(64, 4096, dtype=np.int32)).mean()
+    assert markup > content

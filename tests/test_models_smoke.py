@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests (reduced same-family configs, real CPU
+fwd/train step) + the decode==forward consistency invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.models import build_model
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def make_batches(cfg, B=2, S=32, seed=1):
+    toks = jnp.asarray(
+        np.random.RandomState(seed).randint(0, cfg.vocab, (B, S + 1)),
+        jnp.int32)
+    batch = {"tokens": toks[:, :S]}
+    full = {"tokens": toks}
+    if cfg.family == "encdec":
+        fr = jnp.asarray(np.random.RandomState(2).randn(
+            B, S, cfg.frontend_dim), jnp.float32)
+        batch["frames"] = fr
+        full["frames"] = fr
+    if cfg.family == "vlm":
+        pt = jnp.asarray(np.random.RandomState(3).randn(
+            B, cfg.vis_tokens, cfg.vis_dim), jnp.float32)
+        batch["patches"] = pt
+        full["patches"] = pt
+    return batch, full, toks
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_loss(arch):
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch, _, _ = make_batches(cfg)
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b))(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    assert 2.0 < float(loss) < 12.0, (arch, float(loss))
+    logits = model.forward(params, batch, remat=False)
+    assert logits.shape[0] == 2
+    assert logits.shape[-1] == cfg.padded_vocab
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_forward(arch):
+    """prefill(S tokens) + decode_step(token S) == forward(S+1 tokens)."""
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch, full, toks = make_batches(cfg, B=B, S=S)
+    vis = cfg.vis_tokens if cfg.family == "vlm" else 0
+    logits_full = model.forward(params, full, remat=False)
+    logits_pf, cache = model.prefill(params, batch, cache_len=S + vis + 4)
+    pos = S + vis
+    lg, _ = model.decode_step(params, cache, toks[:, S:S + 1],
+                              jnp.int32(pos))
+    err = float(jnp.max(jnp.abs(logits_full[:, pos] - lg[:, 0])))
+    err_pf = float(jnp.max(jnp.abs(logits_full[:, pos - 1]
+                                   - logits_pf[:, -1])))
+    assert err < 2e-2, (arch, err)
+    assert err_pf < 2e-2, (arch, err_pf)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_two_decode_steps_consistent(arch):
+    """Decoding two tokens sequentially matches the forward oracle."""
+    cfg = get_config(arch).smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    toks = jnp.asarray(np.random.RandomState(5).randint(
+        0, cfg.vocab, (B, S + 2)), jnp.int32)
+    batch = {"tokens": toks[:, :S]}
+    full = {"tokens": toks}
+    if cfg.family == "encdec":
+        fr = jnp.asarray(np.random.RandomState(2).randn(
+            B, S, cfg.frontend_dim), jnp.float32)
+        batch["frames"] = fr
+        full["frames"] = fr
+    if cfg.family == "vlm":
+        pt = jnp.asarray(np.random.RandomState(3).randn(
+            B, cfg.vis_tokens, cfg.vis_dim), jnp.float32)
+        batch["patches"] = pt
+        full["patches"] = pt
+    vis = cfg.vis_tokens if cfg.family == "vlm" else 0
+    ref = model.forward(params, full, remat=False)
+    _, cache = model.prefill(params, batch, cache_len=S + vis + 4)
+    lg1, cache = model.decode_step(params, cache, toks[:, S:S + 1],
+                                   jnp.int32(S + vis))
+    lg2, cache = model.decode_step(params, cache, toks[:, S + 1:S + 2],
+                                   jnp.int32(S + vis + 1))
+    assert float(jnp.max(jnp.abs(ref[:, S + vis] - lg1[:, 0]))) < 2e-2
+    assert float(jnp.max(jnp.abs(ref[:, S + vis + 1] - lg2[:, 0]))) < 2e-2
+
+
+def test_shape_cells_cover_assignment():
+    """The four assigned cells exist with the exact assigned sizes."""
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long500k_skips_are_subquadratic_only():
+    """Every full-attention arch skips long_500k; SSM/hybrid run it."""
+    for name, cfg in ARCHS.items():
+        if name in ("rwkv6-7b", "hymba-1.5b"):
+            assert cfg.supports("long_500k"), name
+        else:
+            assert not cfg.supports("long_500k"), name
+
+
+def test_exact_assigned_configs():
+    """Spot-check the assigned architecture hyperparameters."""
+    q = get_config("qwen2.5-14b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads,
+            q.d_ff, q.vocab) == (48, 5120, 40, 8, 13824, 152064)
+    assert q.qkv_bias
+    a = get_config("arctic-480b")
+    assert (a.n_experts, a.moe_topk, a.moe_dense_residual) == (128, 2, True)
+    d = get_config("dbrx-132b")
+    assert (d.n_experts, d.moe_topk) == (16, 4)
+    h = get_config("hymba-1.5b")
+    assert (h.ssm_state, h.n_heads, h.n_kv_heads) == (16, 25, 5)
+    r = get_config("rwkv6-7b")
+    assert (r.n_layers, r.d_model, r.vocab) == (32, 4096, 65536)
+    w = get_config("whisper-medium")
+    assert (w.encoder_layers, w.n_layers, w.d_model) == (24, 24, 1024)
+    i = get_config("internvl2-26b")
+    assert (i.vis_tokens, i.vis_dim, i.vocab) == (256, 3200, 92553)

@@ -1,0 +1,69 @@
+"""§4.2 scheduling policies, including the paper's Fig. 3 worked example."""
+from repro.core import (Job, VirtualCluster, policy_a, policy_b, policy_c)
+from repro.core.queues import ClusterQueues
+from repro.core.topology import HostId
+
+
+def fig3_cluster_and_job():
+    """Fig. 3 exactly as the paper's §4.2.2 walkthrough implies:
+
+    cen1: {B1, B2, B4} | cen2: {B1, B2, B3, B5} | cen3: {B3, B4, B5, B6}
+    (B6's two replicas both live inside cen3, on different VPSs.)
+    """
+    cluster = VirtualCluster([2, 2, 2])
+    reps = {
+        "B1": [(0, 0), (1, 0)], "B2": [(0, 0), (1, 1)],
+        "B3": [(1, 0), (2, 0)], "B4": [(0, 1), (2, 0)],
+        "B5": [(1, 1), (2, 1)], "B6": [(2, 0), (2, 1)],
+    }
+    for sid, hids in reps.items():
+        cluster.place_shard(sid, [HostId(p, i) for p, i in hids])
+    job = Job(name="Y", code_key="Y", input_type="web",
+              shard_ids=["B1", "B2", "B3", "B4", "B5", "B6"],
+              shard_bytes=[128.0] * 6, n_reducers=2)
+    return cluster, job
+
+
+def test_policy_b_matches_fig3():
+    cluster, job = fig3_cluster_and_job()
+    plan = policy_b(job, cluster, ClusterQueues(3))
+    by_shard = dict(zip(job.shard_ids, plan.map_assignment))
+    # paper: cen2 takes the largest unique set {B1,B2,B3,B5} first ...
+    assert [by_shard[b] for b in ("B1", "B2", "B3", "B5")] == [1, 1, 1, 1]
+    # ... then cen3 takes the remaining {B4, B6} (cen1 has only {B4} left)
+    assert [by_shard[b] for b in ("B4", "B6")] == [2, 2]
+    # all reduce tasks go to the pod with most unique blocks: cen2
+    assert plan.reduce_pod == 1
+    assert plan.policy == "B" and not plan.new_queues
+
+
+def test_policy_a_least_loaded():
+    cluster, job = fig3_cluster_and_job()
+    queues = ClusterQueues(3)
+    queues.pods[0].mq0.extend([object()] * 5)
+    queues.pods[1].mq0.extend([object()] * 2)
+    # pod 2 empty -> least loaded
+    plan = policy_a(job, cluster, queues)
+    assert set(plan.map_assignment) == {2}
+    assert plan.reduce_pod == 2
+    assert plan.policy == "A"
+
+
+def test_policy_c_same_placement_new_queues():
+    cluster, job = fig3_cluster_and_job()
+    b = policy_b(job, cluster, ClusterQueues(3))
+    c = policy_c(job, cluster, ClusterQueues(3))
+    assert c.map_assignment == b.map_assignment
+    assert c.reduce_pod == b.reduce_pod
+    assert c.new_queues and not b.new_queues
+
+
+def test_policy_b_replica_less_shard_falls_back():
+    cluster = VirtualCluster([2, 2])
+    cluster.place_shard("B0", [HostId(0, 0)])
+    job = Job(name="z", code_key="z", input_type="web",
+              shard_ids=["B0", "GONE"], shard_bytes=[128.0, 128.0])
+    plan = policy_b(job, cluster, ClusterQueues(2))
+    assert len(plan.map_assignment) == 2
+    assert plan.map_assignment[0] == 0      # replica-backed
+    assert plan.map_assignment[1] in (0, 1)  # fallback is deterministic

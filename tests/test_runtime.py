@@ -1,0 +1,59 @@
+"""Fault-tolerance runtime: failure detection, speculative launch policy,
+elastic re-mesh planning."""
+import pytest
+
+from repro.core.topology import VirtualCluster
+from repro.runtime import (HealthTracker, HostState, SpeculativeLauncher,
+                           plan_elastic_remesh)
+
+
+def test_health_state_machine():
+    ht = HealthTracker(suspect_after=5, dead_after=10)
+    ht.beat("h1", now=0.0)
+    ht.beat("h2", now=0.0)
+    assert ht.sweep(4.0) == []
+    assert ht.state("h1") is HostState.HEALTHY
+    ht.sweep(6.0)
+    assert ht.state("h1") is HostState.SUSPECT
+    ht.beat("h2", 6.0)
+    dead = ht.sweep(11.0)
+    assert dead == ["h1"]
+    assert ht.state("h2") is HostState.SUSPECT
+    assert ht.alive() == ["h2"]
+    # recovery: a beat resurrects a suspect
+    ht.beat("h2", 12.0)
+    assert ht.state("h2") is HostState.HEALTHY
+
+
+def test_speculative_launcher_policy():
+    sp = SpeculativeLauncher(slack=2.0, min_samples=3, max_backups=1)
+    for i in range(3):
+        sp.task_started(f"t{i}", now=0.0)
+        sp.task_finished(f"t{i}", now=10.0)
+    sp.task_started("slow", now=100.0)
+    assert sp.stragglers(now=115.0) == []      # 15 < 2 * median(10)
+    assert sp.stragglers(now=125.0) == ["slow"]
+    sp.backup_launched("slow")
+    assert sp.stragglers(now=200.0) == []      # max_backups reached
+    sp.task_finished("slow", now=205.0)
+    assert sp.stragglers(now=300.0) == []
+
+
+def test_elastic_plan_reassigns_orphans():
+    cluster = VirtualCluster([4, 4, 4])
+    shard_home = {f"s{i}": i % 3 for i in range(9)}
+    plan = plan_elastic_remesh(cluster, [0, 2], shard_home,
+                               model_parallel=4)
+    # shards homed on dead pod 1 get survivors, balanced
+    orphans = {s for s, h in shard_home.items() if h == 1}
+    assert set(plan.orphan_reassignment) == orphans
+    assert set(plan.orphan_reassignment.values()) <= {0, 2}
+    assert plan.new_td == pytest.approx(2.0)   # k=2 -> td=2
+    assert plan.new_n_avg == pytest.approx(4.0)
+    assert plan.batch_scale == pytest.approx(2 / 3)
+
+
+def test_elastic_single_pod_td_infinite():
+    cluster = VirtualCluster([4, 4])
+    plan = plan_elastic_remesh(cluster, [1], {}, model_parallel=2)
+    assert plan.new_td == float("inf")  # k=1: everything is "MH"/local

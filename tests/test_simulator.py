@@ -1,0 +1,111 @@
+"""Discrete-event simulator: reproduces the paper's §6 claims at reduced
+scale, plus framework-level invariants (conservation, determinism,
+straggler mitigation)."""
+import numpy as np
+import pytest
+
+from repro.core.job import MapTask
+from repro.core.topology import Locality
+from repro.sim.cluster_sim import SimConfig, Simulator
+from repro.sim.experiment import run_comparison, run_one
+from repro.sim.metrics import summarize
+
+N_JOBS = 40  # reduced small-workload (full 300 runs in benchmarks/)
+
+
+@pytest.fixture(scope="module")
+def small_results():
+    return run_comparison("small", n_jobs=N_JOBS, seed=7)
+
+
+def test_all_jobs_complete(small_results):
+    for name in ("joss-t", "joss-j", "fifo"):
+        res = run_one(name, "small", n_jobs=10, seed=3)
+        assert len(res.job_finish) == 10
+        for j in res.jobs:
+            assert j.done()
+
+
+def test_determinism():
+    a = run_one("joss-t", "small", n_jobs=10, seed=5)
+    b = run_one("joss-t", "small", n_jobs=10, seed=5)
+    assert a.int_bytes == b.int_bytes
+    assert a.wtt == b.wtt
+
+
+def test_paper_claim_map_locality(small_results):
+    """Fig. 7: JoSS variants' off-Cen rate ~0 for MH benchmarks, far below
+    the Hadoop baselines."""
+    for bench in ("WC", "SC", "II", "Grep"):
+        for joss in ("joss-t", "joss-j"):
+            off_joss = small_results[joss].map_locality[bench].off_cen
+            assert off_joss <= 0.05, (joss, bench, off_joss)
+        off_fifo = small_results["fifo"].map_locality[bench].off_cen
+        assert off_fifo > 0.05, (bench, off_fifo)
+
+
+def test_paper_claim_reduce_locality(small_results):
+    """Fig. 8: JoSS reduce-data locality = 1.0 for RH jobs (policy A) and
+    above every baseline overall."""
+    for joss in ("joss-t", "joss-j"):
+        assert small_results[joss].reduce_locality["Permu"] == \
+            pytest.approx(1.0)
+    for bench in ("WC", "SC", "II", "Grep", "Permu"):
+        jo = min(small_results["joss-t"].reduce_locality[bench],
+                 small_results["joss-j"].reduce_locality[bench])
+        for base in ("fifo", "fair", "capacity"):
+            assert jo >= small_results[base].reduce_locality[bench] - 1e-9
+
+
+def test_paper_claim_int(small_results):
+    """Fig. 9: JoSS INT far below the baselines (paper: ~1/3)."""
+    for joss in ("joss-t", "joss-j"):
+        for base in ("fifo", "fair", "capacity"):
+            assert small_results[joss].int_mb < \
+                0.75 * small_results[base].int_mb
+
+
+def test_paper_claim_jtt_small_workload(small_results):
+    """Fig. 10 / Table 8: JoSS-T has the best (or tied-best) mean JTT."""
+    mean_jtt = {name: np.mean(list(s.avg_jtt.values()))
+                for name, s in small_results.items()}
+    best = min(mean_jtt.values())
+    assert mean_jtt["joss-t"] <= best * 1.05
+
+
+def test_traffic_conservation():
+    """Every byte is read exactly once per map task: host+pod+off bytes sum
+    to the workload's total input (+ shuffle bytes for reducers)."""
+    res = run_one("joss-t", "small", n_jobs=10, seed=9)
+    maps = [l for l in res.task_logs if isinstance(l.task, MapTask)]
+    total_in = sum(l.bytes_local + l.bytes_pod + l.bytes_offpod
+                   for l in maps)
+    expect = sum(j.s_map for j in res.jobs)
+    assert total_in == pytest.approx(expect, rel=1e-9)
+
+
+def test_slot_capacity_never_exceeded():
+    res = run_one("joss-j", "small", n_jobs=12, seed=11)
+    events = []
+    for l in res.task_logs:
+        kind = "m" if isinstance(l.task, MapTask) else "r"
+        events.append((l.start, 1, kind, l.host))
+        events.append((l.finish, -1, kind, l.host))
+    events.sort(key=lambda e: (e[0], e[1]))
+    load = {}
+    for t, d, kind, host in events:
+        key = (kind, host)
+        load[key] = load.get(key, 0) + d
+        assert load[key] <= 1, f"slot oversubscribed at {t} on {host}"
+
+
+def test_straggler_speculation_reduces_wtt():
+    """A 6x-slow host prolongs the run; speculative execution must win
+    back a significant share (straggler mitigation)."""
+    from repro.core.topology import HostId
+    slow = {HostId(0, 0): 6.0}
+    base = run_one("joss-t", "small", n_jobs=12, seed=13,
+                   config=SimConfig(slow_hosts=slow, speculative=False))
+    spec = run_one("joss-t", "small", n_jobs=12, seed=13,
+                   config=SimConfig(slow_hosts=slow, speculative=True))
+    assert spec.wtt <= base.wtt  # never worse

@@ -1,0 +1,66 @@
+"""Paper §5: the td = k/(k-1) threshold is the worst-case-INT optimizer
+(Eqs. 5-8), verified as a property over job shapes and cluster sizes."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.classifier import (best_threshold, worst_case_traffic_mh,
+                                   worst_case_traffic_rh)
+
+
+def test_threshold_formula():
+    assert best_threshold(2) == 2.0
+    assert best_threshold(3) == 1.5
+    assert abs(best_threshold(10) - 10 / 9) < 1e-12
+
+
+def test_threshold_requires_multiple_pods():
+    with pytest.raises(ValueError):
+        best_threshold(1)
+
+
+@given(k=st.integers(2, 64),
+       s_map=st.floats(1.0, 1e7),
+       fp=st.floats(0.0, 50.0))
+@settings(max_examples=300, deadline=None)
+def test_td_picks_lower_worst_case_traffic(k, s_map, fp):
+    """Classifying by FP > td must choose the side with the smaller
+    worst-case inter-pod traffic (the §5 argument, as a property)."""
+    td = best_threshold(k)
+    tr_rh = worst_case_traffic_rh(s_map)            # policy A worst case
+    tr_mh = worst_case_traffic_mh(s_map, fp, k)     # policy B worst case
+    if fp > td:   # classified RH -> policy A must not be worse
+        assert tr_rh <= tr_mh * (1 + 1e-9)
+    else:         # classified MH -> policy B must not be worse
+        assert tr_mh <= tr_rh * (1 + 1e-9)
+
+
+@given(k=st.integers(2, 64), s_map=st.floats(1.0, 1e7))
+@settings(max_examples=100, deadline=None)
+def test_td_is_the_crossover_point(k, s_map):
+    """At FP = td the two worst cases are exactly equal — td is tight:
+    any other threshold misclassifies some FP region."""
+    td = best_threshold(k)
+    tr_rh = worst_case_traffic_rh(s_map)
+    tr_mh = worst_case_traffic_mh(s_map, td, k)
+    assert tr_rh == pytest.approx(tr_mh, rel=1e-9)
+
+
+@given(k=st.integers(2, 32), fp=st.floats(0.0, 10.0),
+       eps=st.floats(0.01, 0.5))
+@settings(max_examples=200, deadline=None)
+def test_any_other_threshold_is_dominated(k, fp, eps):
+    """A threshold td' != td makes a strictly worse choice for some FP in
+    the gap between td' and td (here: the given fp if it lands there)."""
+    td = best_threshold(k)
+    s_map = 1000.0
+    for td_other in (td * (1 + eps), td * (1 - eps)):
+        lo, hi = sorted((td, td_other))
+        if not (lo < fp <= hi):
+            continue
+        choice_other = "RH" if fp > td_other else "MH"
+        tr = {"RH": worst_case_traffic_rh(s_map),
+              "MH": worst_case_traffic_mh(s_map, fp, k)}
+        choice_opt = "RH" if fp > td else "MH"
+        assert tr[choice_opt] <= tr[choice_other] * (1 + 1e-9)
