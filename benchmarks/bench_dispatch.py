@@ -1,0 +1,134 @@
+"""Beyond-paper: scheduler dispatch throughput, old vs new.
+
+Measures the end-to-end cost of the scheduling hot path at increasing
+cluster sizes, two ways:
+
+  * **assign** — tasks assigned per second when draining a submitted
+    backlog through ``next_map_task`` (per-slot decision cost), indexed
+    fast path vs the retained naive reference (``repro.core.reference``).
+  * **events** — simulator events processed per second for a full
+    discrete-event run, new backlog-gated dispatcher vs the seed's
+    poll-every-host loop (``SimConfig.poll_all_hosts``).
+
+Writes ``BENCH_dispatch.json`` next to the repo root when invoked through
+``benchmarks/run.py`` so future PRs can track the trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import table
+from repro.core.joss import make_algorithm
+from repro.core.reference import make_reference_algorithm
+from repro.sim.cluster_sim import SimConfig, Simulator
+from repro.sim.workloads import (PAPER_BENCHMARKS, _mk_job, make_cluster,
+                                 profiling_prelude, small_workload)
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_dispatch.json")
+
+#: seed-measured operating point, recorded for the claim check below
+SEED_ASSIGN_US_4096 = 8.9
+
+
+def _assign_rate(hosts_per_pod, reference: bool, n_jobs: int = 200,
+                 reps: int = 3) -> float:
+    """Tasks assigned per second draining a submitted backlog (best of N)."""
+    from benchmarks.bench_overhead import _measure
+    _, assign_us, _ = _measure(list(hosts_per_pod), n_jobs=n_jobs,
+                               reference=reference, assign_reps=reps)
+    return 1e6 / max(assign_us, 1e-9)
+
+
+def _event_rate(hosts_per_pod, poll_all: bool, n_jobs: int) -> float:
+    """Simulator events per second for a full run of the small workload."""
+    cluster = make_cluster(hosts_per_pod)
+    jobs = small_workload(cluster, seed=13, n_jobs=n_jobs)
+    algo = make_algorithm("joss-t", cluster)
+    for j in profiling_prelude(cluster):
+        algo.registry.record(j, j.true_fp)
+    cfg = SimConfig(poll_all_hosts=poll_all)
+    # events ~= submits + per-task done events + heartbeats; count the
+    # dominant, workload-determined part (task completions + submits)
+    n_events = n_jobs + sum(j.m + len(j.reduce_tasks) for j in jobs)
+    t0 = time.perf_counter()
+    res = Simulator(cluster, algo, jobs, config=cfg, seed=13).run()
+    dt = time.perf_counter() - t0
+    assert len(res.job_finish) == n_jobs
+    return n_events / dt
+
+
+def run(quick: bool = False) -> str:
+    sweep = [(64, 64), (512, 512)] if quick else \
+        [(64, 64), (256, 256), (512, 512, 512, 512),
+         (1024, 1024, 1024, 1024)]
+    payload: Dict[str, List] = {"assign": [], "events": [],
+                                "seed_assign_us_4096": SEED_ASSIGN_US_4096}
+
+    rows = []
+    for hpp in sweep:
+        n = sum(hpp)
+        new_rate = _assign_rate(hpp, reference=False)
+        old_rate = _assign_rate(hpp, reference=True)
+        rows.append([f"{len(hpp)}x{hpp[0]}", n, old_rate, new_rate,
+                     new_rate / old_rate])
+        payload["assign"].append(
+            {"hosts": n, "pods": len(hpp),
+             "old_tasks_per_s": old_rate, "new_tasks_per_s": new_rate})
+    out = table("Dispatch throughput — task assignment (tasks/s, indexed "
+                "fast path vs naive reference)",
+                ["pods x hosts", "total hosts", "old tasks/s", "new tasks/s",
+                 "speedup"], rows)
+
+    ev_sweep = [(15, 15), (128, 128)] if quick else \
+        [(15, 15), (128, 128), (512, 512)]
+    n_jobs = 30 if quick else 60
+    rows = []
+    for hpp in ev_sweep:
+        n = sum(hpp)
+        new_ev = _event_rate(hpp, poll_all=False, n_jobs=n_jobs)
+        old_ev = _event_rate(hpp, poll_all=True, n_jobs=n_jobs)
+        rows.append([f"{len(hpp)}x{hpp[0]}", n, old_ev, new_ev,
+                     new_ev / old_ev])
+        payload["events"].append(
+            {"hosts": n, "jobs": n_jobs,
+             "old_events_per_s": old_ev, "new_events_per_s": new_ev})
+    out += "\n" + table(
+        "Dispatch throughput — simulator events/s (backlog-gated dispatch "
+        "vs seed poll-all-hosts)",
+        ["pods x hosts", "total hosts", "old events/s", "new events/s",
+         "speedup"], rows)
+
+    largest = payload["assign"][-1]
+    payload["largest_hosts"] = largest["hosts"]
+    payload["assign_us_largest"] = 1e6 / largest["new_tasks_per_s"]
+    payload["quick"] = quick
+    if not quick:
+        # only full sweeps update the committed trajectory; quick CI runs
+        # must not clobber it with partial data
+        try:
+            with open(JSON_PATH, "w") as f:
+                json.dump(payload, f, indent=2)
+            out += ("\n\n[trajectory written to "
+                    f"{os.path.basename(JSON_PATH)}]")
+        except OSError:  # pragma: no cover - read-only checkout
+            pass
+
+    # claim checks: the event engine must not be slower, and at the 4096-
+    # host point the per-slot assign cost must beat the seed's measurement
+    # by >= 10x (ISSUE 1 acceptance; full sweep only)
+    assert rows[-1][4] > 1.0, "event dispatch regressed vs poll-all-hosts"
+    if largest["hosts"] == 4096:
+        new_us = payload["assign_us_largest"]
+        assert new_us * 10 <= SEED_ASSIGN_US_4096, \
+            f"assign fast path below 10x vs seed: {new_us:.2f}us"
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -18,7 +18,7 @@ def main(argv=None) -> int:
                     help="comma-separated section names")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_engine, bench_filtering,
+    from benchmarks import (bench_dispatch, bench_engine, bench_filtering,
                             bench_mixed_workload, bench_overhead,
                             bench_small_workload, bench_threshold)
 
@@ -29,7 +29,8 @@ def main(argv=None) -> int:
         "small": lambda: bench_small_workload.run(
             n_jobs=60 if args.quick else 300),
         "mixed": lambda: bench_mixed_workload.run(),
-        "overhead": lambda: bench_overhead.run(),
+        "overhead": lambda: bench_overhead.run(quick=args.quick),
+        "dispatch": lambda: bench_dispatch.run(quick=args.quick),
         "engine": lambda: bench_engine.run(),
     }
     picked = (args.only.split(",") if args.only else list(sections))

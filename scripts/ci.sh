@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests plus the scheduler-perf claim checks.
+#
+# The benchmark sections assert on the paper's claims AND on the indexed
+# fast path's performance envelope (assign µs/slot at the 4096-host point,
+# dispatch events/s vs the naive reference), so scheduler-perf regressions
+# fail this script rather than landing silently.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark claim checks (quick) =="
+python -m benchmarks.run --quick --only overhead,dispatch,small

@@ -17,10 +17,19 @@ map-data locality" there), so every non-node-local task looks equally
 'rack-local' and the first pending one is taken. Reduce picks take the
 first ready reduce task on whatever slot frees first — no reduce
 placement, exactly the behaviour the paper measures.
+
+The seed rebuilt the pending-task list of every job on every slot offer
+(O(total tasks) per offer). This version keeps per-job pending deques in
+task-index order plus per-(job, host) replica deques, both purged lazily as
+task states flip, so a map pick is amortized O(active jobs) with O(1) work
+per job, and drained jobs are compacted out of the scheduling order. The
+scan-based seed service is retained in ``repro.core.reference`` and covered
+by equivalence tests.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+import collections
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.job import Job, MapTask, ReduceTask, TaskState
 from repro.core.topology import HostId, Locality, VirtualCluster
@@ -28,6 +37,21 @@ from repro.core.topology import HostId, Locality, VirtualCluster
 # node-local first; pod == off-pod (flat-rack blindness of stock Hadoop
 # in a virtual cluster, paper §1/§3)
 _LOC_RANK = {Locality.HOST: 0, Locality.POD: 1, Locality.OFF_POD: 1}
+
+_PENDING = TaskState.PENDING
+
+
+def _purge_peek(dq: Optional[Deque]):
+    """First still-PENDING task of a deque; tasks never return to PENDING,
+    so popped heads are gone for good (lazy tombstones by state)."""
+    if dq is None:
+        return None
+    while dq:
+        t = dq[0]
+        if t.state is _PENDING:
+            return t
+        dq.popleft()
+    return None
 
 
 class GlobalScheduler:
@@ -39,14 +63,39 @@ class GlobalScheduler:
         self.cluster = cluster
         self.jobs: List[Job] = []
         self.running_tasks: Dict[int, int] = {}  # job_id -> running count
+        # indexed pending structures (amortized O(1) per job per offer)
+        self._pending_maps: Dict[int, Deque] = {}
+        self._pending_reds: Dict[int, Deque] = {}
+        self._host_maps: Dict[Tuple[int, HostId], Deque] = {}
+        self._ready: set = set()        # job_ids whose maps all finished
+        self._sched: List[Job] = []     # submission order, drained pruned
+        self._drained: set = set()
 
     # -- scheduling (submission) ------------------------------------------------
     def submit(self, job: Job) -> None:
         self.jobs.append(job)
+        self._sched.append(job)
         self.running_tasks.setdefault(job.job_id, 0)
+        jid = job.job_id
+        self._pending_maps[jid] = collections.deque(job.map_tasks)
+        self._pending_reds[jid] = collections.deque(job.reduce_tasks)
+        replicas = self.cluster.shard_replicas
+        host_maps = self._host_maps
+        for t in job.map_tasks:
+            for hid in replicas.get(t.shard_id, ()):
+                k = (jid, hid)
+                dq = host_maps.get(k)
+                if dq is None:
+                    dq = host_maps[k] = collections.deque()
+                dq.append(t)
 
     def record_completion(self, job: Job, measured_fp: float) -> None:
         """Baselines learn nothing from FP; kept for interface parity."""
+
+    def job_maps_done(self, job_id: int) -> None:
+        """Driver notification: every map of ``job_id`` finished, so its
+        reduce tasks are ready (bypasses the per-task predicate)."""
+        self._ready.add(job_id)
 
     # -- bookkeeping hooks used by the simulator ---------------------------------
     def task_started(self, task) -> None:
@@ -60,33 +109,53 @@ class GlobalScheduler:
     def job_order(self) -> List[Job]:
         raise NotImplementedError
 
+    def _mark_drained(self, job: Job) -> None:
+        jid = job.job_id
+        self._drained.add(jid)
+        self._pending_maps.pop(jid, None)
+        self._pending_reds.pop(jid, None)
+        if len(self._drained) > 32 and len(self._drained) * 4 > len(
+                self._sched):
+            drained = self._drained
+            self._sched = [j for j in self._sched
+                           if j.job_id not in drained]
+            host_maps = self._host_maps
+            for k in [k for k in host_maps if k[0] in drained]:
+                del host_maps[k]
+            self._drained = set()
+
+    def _job_pending_map(self, job: Job) -> Optional[MapTask]:
+        head = _purge_peek(self._pending_maps.get(job.job_id))
+        if head is None and _purge_peek(
+                self._pending_reds.get(job.job_id)) is None:
+            self._mark_drained(job)
+        return head
+
     # -- slot service -------------------------------------------------------------
     def next_map_task(self, host: HostId) -> Optional[MapTask]:
         for job in self.job_order():
-            pending = [t for t in job.map_tasks
-                       if t.state == TaskState.PENDING]
-            if not pending:
+            head = self._job_pending_map(job)
+            if head is None:
                 continue
-            best, best_rank = None, 99
-            for t in pending:
-                if t.shard_id in self.cluster.shard_replicas:
-                    loc = self.cluster.locality_of(t.shard_id, host)
-                else:
-                    loc = Locality.OFF_POD
-                r = _LOC_RANK[loc]
-                if r < best_rank:
-                    best, best_rank = t, r
-                    if r == 0:
-                        break
-            return best
+            # node-local pick within the chosen job, else first pending
+            local = _purge_peek(self._host_maps.get((job.job_id, host)))
+            return local if local is not None else head
         return None
 
     def next_reduce_task(self, host: HostId,
                          ready: Callable[[ReduceTask], bool]
                          ) -> Optional[ReduceTask]:
+        ready_jobs = self._ready
         for job in self.job_order():
-            for t in job.reduce_tasks:
-                if t.state == TaskState.PENDING and ready(t):
+            dq = self._pending_reds.get(job.job_id)
+            head = _purge_peek(dq)
+            if head is None:
+                continue
+            if job.job_id in ready_jobs or ready(head):
+                return head
+            # per-task fallback for non-job-uniform predicates
+            for t in dq:
+                if t.state is _PENDING and ready(t):
                     return t
         return None
 
@@ -97,7 +166,7 @@ class FifoScheduler(GlobalScheduler):
     name = "fifo"
 
     def job_order(self) -> List[Job]:
-        return self.jobs
+        return self._sched
 
 
 class FairScheduler(GlobalScheduler):
@@ -107,7 +176,7 @@ class FairScheduler(GlobalScheduler):
     name = "fair"
 
     def job_order(self) -> List[Job]:
-        return sorted(self.jobs,
+        return sorted(self._sched,
                       key=lambda j: (self.running_tasks.get(j.job_id, 0),
                                      j.submit_time, j.job_id))
 
@@ -132,11 +201,12 @@ class CapacityScheduler(GlobalScheduler):
 
     def job_order(self) -> List[Job]:
         used = {q: 0 for q in range(self.n_queues)}
-        for j in self.jobs:
-            used[self._job_queue[j.job_id]] += self.running_tasks.get(
-                j.job_id, 0)
+        # running tasks of every job ever submitted count against its queue
+        for jid, q in self._job_queue.items():
+            used[q] += self.running_tasks.get(jid, 0)
         q_order = sorted(range(self.n_queues), key=lambda q: (used[q], q))
         out: List[Job] = []
         for q in q_order:
-            out.extend(j for j in self.jobs if self._job_queue[j.job_id] == q)
+            out.extend(j for j in self._sched
+                       if self._job_queue[j.job_id] == q)
         return out

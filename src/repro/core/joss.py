@@ -28,7 +28,14 @@ class Joss:
         self.scheduler = JossScheduler(cluster, registry=registry, td=td)
         self.assigner: BaseAssigner = self.assigner_cls(
             cluster, self.scheduler.queues)
+        if not self.assigner_cls.needs_task_index:
+            # head-only pick (TTA): pod map queues skip per-task indexing
+            self.scheduler.queues.set_map_task_indexing(False)
         self.running_tasks: Dict[int, int] = {}
+        # bind the hot slot-service entry points directly to the assigner:
+        # one Python frame less per slot offer (significant at 4096 hosts)
+        self.next_map_task = self.assigner.next_map_task
+        self.next_reduce_task = self.assigner.next_reduce_task
 
     # -- interface shared with baselines ----------------------------------------
     def submit(self, job: Job) -> None:
@@ -45,6 +52,20 @@ class Joss:
     def task_finished(self, task) -> None:
         self.running_tasks[task.job_id] -= 1
         self.scheduler.gc()
+
+    def job_maps_done(self, job_id: int) -> None:
+        """All maps of ``job_id`` finished: unlock its reduce bucket (the
+        ready-reduce transition happens exactly once per job)."""
+        self.scheduler.queues.mark_job_ready(job_id)
+
+    def has_map_work(self) -> bool:
+        """O(1): any queued-but-unassigned map task anywhere?"""
+        return self.scheduler.queues.map_backlog.n > 0
+
+    def has_ready_reduce(self) -> bool:
+        """O(1): any queued reduce task at all? (readiness gating is the
+        assigner's job; this bounds the driver's polling)"""
+        return self.scheduler.queues.red_backlog.n > 0
 
     def next_map_task(self, host: HostId) -> Optional[MapTask]:
         return self.assigner.next_map_task(host)

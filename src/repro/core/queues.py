@@ -1,60 +1,307 @@
-"""Per-pod task queues (paper §4).
+"""Per-pod task queues (paper §4) — indexed O(1) fast-path edition.
 
 Each pod c owns permanent queues MQ_{c,0} / RQ_{c,0} (small jobs only) plus
 dynamically created per-large-job queues MQ_{c,p}/RQ_{c,q} (policy C), and the
 cluster owns global MQ_FIFO / RQ_FIFO for unprofiled jobs (Fig. 4 lines 4-6).
+
+The seed implementation stored plain deques, so the assigners paid O(n) per
+slot offer (scanning the head job's tasks for locality, ``deque.remove``,
+predicate scans for ready reduces) and ``least_loaded_pod``/``unprocessed``
+re-summed every queue per job submission. This version keeps the same FIFO
+semantics but adds, per ``TaskQueue``:
+
+  * per-job buckets in enqueue order (jobs are always enqueued contiguously:
+    the scheduler extends a queue once per job), so the Hadoop-FIFO "head
+    job" is an O(1) lookup instead of a scan;
+  * per-(job, host) and per-(job, pod) locality indexes built from the
+    cluster's shard-replica map at append time, so a locality-preferring
+    pick is amortized O(1);
+  * lazy tombstone removal: ``remove``/``popleft`` mark a task dead in O(1)
+    and every secondary index purges dead entries only when it touches them;
+  * cached live-length plus chained load counters, so ``unprocessed()`` and
+    ``least_loaded_pod`` never re-sum;
+  * a ready-job transition for reduce queues: ``mark_job_ready`` moves a
+    job's pending reduce bucket into a ready heap exactly once (keyed by
+    enqueue order), replacing the per-task predicate scan.
+
+Tasks are tracked by ``id()`` so arbitrary payload objects (tests enqueue
+plain sentinels for load accounting) remain supported.
 """
 from __future__ import annotations
 
 import collections
-from typing import Deque, Dict, List, Optional
+import heapq
+from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.core.job import MapTask, ReduceTask
+
+class LoadCounter:
+    """A shared mutable task counter (pod load / cluster backlog)."""
+
+    __slots__ = ("n",)
+
+    def __init__(self) -> None:
+        self.n = 0
 
 
 class TaskQueue:
-    """FIFO deque of tasks with O(1) append/popleft and removal by id."""
+    """FIFO queue of tasks with O(1) append/popleft/removal and indexed
+    locality/ready picks. Iteration yields live tasks in enqueue order."""
 
-    def __init__(self, name: str):
+    __slots__ = ("name", "_q", "_live", "_len", "_jobs", "_job_tasks",
+                 "_job_keys", "_job_serial", "_serial", "_ready", "_rheap",
+                 "_cluster", "_counters", "_hidx", "_pidx", "_indexed")
+
+    def __init__(self, name: str, cluster=None,
+                 counters: Tuple[LoadCounter, ...] = (),
+                 index_tasks: bool = True):
         self.name = name
-        self._q: Deque = collections.deque()
+        #: False = "light mode": plain FIFO with counters only, for queues
+        #: that are only ever served head-first (TTA pod map queues); the
+        #: job/locality indexes are neither built nor maintained.
+        self._indexed = index_tasks
+        self._q: Deque = collections.deque()    # live + tombstoned tasks
+        self._live: set = set()                 # id(task) of live tasks
+        self._len = 0
+        # job_id -> live count, in first-enqueue order (dicts are ordered);
+        # a queue receives each job's tasks in one contiguous extend, so
+        # insertion order == queue order of the job's first task.
+        self._jobs: Dict[object, int] = {}
+        self._job_tasks: Dict[object, Deque] = {}
+        self._job_keys: Dict[object, List] = {}   # index keys for cleanup
+        self._job_serial: Dict[object, int] = {}
+        self._serial = 0
+        self._ready: set = set()                  # job_ids marked ready
+        self._rheap: List[Tuple[int, object]] = []  # (enqueue serial, job)
+        self._cluster = cluster
+        self._counters = tuple(counters)
+        self._hidx: Dict = {}   # (job_id, HostId) -> deque (host-local)
+        self._pidx: Dict = {}   # (job_id, pod)    -> deque (pod-local)
 
+    # -- mutation -------------------------------------------------------------
     def append(self, task) -> None:
         self._q.append(task)
+        self._live.add(id(task))
+        self._len += 1
+        for c in self._counters:
+            c.n += 1
+        if not self._indexed:
+            return
+        jid = getattr(task, "job_id", None)
+        if jid is None:
+            return
+        jobs = self._jobs
+        if jid in jobs:
+            jobs[jid] += 1
+        else:
+            jobs[jid] = 1
+            self._job_tasks[jid] = collections.deque()
+            self._job_keys[jid] = []
+            self._job_serial[jid] = self._serial
+            self._serial += 1
+        self._job_tasks[jid].append(task)
+        sid = getattr(task, "shard_id", None)
+        cl = self._cluster
+        if sid is not None and cl is not None:
+            reps = cl.shard_replicas.get(sid)
+            if reps:
+                keys = self._job_keys[jid]
+                hidx, pidx = self._hidx, self._pidx
+                seen_pods = set()
+                for hid in reps:
+                    k = (jid, hid)
+                    dq = hidx.get(k)
+                    if dq is None:
+                        dq = hidx[k] = collections.deque()
+                        keys.append(("h", k))
+                    dq.append(task)
+                    if hid.pod not in seen_pods:
+                        seen_pods.add(hid.pod)
+                        pk = (jid, hid.pod)
+                        pq = pidx.get(pk)
+                        if pq is None:
+                            pq = pidx[pk] = collections.deque()
+                            keys.append(("p", pk))
+                        pq.append(task)
 
     def extend(self, tasks) -> None:
-        self._q.extend(tasks)
+        for t in tasks:
+            self.append(t)
+
+    def _discard(self, task) -> None:
+        """O(1) tombstone removal; secondary indexes purge lazily."""
+        self._live.discard(id(task))
+        self._len -= 1
+        for c in self._counters:
+            c.n -= 1
+        # amortized compaction: indexed picks never pop _q, so without this
+        # a long-lived permanent queue would retain every task ever seen
+        dead = len(self._q) - self._len
+        if dead > 64 and dead > self._len:
+            live = self._live
+            self._q = collections.deque(
+                t for t in self._q if id(t) in live)
+        if not self._indexed:
+            return
+        jid = getattr(task, "job_id", None)
+        if jid is None:
+            return
+        n = self._jobs[jid] - 1
+        if n:
+            self._jobs[jid] = n
+        else:
+            del self._jobs[jid]
+            del self._job_tasks[jid]
+            for kind, k in self._job_keys.pop(jid, ()):
+                (self._hidx if kind == "h" else self._pidx).pop(k, None)
+            self._ready.discard(jid)
+            self._job_serial.pop(jid, None)
 
     def popleft(self):
-        return self._q.popleft()
+        q, live = self._q, self._live
+        while q:
+            t = q.popleft()
+            if id(t) in live:
+                self._discard(t)
+                return t
+        raise IndexError("pop from an empty TaskQueue")
 
     def peek(self):
-        return self._q[0] if self._q else None
+        q, live = self._q, self._live
+        while q:
+            t = q[0]
+            if id(t) in live:
+                return t
+            q.popleft()
+        return None
 
     def remove(self, task) -> None:
-        self._q.remove(task)
+        if id(task) not in self._live:
+            raise ValueError("task not in queue")
+        self._discard(task)
 
+    # -- introspection --------------------------------------------------------
     def __len__(self) -> int:
-        return len(self._q)
+        return self._len
 
     def __iter__(self):
-        return iter(self._q)
+        live = self._live
+        return (t for t in self._q if id(t) in live)
 
     def __bool__(self) -> bool:
-        return bool(self._q)
+        return self._len > 0
+
+    def head_job(self):
+        """job_id of the earliest-enqueued job with live tasks (O(1))."""
+        for jid in self._jobs:
+            return jid
+        return None
+
+    def _peek_live(self, dq):
+        """First live task of an index deque, purging tombstones."""
+        live = self._live
+        while dq:
+            t = dq[0]
+            if id(t) in live:
+                return t
+            dq.popleft()
+        return None
+
+    # -- indexed map picks ----------------------------------------------------
+    def peek_local(self, jid, hid):
+        dq = self._hidx.get((jid, hid))
+        return None if dq is None else self._peek_live(dq)
+
+    def peek_pod(self, jid, pod: int):
+        dq = self._pidx.get((jid, pod))
+        return None if dq is None else self._peek_live(dq)
+
+    def peek_job_head(self, jid):
+        dq = self._job_tasks.get(jid)
+        return None if dq is None else self._peek_live(dq)
+
+    def pick_local(self, jid, hid):
+        t = self.peek_local(jid, hid)
+        if t is not None:
+            self._discard(t)
+        return t
+
+    def pick_pod(self, jid, pod: int):
+        t = self.peek_pod(jid, pod)
+        if t is not None:
+            self._discard(t)
+        return t
+
+    def pick_job_head(self, jid):
+        t = self.peek_job_head(jid)
+        if t is not None:
+            self._discard(t)
+        return t
+
+    # -- ready-reduce transition ----------------------------------------------
+    def mark_job_ready(self, jid) -> None:
+        """Move job ``jid``'s pending reduce bucket to the ready heap (once).
+
+        Readiness is monotone (all maps of the job finished), so a marked
+        job never reverts; drained jobs are purged from the heap lazily.
+        """
+        if jid in self._jobs and jid not in self._ready:
+            self._ready.add(jid)
+            heapq.heappush(self._rheap, (self._job_serial[jid], jid))
+
+    def pick_ready(self, ready, trust_marks: bool = False):
+        """First ready reduce task in queue order.
+
+        ``ready`` must be job-uniform (all reduce tasks of a job flip ready
+        together — Hadoop's shuffle gate). With ``trust_marks`` the caller
+        guarantees ``ready(t) == (t.job_id marked via mark_job_ready)`` and
+        the pick is O(log jobs); otherwise jobs are scanned in enqueue order
+        with one predicate call per job.
+        """
+        heap, rset = self._rheap, self._ready
+        while heap and heap[0][1] not in rset:
+            heapq.heappop(heap)
+        if trust_marks:
+            if not heap:
+                return None
+            jid = heap[0][1]
+            t = self._peek_live(self._job_tasks[jid])
+            self._discard(t)
+            return t
+        for jid in self._jobs:
+            t = self._peek_live(self._job_tasks[jid])
+            if t is None:       # pragma: no cover - _jobs implies live tasks
+                continue
+            if jid in rset or ready(t):
+                self._discard(t)
+                return t
+        return None
 
 
 class PodQueues:
     """All map/reduce queues of one pod.
 
     Index 0 is the permanent queue; indices >= 1 are per-large-job queues
-    created by policy C and garbage-collected when drained.
+    created by policy C and garbage-collected when drained. Load is kept in
+    cached counters (``map_load``/``red_load``) updated on every queue
+    mutation, so ``unprocessed()`` is O(1).
     """
 
-    def __init__(self, pod: int):
+    def __init__(self, pod: int, cluster=None,
+                 map_backlog: Optional[LoadCounter] = None,
+                 red_backlog: Optional[LoadCounter] = None):
         self.pod = pod
-        self.map_queues: List[TaskQueue] = [TaskQueue(f"MQ[{pod},0]")]
-        self.reduce_queues: List[TaskQueue] = [TaskQueue(f"RQ[{pod},0]")]
+        self._cluster = cluster
+        self.index_map_tasks = True   # False once a head-only assigner owns us
+        self.map_load = LoadCounter()
+        self.red_load = LoadCounter()
+        self._map_counters = tuple(
+            c for c in (self.map_load, map_backlog) if c is not None)
+        self._red_counters = tuple(
+            c for c in (self.red_load, red_backlog) if c is not None)
+        self.map_queues: List[TaskQueue] = [
+            TaskQueue(f"MQ[{pod},0]", cluster, self._map_counters)]
+        self.reduce_queues: List[TaskQueue] = [
+            TaskQueue(f"RQ[{pod},0]", cluster, self._red_counters)]
 
     # -- permanent queues ----------------------------------------------------
     @property
@@ -67,44 +314,101 @@ class PodQueues:
 
     # -- policy C dynamic queues ---------------------------------------------
     def new_map_queue(self) -> TaskQueue:
-        q = TaskQueue(f"MQ[{self.pod},{len(self.map_queues)}]")
+        q = TaskQueue(f"MQ[{self.pod},{len(self.map_queues)}]",
+                      self._cluster, self._map_counters,
+                      index_tasks=self.index_map_tasks)
         self.map_queues.append(q)
         return q
 
     def new_reduce_queue(self) -> TaskQueue:
-        q = TaskQueue(f"RQ[{self.pod},{len(self.reduce_queues)}]")
+        q = TaskQueue(f"RQ[{self.pod},{len(self.reduce_queues)}]",
+                      self._cluster, self._red_counters)
         self.reduce_queues.append(q)
         return q
 
     def gc(self) -> None:
         """Drop drained dynamic queues (keep index 0 forever)."""
-        self.map_queues = [self.map_queues[0]] + [
-            q for q in self.map_queues[1:] if q]
-        self.reduce_queues = [self.reduce_queues[0]] + [
-            q for q in self.reduce_queues[1:] if q]
+        if len(self.map_queues) > 1 and not all(self.map_queues[1:]):
+            self.map_queues = [self.map_queues[0]] + [
+                q for q in self.map_queues[1:] if q]
+        if len(self.reduce_queues) > 1 and not all(self.reduce_queues[1:]):
+            self.reduce_queues = [self.reduce_queues[0]] + [
+                q for q in self.reduce_queues[1:] if q]
 
     # -- load ----------------------------------------------------------------
     def unprocessed(self) -> int:
         """Amount of unprocessed tasks queued at this pod (policy A input)."""
-        return (sum(len(q) for q in self.map_queues)
-                + sum(len(q) for q in self.reduce_queues))
+        return self.map_load.n + self.red_load.n
 
 
 class ClusterQueues:
-    """Queue state for the whole cluster: per-pod queues + global FIFO."""
+    """Queue state for the whole cluster: per-pod queues + global FIFO.
 
-    def __init__(self, k: int):
-        self.pods: Dict[int, PodQueues] = {c: PodQueues(c) for c in range(k)}
-        self.mq_fifo = TaskQueue("MQ_FIFO")
-        self.rq_fifo = TaskQueue("RQ_FIFO")
+    Accepts either a pod count (legacy callers: policy unit tests, the data
+    pipeline) or a ``VirtualCluster``; only the latter enables the per-host
+    locality indexes inside the queues. Cluster-wide map/reduce backlog
+    counters make "is there any assignable work?" an O(1) question for the
+    assigners and the simulator's dispatch loop.
+    """
+
+    def __init__(self, k):
+        cluster = None if isinstance(k, int) else k
+        n_pods = k if cluster is None else cluster.k
+        self.cluster = cluster
+        self.map_backlog = LoadCounter()
+        self.red_backlog = LoadCounter()
+        self.pods: Dict[int, PodQueues] = {
+            c: PodQueues(c, cluster, self.map_backlog, self.red_backlog)
+            for c in range(n_pods)}
+        self.mq_fifo = TaskQueue("MQ_FIFO", cluster, (self.map_backlog,))
+        self.rq_fifo = TaskQueue("RQ_FIFO", cluster, (self.red_backlog,))
+        # job_id -> the queue holding its reduce tasks (ready notifications);
+        # pruned of drained jobs every so often (amortized O(1) per submit)
+        self._reduce_queue_of: Dict[int, TaskQueue] = {}
+        self._reduce_prune_at = 128
+        #: True once a driver delivers maps-done notifications; assigners
+        #: then use the O(log) ready heap instead of the predicate scan.
+        self.notified = False
+
+    def set_map_task_indexing(self, enabled: bool) -> None:
+        """Disable ("light mode") or enable per-task indexing of the pod map
+        queues. Head-only assigners (TTA) never consult the job/locality
+        indexes of pod map queues, so skipping their maintenance roughly
+        halves the per-assignment cost. MQ_FIFO (Hadoop-FIFO locality pick)
+        and all reduce queues stay indexed. Only callable while empty."""
+        for p in self.pods.values():
+            p.index_map_tasks = enabled
+            for q in p.map_queues:
+                if len(q):      # pragma: no cover - misuse guard
+                    raise RuntimeError("cannot re-index a non-empty queue")
+                q._indexed = enabled
+
+    def register_reduce_queue(self, job_id: int, q: TaskQueue) -> None:
+        self._reduce_queue_of[job_id] = q
+        if len(self._reduce_queue_of) >= self._reduce_prune_at:
+            # drop jobs whose reduce bucket has drained (they can never be
+            # marked ready again), so the map stays O(in-flight jobs) and
+            # gc'd policy-C queues are not pinned forever
+            self._reduce_queue_of = {
+                j: rq for j, rq in self._reduce_queue_of.items()
+                if j in rq._jobs}
+            self._reduce_prune_at = max(
+                128, 2 * len(self._reduce_queue_of) + 64)
+
+    def mark_job_ready(self, job_id: int) -> None:
+        """All maps of ``job_id`` finished: its reduces become assignable."""
+        self.notified = True
+        q = self._reduce_queue_of.get(job_id)
+        if q is not None:
+            q.mark_job_ready(job_id)
 
     def least_loaded_pod(self) -> int:
         """cen_w: least unprocessed tasks (Fig. 4 line 9); ties -> lowest id."""
-        return min(self.pods, key=lambda c: (self.pods[c].unprocessed(), c))
+        pods = self.pods
+        return min(pods, key=lambda c: (pods[c].unprocessed(), c))
 
     def total_pending(self) -> int:
-        return (len(self.mq_fifo) + len(self.rq_fifo)
-                + sum(p.unprocessed() for p in self.pods.values()))
+        return self.map_backlog.n + self.red_backlog.n
 
     def gc(self) -> None:
         for p in self.pods.values():

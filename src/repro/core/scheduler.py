@@ -39,7 +39,8 @@ class JossScheduler:
         self.cluster = cluster
         self.registry = registry if registry is not None else FpRegistry()
         self.classifier = JobClassifier(cluster, self.registry, td=td)
-        self.queues = ClusterQueues(cluster.k)
+        # the cluster handle enables the queues' per-host locality indexes
+        self.queues = ClusterQueues(cluster)
         self.records: Dict[int, ScheduleRecord] = {}
         # task -> pod the scheduler planned it for (reduce placement etc.)
         self.planned_pod: Dict[object, int] = {}
@@ -51,6 +52,7 @@ class JossScheduler:
             # lines 4-6: profile via FIFO queues
             self.queues.mq_fifo.extend(job.map_tasks)
             self.queues.rq_fifo.extend(job.reduce_tasks)
+            self.queues.register_reduce_queue(job.job_id, self.queues.rq_fifo)
             rec = ScheduleRecord(job, kind, None)
         else:
             plan = self._plan(job, kind)
@@ -80,7 +82,9 @@ class JossScheduler:
         else:  # policies A/B: permanent queues
             for pod, tasks in by_pod.items():
                 self.queues.pods[pod].mq0.extend(tasks)
-            self.queues.pods[plan.reduce_pod].rq0.extend(job.reduce_tasks)
+            rq = self.queues.pods[plan.reduce_pod].rq0
+            rq.extend(job.reduce_tasks)
+        self.queues.register_reduce_queue(job.job_id, rq)
         for t in job.reduce_tasks:
             self.planned_pod[t.tid] = plan.reduce_pod
 

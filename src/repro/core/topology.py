@@ -82,6 +82,11 @@ class VirtualCluster:
             self.pods.append(Pod(c, hosts))
         # shard id -> list of HostId replicas
         self.shard_replicas: Dict[object, List[HostId]] = {}
+        # precomputed shard -> replica-host set / replica-pod tuple indexes,
+        # maintained by place_shard, so locality_of and the queue locality
+        # indexes are O(1) lookups instead of list scans per judgement
+        self._replica_host_set: Dict[object, frozenset] = {}
+        self._replica_pods: Dict[object, Tuple[int, ...]] = {}
 
     # -- basic shape ---------------------------------------------------------
     @property
@@ -110,13 +115,20 @@ class VirtualCluster:
         """Register a shard's replica locations (HDFS block placement)."""
         if not replicas:
             raise ValueError("a shard needs at least one replica")
-        self.shard_replicas[shard_id] = list(replicas)
-        for hid in replicas:
+        reps = list(replicas)
+        self.shard_replicas[shard_id] = reps
+        self._replica_host_set[shard_id] = frozenset(reps)
+        self._replica_pods[shard_id] = tuple(sorted({h.pod for h in reps}))
+        for hid in reps:
             self.host(hid).local_shards.add(shard_id)
 
     def replica_pods(self, shard_id) -> List[int]:
         """Pods holding at least one replica of shard_id."""
-        return sorted({hid.pod for hid in self.shard_replicas[shard_id]})
+        return list(self._replica_pods[shard_id])
+
+    def replica_hosts(self, shard_id) -> frozenset:
+        """Replica host set of shard_id (empty for unknown shards)."""
+        return self._replica_host_set.get(shard_id, frozenset())
 
     def pods_holding(self, shard_ids: Sequence) -> Dict[int, set]:
         """pod -> set of unique shards (paper: L_c, Fig. 4 line 14)."""
@@ -129,10 +141,9 @@ class VirtualCluster:
     # -- locality judgement --------------------------------------------------
     def locality_of(self, shard_id, hid: HostId) -> Locality:
         """Locality level of reading `shard_id` from host `hid` (paper §1)."""
-        replicas = self.shard_replicas[shard_id]
-        if any(r == hid for r in replicas):
+        if hid in self._replica_host_set[shard_id]:
             return Locality.HOST
-        if any(r.pod == hid.pod for r in replicas):
+        if hid.pod in self._replica_pods[shard_id]:
             return Locality.POD
         return Locality.OFF_POD
 

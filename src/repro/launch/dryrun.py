@@ -136,6 +136,9 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # older jax returns a one-element list of dicts, newer a plain dict
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     model_flops = model.model_flops(cell)
     rl = roofline_from_hlo(hlo, n_dev, model_flops)

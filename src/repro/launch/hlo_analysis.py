@@ -168,13 +168,20 @@ _ARG_SPLIT = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
 
 
 def operand_tokens(instr: Instruction) -> List[str]:
-    """Raw operand tokens of an instruction's call-site argument list."""
+    """Raw operand tokens of an instruction's call-site argument list.
+
+    Modern XLA prints each operand with its inline type, e.g.
+    ``dot(f32[64,128]{1,0} %lhs, f32[128,128]{1,0} %rhs)``, so commas inside
+    ``[dims]`` / ``{layout}`` must not split tokens — only top-level commas
+    of the argument list do.
+    """
     # args start right after "opcode("
     idx = instr.raw.find(instr.opcode + "(")
     if idx < 0:
         return []
     args = instr.raw[idx + len(instr.opcode) + 1:]
-    depth = 1
+    depth = 1           # parentheses (tuple types, nested calls)
+    bracket = 0         # [dims] and {layout}/{replica groups}
     out = []
     cur = []
     for ch in args:
@@ -184,7 +191,11 @@ def operand_tokens(instr: Instruction) -> List[str]:
             depth -= 1
             if depth == 0:
                 break
-        if ch == "," and depth == 1:
+        elif ch in "[{":
+            bracket += 1
+        elif ch in "]}":
+            bracket -= 1
+        if ch == "," and depth == 1 and bracket == 0:
             out.append("".join(cur).strip())
             cur = []
         else:
@@ -194,12 +205,24 @@ def operand_tokens(instr: Instruction) -> List[str]:
     return out
 
 
+def operand_name(token: str) -> str:
+    """Instruction name referenced by an operand token ("" if literal).
+
+    Handles both bare references (``%p0`` / ``p0``) and the inline-typed
+    form (``f32[64]{0} %p0``).
+    """
+    if "%" in token:
+        return token[token.rindex("%") + 1:].split(" ")[0].strip()
+    if "[" in token:   # inline type without a %name: no reference
+        return ""
+    return token.strip().split(" ")[0]
+
+
 def operand_type(token: str, types: Dict[str, str]) -> str:
     """Type of one operand token: inline type or name lookup."""
     if "[" in token:
         return token
-    name = token.strip().lstrip("%").split(" ")[0]
-    return types.get(name, "")
+    return types.get(operand_name(token), "")
 
 
 def _elem_count(type_str: str) -> int:
@@ -225,9 +248,9 @@ def narrow_bytes(token: str, comp: "Computation",
     every bf16 model (EXPERIMENTS.md §Roofline methodology).
     """
     t = operand_type(token, types)
-    if "[" in token:
+    name = operand_name(token)
+    if not name:
         return shape_bytes(t)
-    name = token.strip().lstrip("%").split(" ")[0]
     src = next((i for i in comp.instructions if i.name == name), None)
     if src is None or "convert" not in (src.name + src.opcode):
         return shape_bytes(t)

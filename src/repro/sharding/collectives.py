@@ -74,8 +74,10 @@ def two_hop_all_to_all(x: jax.Array, *, pod_axis: str = "pod",
     Wire effect: per-token DCN crossings drop from one small message per
     (src, dst) rank pair to one aggregated message per pod pair.
     """
-    n_pod = jax.lax.axis_size(pod_axis)
-    n_inner = jax.lax.axis_size(inner_axis)
+    # psum of a literal 1 folds to the axis size (jax.lax.axis_size does
+    # not exist; this is the supported idiom and stays a static int)
+    n_pod = jax.lax.psum(1, pod_axis)
+    n_inner = jax.lax.psum(1, inner_axis)
     rest = x.shape[1:]
     # hop 1 (ICI): exchange so each inner rank holds its column for all pods
     x = x.reshape((n_pod, n_inner) + rest)

@@ -10,6 +10,17 @@ Reduce tasks become *ready* when all map tasks of the job finished (Hadoop's
 shuffle gate, simplified; identical for every algorithm so comparisons are
 fair). Inter-pod bytes (INT) count every off-pod map read and every cross-pod
 shuffle transfer, exactly the paper's INT metric.
+
+Dispatch engine: the seed shuffled and polled EVERY host on every event
+(O(hosts) algo calls per event, ~4096 no-op polls at the scale-sweep
+operating point). The incremental dispatcher below tracks hosts-with-free-
+slots sets plus queued-map / ready-reduce backlog counters, skips dispatch
+outright when there is no assignable work, and offers slots only to
+eligible hosts (still in shuffled order, so no algorithm benefits from host
+enumeration order). It also pushes ``job_maps_done`` notifications into the
+algorithm so ready-reduce transitions are O(1) events instead of per-slot
+predicate scans. ``SimConfig.poll_all_hosts`` restores the seed's
+full-polling loop for old-vs-new benchmarking.
 """
 from __future__ import annotations
 
@@ -42,6 +53,9 @@ class SimConfig:
     # speculative execution (framework feature; off for paper-faithful runs)
     speculative: bool = False
     spec_slack: float = 1.8     # relaunch when task exceeds slack * p50 runtime
+    # seed-style dispatch: shuffle + poll every host on every event (kept
+    # for old-vs-new benchmarking; the indexed dispatcher is the default)
+    poll_all_hosts: bool = False
 
     def read_bw(self, loc: Locality) -> float:
         return {Locality.HOST: self.disk_bw, Locality.POD: self.pod_bw,
@@ -104,6 +118,10 @@ class Simulator:
         # slot state
         map_free = {h.hid: h.map_slots for h in self.cluster.hosts()}
         red_free = {h.hid: h.reduce_slots for h in self.cluster.hosts()}
+        # hosts with at least one free slot of each kind (incremental sets:
+        # dispatch touches only eligible hosts instead of polling all)
+        free_map_hosts = {h for h, n in map_free.items() if n > 0}
+        free_red_hosts = {h for h, n in red_free.items() if n > 0}
         maps_left = {j.job_id: j.m for j in self.jobs}
         reds_left = {j.job_id: len(j.reduce_tasks) for j in self.jobs}
         job_by_id = {j.job_id: j for j in self.jobs}
@@ -118,6 +136,11 @@ class Simulator:
         pod_bytes = 0.0
         submitted: set = set()
         now = 0.0
+        # backlog counters: queued-but-unassigned maps and ready-but-
+        # unassigned reduces; dispatch is a no-op while both are zero
+        map_backlog = 0
+        red_ready_backlog = 0
+        notify_maps_done = getattr(self.algo, "job_maps_done", None)
         # speculative-execution bookkeeping (straggler mitigation)
         done_pairs: set = set()              # (job_id, map_index) finished
         backups: Dict[Tuple[int, int], int] = {}
@@ -154,7 +177,10 @@ class Simulator:
             else:
                 log.bytes_local = size
             running[t.tid] = log
-            map_free[hid] -= 1
+            left = map_free[hid] - 1
+            map_free[hid] = left
+            if left == 0:
+                free_map_hosts.discard(hid)
             self.algo.task_started(t)
             push(now + dur, "map_done", t)
 
@@ -185,7 +211,10 @@ class Simulator:
             t.host = hid
             log.finish = now + dur
             running[t.tid] = log
-            red_free[hid] -= 1
+            left = red_free[hid] - 1
+            red_free[hid] = left
+            if left == 0:
+                free_red_hosts.discard(hid)
             self.algo.task_started(t)
             push(now + dur, "reduce_done", t)
 
@@ -217,9 +246,12 @@ class Simulator:
                 backups[pair] = backups.get(pair, 0) + 1
                 start_map(shadow, cands[0], now)
 
-        def dispatch(now: float):
-            # heartbeat order is arbitrary in a real cluster; shuffle so no
-            # algorithm benefits from host enumeration order
+        host_rank = {hid: i for i, hid in enumerate(all_hosts)}
+        n_hosts = len(all_hosts)
+
+        def naive_dispatch(now: float):
+            # seed dispatcher (kept for old-vs-new benchmarking): shuffle
+            # and poll every host on every event
             order = list(all_hosts)
             self.rng.shuffle(order)
             progress = True
@@ -241,6 +273,51 @@ class Simulator:
             if cfg.speculative:
                 launch_backups(now)
 
+        def dispatch(now: float):
+            # incremental dispatcher: a no-op unless there is assignable
+            # work AND a host with a free slot to offer; each pass touches
+            # only eligible hosts. Heartbeat order is arbitrary in a real
+            # cluster, so eligible hosts are still offered in shuffled
+            # order (no algorithm benefits from host enumeration order).
+            nonlocal map_backlog, red_ready_backlog
+            algo = self.algo
+            while map_backlog or red_ready_backlog:
+                elig = free_map_hosts if map_backlog else free_red_hosts
+                if red_ready_backlog and map_backlog:
+                    elig = free_map_hosts | free_red_hosts
+                if not elig:
+                    break
+                if len(elig) * 8 > n_hosts:
+                    order = [h for h in all_hosts if h in elig]
+                else:
+                    order = sorted(elig, key=host_rank.__getitem__)
+                self.rng.shuffle(order)
+                progress = False
+                for hid in order:
+                    if map_backlog:
+                        while map_free[hid] > 0:
+                            t = algo.next_map_task(hid)
+                            if t is None:
+                                break
+                            map_backlog -= 1
+                            start_map(t, hid, now)
+                            progress = True
+                    if red_ready_backlog:
+                        while red_free[hid] > 0:
+                            t = algo.next_reduce_task(hid, ready_reduce)
+                            if t is None:
+                                break
+                            red_ready_backlog -= 1
+                            start_reduce(t, hid, now)
+                            progress = True
+                if not progress:
+                    break
+            if cfg.speculative:
+                launch_backups(now)
+
+        if cfg.poll_all_hosts:
+            dispatch = naive_dispatch
+
         # total outstanding work, to know when the heartbeat chain may stop
         unfinished = sum(j.m + len(j.reduce_tasks) for j in self.jobs)
         hb_scheduled = False
@@ -259,6 +336,11 @@ class Simulator:
                 job_submit[job.job_id] = now
                 submitted.add(job.job_id)
                 self.algo.submit(job)
+                map_backlog += job.m
+                if maps_left[job.job_id] == 0:  # map-less job: reduces ready
+                    red_ready_backlog += len(job.reduce_tasks)
+                    if notify_maps_done is not None:
+                        notify_maps_done(job.job_id)
                 if not hb_scheduled:
                     push(now + cfg.heartbeat, "hb", None)
                     hb_scheduled = True
@@ -269,6 +351,7 @@ class Simulator:
                 if pair in done_pairs:
                     # a speculative twin already finished this map task
                     map_free[log.host] += 1
+                    free_map_hosts.add(log.host)
                     self.algo.task_finished(t)
                     continue
                 done_pairs.add(pair)
@@ -280,10 +363,17 @@ class Simulator:
                 job = job_by_id[t.job_id]
                 map_out[job.job_id].append(
                     (log.host, job.shard_bytes[t.index]))
-                maps_left[t.job_id] -= 1
+                left = maps_left[t.job_id] - 1
+                maps_left[t.job_id] = left
                 unfinished -= 1
                 map_free[log.host] += 1
+                free_map_hosts.add(log.host)
                 self.algo.task_finished(t)
+                if left == 0:
+                    # shuffle gate opens exactly once per job
+                    red_ready_backlog += len(job.reduce_tasks)
+                    if notify_maps_done is not None:
+                        notify_maps_done(t.job_id)
             elif kind == "reduce_done":
                 t = payload
                 log = running.pop(t.tid)
@@ -293,6 +383,7 @@ class Simulator:
                 reds_left[t.job_id] -= 1
                 unfinished -= 1
                 red_free[log.host] += 1
+                free_red_hosts.add(log.host)
                 self.algo.task_finished(t)
                 if reds_left[t.job_id] == 0 and maps_left[t.job_id] == 0:
                     job = job_by_id[t.job_id]

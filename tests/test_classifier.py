@@ -1,6 +1,9 @@
 """§4.1 job classification: Eq. 3 (RH/MH), Eq. 4 (small/large), the FP
 registry (Fig. 4 lines 1-6), and the web/non-web input classifier."""
 import pytest
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (FpRegistry, Job, JobClassifier, JobKind,
