@@ -24,8 +24,9 @@ from repro.sim.workloads import PAPER_BENCHMARKS, _mk_job
 
 
 def _measure(hosts_per_pod, n_jobs: int = 200, blocks_per_job: int = 8,
-             reference: bool = False, assign_reps: int = 3):
-    cluster = VirtualCluster(hosts_per_pod)
+             reference: bool = False, assign_reps: int = 3,
+             map_slots: int = 1):
+    cluster = VirtualCluster(hosts_per_pod, map_slots=map_slots)
     rng = np.random.RandomState(0)
     algo = (ReferenceJossT if reference else JossT)(cluster)
     for i, bench in enumerate(PAPER_BENCHMARKS.values()):

@@ -18,9 +18,10 @@ def main(argv=None) -> int:
                     help="comma-separated section names")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_dispatch, bench_engine, bench_filtering,
-                            bench_mixed_workload, bench_overhead,
-                            bench_small_workload, bench_threshold)
+    from benchmarks import (bench_dispatch, bench_elastic, bench_engine,
+                            bench_filtering, bench_mixed_workload,
+                            bench_overhead, bench_small_workload,
+                            bench_threshold)
 
     sections = {
         "filtering": lambda: bench_filtering.run(),
@@ -31,6 +32,7 @@ def main(argv=None) -> int:
         "mixed": lambda: bench_mixed_workload.run(),
         "overhead": lambda: bench_overhead.run(quick=args.quick),
         "dispatch": lambda: bench_dispatch.run(quick=args.quick),
+        "elastic": lambda: bench_elastic.run(quick=args.quick),
         "engine": lambda: bench_engine.run(),
     }
     picked = (args.only.split(",") if args.only else list(sections))

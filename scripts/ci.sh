@@ -15,3 +15,9 @@ python -m pytest -x -q
 
 echo "== benchmark claim checks (quick) =="
 python -m benchmarks.run --quick --only overhead,dispatch,small
+
+echo "== elastic-cluster claim checks (quick) =="
+# churn-disabled bit-identity with the static simulator, per-seed
+# determinism under churn, and the no-assignment-to-departed-hosts
+# invariant — all asserted inside the bench
+python -m benchmarks.run --quick --only elastic

@@ -123,6 +123,10 @@ class BaseAssigner:
         self._i_map[host.pod] = i % n
         return None
 
+    # -- elasticity (PR 2) -------------------------------------------------------
+    def host_lost(self, hid: HostId) -> None:
+        """A host departed; assigners keep no per-host state by default."""
+
     # -- reduce slot -------------------------------------------------------------
     def next_reduce_task(self, host: HostId,
                          ready: Callable[[ReduceTask], bool]
@@ -231,6 +235,11 @@ class JTA(BaseAssigner):
     def __init__(self, cluster: VirtualCluster, queues: ClusterQueues):
         super().__init__(cluster, queues)
         self._defers: Dict[object, int] = {}
+
+    def host_lost(self, hid: HostId) -> None:
+        """Drop defer bookkeeping keyed by the departed host (it will never
+        be offered a slot again, so the entries are pure leak)."""
+        self._defers = {k: v for k, v in self._defers.items() if k[0] != hid}
 
     def map_pick(self, queue: TaskQueue, host: HostId,
                  cluster: VirtualCluster) -> Optional[MapTask]:

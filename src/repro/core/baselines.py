@@ -28,6 +28,7 @@ by equivalence tests.
 """
 from __future__ import annotations
 
+import bisect
 import collections
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
@@ -69,12 +70,16 @@ class GlobalScheduler:
         self._host_maps: Dict[Tuple[int, HostId], Deque] = {}
         self._ready: set = set()        # job_ids whose maps all finished
         self._sched: List[Job] = []     # submission order, drained pruned
+        self._in_sched: set = set()     # job_ids currently in _sched
         self._drained: set = set()
+        self._job_by_id: Dict[int, Job] = {}
 
     # -- scheduling (submission) ------------------------------------------------
     def submit(self, job: Job) -> None:
         self.jobs.append(job)
         self._sched.append(job)
+        self._in_sched.add(job.job_id)
+        self._job_by_id[job.job_id] = job
         self.running_tasks.setdefault(job.job_id, 0)
         jid = job.job_id
         self._pending_maps[jid] = collections.deque(job.map_tasks)
@@ -96,6 +101,61 @@ class GlobalScheduler:
         """Driver notification: every map of ``job_id`` finished, so its
         reduce tasks are ready (bypasses the per-task predicate)."""
         self._ready.add(job_id)
+
+    def job_maps_undone(self, job_id: int) -> None:
+        """Elastic only: a departed host lost finished map outputs of
+        ``job_id``; its reduces are no longer ready until the re-runs land."""
+        self._ready.discard(job_id)
+
+    # -- elastic-cluster interface (PR 2) ----------------------------------------
+    def host_added(self, hid: HostId) -> None:
+        """A fresh VPS joined with an empty disk: nothing to index."""
+
+    def host_lost(self, hid: HostId) -> None:
+        """Purge the departed host's node-local replica index entries."""
+        host_maps = self._host_maps
+        for k in [k for k in host_maps if k[1] == hid]:
+            del host_maps[k]
+
+    def _resurrect(self, job: Job) -> None:
+        """Undo drain bookkeeping for a job that got work back (churn).
+
+        A job pruned from ``_sched`` by drain compaction re-enters at its
+        submission-order position, so FIFO (and Capacity's within-queue
+        FIFO) keep strict submission order across churn."""
+        jid = job.job_id
+        self._drained.discard(jid)
+        if jid not in self._in_sched:
+            pos = bisect.bisect_right(
+                self._sched, (job.submit_time, jid),
+                key=lambda j: (j.submit_time, j.job_id))
+            self._sched.insert(pos, job)
+            self._in_sched.add(jid)
+
+    def requeue_map_task(self, task: MapTask) -> None:
+        """Re-execution of a map lost to churn: failed tasks retry first
+        (appendleft), indexed against the shard's surviving replicas."""
+        jid = task.job_id
+        self._resurrect(self._job_by_id[jid])
+        dq = self._pending_maps.get(jid)
+        if dq is None:
+            dq = self._pending_maps[jid] = collections.deque()
+        dq.appendleft(task)
+        host_maps = self._host_maps
+        for hid in self.cluster.shard_replicas.get(task.shard_id, ()):
+            k = (jid, hid)
+            hq = host_maps.get(k)
+            if hq is None:
+                hq = host_maps[k] = collections.deque()
+            hq.append(task)
+
+    def requeue_reduce_task(self, task: ReduceTask) -> None:
+        jid = task.job_id
+        self._resurrect(self._job_by_id[jid])
+        dq = self._pending_reds.get(jid)
+        if dq is None:
+            dq = self._pending_reds[jid] = collections.deque()
+        dq.appendleft(task)
 
     # -- bookkeeping hooks used by the simulator ---------------------------------
     def task_started(self, task) -> None:
@@ -119,6 +179,7 @@ class GlobalScheduler:
             drained = self._drained
             self._sched = [j for j in self._sched
                            if j.job_id not in drained]
+            self._in_sched = {j.job_id for j in self._sched}
             host_maps = self._host_maps
             for k in [k for k in host_maps if k[0] in drained]:
                 del host_maps[k]
@@ -171,14 +232,110 @@ class FifoScheduler(GlobalScheduler):
 
 class FairScheduler(GlobalScheduler):
     """Facebook fair scheduler [19]: equal share over time; we order jobs by
-    fewest running tasks (deficit first), then submission order."""
+    fewest running tasks (deficit first), then submission order.
+
+    The seed re-sorted every job on every slot offer (O(a log a) per offer).
+    This version keeps an activity-keyed priority structure instead: one
+    bucket per running-task count, each bucket a (submit_time, job_id)-sorted
+    list with lazy tombstones. A task start/finish moves exactly one job
+    between adjacent buckets (amortized O(log b) + a memmove), and
+    ``job_order`` reads the order off in O(active jobs) with no sort. The
+    ordering is bit-identical to the seed's sort key — the equivalence tests
+    against ``repro.core.reference.ReferenceFair`` (which retains the
+    sorting implementation) prove it.
+    """
 
     name = "fair"
 
+    def __init__(self, cluster: VirtualCluster):
+        super().__init__(cluster)
+        # running-count -> sorted [(submit_time, job_id, serial)]
+        self._buckets: Dict[int, List[Tuple[float, int, int]]] = {}
+        self._bucket_dead: Dict[int, int] = {}   # count -> tombstones
+        self._entry: Dict[int, Tuple[int, int]] = {}  # jid -> (count, serial)
+        self._eserial = 0
+
+    # -- activity-keyed structure maintenance ---------------------------------
+    def _entry_add(self, job: Job, count: int) -> None:
+        self._eserial += 1
+        rec = (job.submit_time, job.job_id, self._eserial)
+        self._entry[job.job_id] = (count, self._eserial)
+        b = self._buckets.get(count)
+        if b is None:
+            self._buckets[count] = [rec]
+        else:
+            bisect.insort(b, rec)
+
+    def _entry_kill(self, jid: int) -> None:
+        ent = self._entry.pop(jid, None)
+        if ent is None:
+            return
+        count = ent[0]
+        dead = self._bucket_dead.get(count, 0) + 1
+        bucket = self._buckets.get(count)
+        if bucket is not None and dead >= len(bucket):
+            del self._buckets[count]         # fully tombstoned
+            self._bucket_dead.pop(count, None)
+        elif bucket is not None and dead > 16 and dead * 2 > len(bucket):
+            entry = self._entry
+            self._buckets[count] = [
+                r for r in bucket
+                if entry.get(r[1], (None, None))[1] == r[2]]
+            self._bucket_dead.pop(count, None)
+        else:
+            self._bucket_dead[count] = dead
+
+    def _entry_move(self, jid: int, new_count: int) -> None:
+        job = self._job_by_id.get(jid)
+        if job is None or jid not in self._entry:
+            return
+        self._entry_kill(jid)
+        self._entry_add(job, new_count)
+
+    def _job_dead(self, jid: int) -> bool:
+        """A job leaves the structure when it has drained (its pending
+        deques were reaped by ``_mark_drained``, and churn has not requeued
+        work for it) and its last running task finished."""
+        return (jid not in self._pending_maps
+                and jid not in self._pending_reds
+                and self.running_tasks.get(jid, 0) == 0)
+
+    # -- GlobalScheduler hooks ------------------------------------------------
+    def submit(self, job: Job) -> None:
+        super().submit(job)
+        self._entry_add(job, self.running_tasks.get(job.job_id, 0))
+
+    def task_started(self, task) -> None:
+        super().task_started(task)
+        self._entry_move(task.job_id, self.running_tasks[task.job_id])
+
+    def task_finished(self, task) -> None:
+        super().task_finished(task)
+        jid = task.job_id
+        if self._job_dead(jid):
+            self._entry_kill(jid)
+        else:
+            self._entry_move(jid, self.running_tasks[jid])
+
+    def _mark_drained(self, job: Job) -> None:
+        super()._mark_drained(job)
+        if self._job_dead(job.job_id):
+            self._entry_kill(job.job_id)
+
+    def _resurrect(self, job: Job) -> None:
+        super()._resurrect(job)
+        if job.job_id not in self._entry:
+            self._entry_add(job, self.running_tasks.get(job.job_id, 0))
+
     def job_order(self) -> List[Job]:
-        return sorted(self._sched,
-                      key=lambda j: (self.running_tasks.get(j.job_id, 0),
-                                     j.submit_time, j.job_id))
+        out: List[Job] = []
+        entry = self._entry
+        jobs = self._job_by_id
+        for count in sorted(self._buckets):
+            for (_, jid, ser) in self._buckets[count]:
+                if entry.get(jid, (None, None))[1] == ser:
+                    out.append(jobs[jid])
+        return out
 
 
 class CapacityScheduler(GlobalScheduler):

@@ -58,6 +58,54 @@ class Joss:
         ready-reduce transition happens exactly once per job)."""
         self.scheduler.queues.mark_job_ready(job_id)
 
+    def job_maps_undone(self, job_id: int) -> None:
+        """Elastic only: a departed host lost finished map outputs of
+        ``job_id``; its shuffle gate re-closes until the re-runs finish."""
+        self.scheduler.queues.mark_job_unready(job_id)
+
+    # -- elastic-cluster interface (PR 2) ----------------------------------------
+    def host_added(self, hid: HostId) -> None:
+        """A fresh VPS joined. It starts with an empty local disk (no shard
+        replicas), so no locality index needs patching."""
+
+    def host_lost(self, hid: HostId) -> None:
+        """A VPS departed: patch the locality indexes incrementally and, if
+        its pod is now hostless, evacuate the pod's queues to the global
+        FIFO queues (only a pod's own hosts serve its queues)."""
+        queues = self.scheduler.queues
+        queues.host_lost(hid)
+        self.assigner.host_lost(hid)
+        if not self.cluster.pods[hid.pod].hosts:
+            queues.evacuate_pod(hid.pod)
+
+    def requeue_map_task(self, task: MapTask) -> None:
+        """Re-execution of a map lost to churn. Routed through MQ_FIFO,
+        which every assigner serves first — Hadoop's failed-task-first
+        retry priority. The queue indexes the task against the shard's
+        *surviving* replicas, so the re-run still prefers locality."""
+        self.scheduler.queues.mq_fifo.append(task)
+
+    def requeue_reduce_task(self, task: ReduceTask) -> None:
+        """Re-execution of a reduce lost to churn, via RQ_FIFO (served
+        first). The job's ready-mark set is extended to RQ_FIFO so gate
+        notifications reach both the original bucket and the retry."""
+        queues = self.scheduler.queues
+        queues.rq_fifo.append(task)
+        queues.register_reduce_queue(task.job_id, queues.rq_fifo)
+
+    def map_work_in_pod(self, pod: int) -> bool:
+        """O(1): could ``next_map_task`` yield work for a host of ``pod``?
+        (Exactly the early-return gates of the assigner, so a False means
+        every host of the pod would poll to None.)"""
+        q = self.scheduler.queues
+        return len(q.mq_fifo) > 0 or q.pods[pod].map_load.n > 0
+
+    def reduce_work_in_pod(self, pod: int) -> bool:
+        """O(1) per-pod reduce-backlog gate (readiness is still checked by
+        the assigner; this only bounds no-op polling)."""
+        q = self.scheduler.queues
+        return len(q.rq_fifo) > 0 or q.pods[pod].red_load.n > 0
+
     def has_map_work(self) -> bool:
         """O(1): any queued-but-unassigned map task anywhere?"""
         return self.scheduler.queues.map_backlog.n > 0

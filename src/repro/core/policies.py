@@ -64,8 +64,15 @@ def _greedy_cover(job: Job, cluster: VirtualCluster
             for c in cluster.replica_pods(s):
                 remaining[c].add(s)
 
-    # reduce pod: holds the max unique shards of J *before* deletion
-    reduce_pod = max(remaining, key=lambda c: (len(remaining[c]), -c))
+    # reduce pod: holds the max unique shards of J *before* deletion.
+    # Candidates are restricted to pods that still have hosts (elastic
+    # clusters): a replica can only live on a live host, so the greedy
+    # loop below never picks a hostless pod, but the reduce pod and the
+    # replica-less fallback would otherwise strand tasks in an empty pod
+    # forever when the job's shards lost every replica to churn.
+    active = [c for c in remaining if cluster.pods[c].hosts] \
+        or list(remaining)
+    reduce_pod = max(active, key=lambda c: (len(remaining[c]), -c))
 
     shard_to_pod: Dict[object, int] = {}
     unassigned = set(job.shard_ids)

@@ -237,6 +237,26 @@ class TaskQueue:
             self._discard(t)
         return t
 
+    # -- elasticity (PR 2) ----------------------------------------------------
+    def drop_host(self, hid) -> None:
+        """A host departed: purge its per-(job, host) locality entries.
+
+        The pod-level index is left untouched — it is a *preference* index
+        (which task to offer first), and a stale pod entry only means one
+        pick is offered as pod-local when the replica is gone; the executor
+        computes true locality from the cluster at start time. Departed
+        hosts receive no slot offers, so host-keyed entries are pure leak.
+
+        This is a scan over the queue's live index keys, deliberately: a
+        host-keyed reverse index would make departures O(affected) but tax
+        every ``append`` on the static hot path (the PR 1 per-slot
+        envelope), while departures are per-host-hour rare and the scan is
+        bounded by currently *queued* work, not history.
+        """
+        hidx = self._hidx
+        for k in [k for k in hidx if k[1] == hid]:
+            del hidx[k]
+
     # -- ready-reduce transition ----------------------------------------------
     def mark_job_ready(self, jid) -> None:
         """Move job ``jid``'s pending reduce bucket to the ready heap (once).
@@ -247,6 +267,13 @@ class TaskQueue:
         if jid in self._jobs and jid not in self._ready:
             self._ready.add(jid)
             heapq.heappush(self._rheap, (self._job_serial[jid], jid))
+
+    def mark_job_unready(self, jid) -> None:
+        """Re-close job ``jid``'s shuffle gate (elastic clusters only: a
+        departed host lost completed map outputs, so the job's maps are no
+        longer all finished). Stale heap entries purge lazily; a later
+        ``mark_job_ready`` re-inserts the job."""
+        self._ready.discard(jid)
 
     def pick_ready(self, ready, trust_marks: bool = False):
         """First ready reduce task in queue order.
@@ -362,9 +389,12 @@ class ClusterQueues:
             for c in range(n_pods)}
         self.mq_fifo = TaskQueue("MQ_FIFO", cluster, (self.map_backlog,))
         self.rq_fifo = TaskQueue("RQ_FIFO", cluster, (self.red_backlog,))
-        # job_id -> the queue holding its reduce tasks (ready notifications);
-        # pruned of drained jobs every so often (amortized O(1) per submit)
-        self._reduce_queue_of: Dict[int, TaskQueue] = {}
+        # job_id -> the queue(s) holding its reduce tasks (ready
+        # notifications). Statically a job's reduces live in exactly one
+        # queue; churn re-executions may split a job across its original
+        # queue and RQ_FIFO, so this maps to a small list. Pruned of
+        # drained jobs every so often (amortized O(1) per submit).
+        self._reduce_queue_of: Dict[int, List[TaskQueue]] = {}
         self._reduce_prune_at = 128
         #: True once a driver delivers maps-done notifications; assigners
         #: then use the O(log) ready heap instead of the predicate scan.
@@ -384,28 +414,88 @@ class ClusterQueues:
                 q._indexed = enabled
 
     def register_reduce_queue(self, job_id: int, q: TaskQueue) -> None:
-        self._reduce_queue_of[job_id] = q
+        qs = self._reduce_queue_of.get(job_id)
+        if qs is None:
+            self._reduce_queue_of[job_id] = [q]
+        elif q not in qs:
+            qs.append(q)
         if len(self._reduce_queue_of) >= self._reduce_prune_at:
-            # drop jobs whose reduce bucket has drained (they can never be
+            # drop jobs whose reduce buckets have drained (they can never be
             # marked ready again), so the map stays O(in-flight jobs) and
             # gc'd policy-C queues are not pinned forever
-            self._reduce_queue_of = {
-                j: rq for j, rq in self._reduce_queue_of.items()
-                if j in rq._jobs}
+            pruned = {}
+            for j, rqs in self._reduce_queue_of.items():
+                live = [rq for rq in rqs if j in rq._jobs]
+                if live:
+                    pruned[j] = live
+            self._reduce_queue_of = pruned
             self._reduce_prune_at = max(
                 128, 2 * len(self._reduce_queue_of) + 64)
 
     def mark_job_ready(self, job_id: int) -> None:
         """All maps of ``job_id`` finished: its reduces become assignable."""
         self.notified = True
-        q = self._reduce_queue_of.get(job_id)
-        if q is not None:
+        for q in self._reduce_queue_of.get(job_id, ()):
             q.mark_job_ready(job_id)
 
+    def mark_job_unready(self, job_id: int) -> None:
+        """Elastic only: a departed host lost map outputs of ``job_id``, so
+        its shuffle gate re-closes until the re-executed maps finish."""
+        for q in self._reduce_queue_of.get(job_id, ()):
+            q.mark_job_unready(job_id)
+
+    # -- elasticity (PR 2) ----------------------------------------------------
+    def host_lost(self, hid) -> None:
+        """Purge the departed host's locality-index entries everywhere."""
+        for p in self.pods.values():
+            for q in p.map_queues:
+                q.drop_host(hid)
+            for q in p.reduce_queues:
+                q.drop_host(hid)
+        self.mq_fifo.drop_host(hid)
+        self.rq_fifo.drop_host(hid)
+
+    def evacuate_pod(self, c: int) -> Tuple[int, int]:
+        """Move every queued task of a now-hostless pod to the global FIFO
+        queues (only a pod's own hosts serve its queues, so work stranded
+        in an empty pod would never run). Ready marks follow the moved
+        reduce buckets. Returns (maps moved, reduces moved)."""
+        p = self.pods[c]
+        n_maps = n_reds = 0
+        for q in p.map_queues:
+            for t in list(q):
+                q.remove(t)
+                self.mq_fifo.append(t)
+                n_maps += 1
+        for q in p.reduce_queues:
+            ready = set(q._ready)
+            moved_jobs = []
+            for t in list(q):
+                q.remove(t)
+                self.rq_fifo.append(t)
+                moved_jobs.append(t.job_id)
+                n_reds += 1
+            for jid in moved_jobs:
+                self.register_reduce_queue(jid, self.rq_fifo)
+            for jid in ready:
+                self.rq_fifo.mark_job_ready(jid)
+        p.gc()
+        return n_maps, n_reds
+
     def least_loaded_pod(self) -> int:
-        """cen_w: least unprocessed tasks (Fig. 4 line 9); ties -> lowest id."""
+        """cen_w: least unprocessed tasks (Fig. 4 line 9); ties -> lowest id.
+
+        Hostless pods (elastic clusters) are skipped — work placed there
+        could never be served, since assigners only pull for a pod's own
+        hosts. With a static cluster every pod qualifies (seed behaviour).
+        """
         pods = self.pods
-        return min(pods, key=lambda c: (pods[c].unprocessed(), c))
+        cl = self.cluster
+        if cl is not None:
+            cands = [c for c in pods if cl.pods[c].hosts] or list(pods)
+        else:
+            cands = list(pods)
+        return min(cands, key=lambda c: (pods[c].unprocessed(), c))
 
     def total_pending(self) -> int:
         return self.map_backlog.n + self.red_backlog.n

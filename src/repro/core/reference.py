@@ -168,7 +168,17 @@ class ReferenceFifo(_ReferenceSlotService, FifoScheduler):
 
 
 class ReferenceFair(_ReferenceSlotService, FairScheduler):
-    pass
+    """Seed Fair: re-sorts every job on every slot offer (O(a log a)).
+
+    Kept verbatim so the activity-keyed bucket structure in
+    ``FairScheduler`` can be equivalence-tested against the original
+    ordering (same sort key: running tasks, then submit time, then id).
+    """
+
+    def job_order(self):
+        return sorted(self._sched,
+                      key=lambda j: (self.running_tasks.get(j.job_id, 0),
+                                     j.submit_time, j.job_id))
 
 
 class ReferenceCapacity(_ReferenceSlotService, CapacityScheduler):

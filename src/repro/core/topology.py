@@ -7,12 +7,23 @@ as physical machines are opaque to the paper's tenant. Locality levels map as
     VPS-locality  -> host-local shard (no network)
     Cen-locality  -> intra-pod ICI
     off-Cen       -> inter-pod DCN
+
+Elastic clusters (PR 2): the tenant *rents* VPSs, so the fleet is mutable.
+``add_host`` leases a fresh VPS into a pod (always under a brand-new index,
+so a ``HostId`` is a permanent identity: once removed it never comes back)
+and ``remove_host`` returns a leased VPS, dropping every shard replica that
+lived on its local disk from the replica maps. A shard whose last replica
+departs stays registered with an empty replica set — reads of it fall back
+to off-pod (re-fetch from the durable external store), which is exactly how
+HDFS under-replication degrades. A pod may become empty (zero hosts); it
+stays in the pod list so pod indices remain stable, and placement helpers
+(``active_pods``) let schedulers avoid routing work to hostless pods.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 
 class Locality(enum.Enum):
@@ -52,10 +63,16 @@ class Host:
 
 @dataclasses.dataclass
 class Pod:
-    """One datacenter cen_c of the virtual cluster."""
+    """One datacenter cen_c of the virtual cluster.
+
+    ``hosts`` holds the *live* hosts only; after removals, list position no
+    longer equals ``HostId.index`` — look hosts up through the cluster.
+    ``next_index`` is the lease counter: new hosts always get fresh indices.
+    """
 
     index: int
     hosts: List[Host]
+    next_index: int = 0
 
     @property
     def n_hosts(self) -> int:
@@ -74,12 +91,19 @@ class VirtualCluster:
         if len(hosts_per_pod) < 1:
             raise ValueError("need at least one pod")
         self.pods: List[Pod] = []
+        self._host_by_id: Dict[HostId, Host] = {}
+        # construction-time slot shape: the default for leased hosts, so an
+        # elastic fleet keeps uniform capacity as it churns
+        self.default_map_slots = map_slots
+        self.default_reduce_slots = reduce_slots
         for c, n in enumerate(hosts_per_pod):
             if n < 1:
                 raise ValueError(f"pod {c} must have >= 1 host")
             hosts = [Host(HostId(c, l), map_slots, reduce_slots)
                      for l in range(n)]
-            self.pods.append(Pod(c, hosts))
+            self.pods.append(Pod(c, hosts, next_index=n))
+            for h in hosts:
+                self._host_by_id[h.hid] = h
         # shard id -> list of HostId replicas
         self.shard_replicas: Dict[object, List[HostId]] = {}
         # precomputed shard -> replica-host set / replica-pod tuple indexes,
@@ -108,7 +132,50 @@ class VirtualCluster:
             yield from p.hosts
 
     def host(self, hid: HostId) -> Host:
-        return self.pods[hid.pod].hosts[hid.index]
+        return self._host_by_id[hid]
+
+    def has_host(self, hid: HostId) -> bool:
+        return hid in self._host_by_id
+
+    def active_pods(self) -> List[int]:
+        """Pod indices that currently have at least one host."""
+        return [p.index for p in self.pods if p.hosts]
+
+    # -- elasticity (PR 2): the fleet is rented, not fixed -------------------
+    def add_host(self, pod: int, *, map_slots: Optional[int] = None,
+                 reduce_slots: Optional[int] = None) -> Host:
+        """Lease a fresh VPS into pod ``pod`` under a brand-new index.
+
+        Indices are never reused, so a ``HostId`` seen once identifies the
+        same VPS forever (departed hosts stay departed). Slot counts
+        default to the cluster's construction-time shape, so churned-in
+        replacements match the fleet's capacity.
+        """
+        p = self.pods[pod]
+        h = Host(HostId(pod, p.next_index),
+                 self.default_map_slots if map_slots is None else map_slots,
+                 self.default_reduce_slots if reduce_slots is None
+                 else reduce_slots)
+        p.next_index += 1
+        p.hosts.append(h)
+        self._host_by_id[h.hid] = h
+        return h
+
+    def remove_host(self, hid: HostId) -> Host:
+        """Return a leased VPS: drop it and every replica on its disk.
+
+        Shards that lose their last replica remain registered with an empty
+        replica set; reads of them degrade to off-pod (external re-fetch).
+        The pod may end up empty — it stays in the pod list.
+        """
+        h = self._host_by_id.pop(hid)
+        self.pods[hid.pod].hosts.remove(h)
+        for sid in h.local_shards:
+            reps = [r for r in self.shard_replicas[sid] if r != hid]
+            self.shard_replicas[sid] = reps
+            self._replica_host_set[sid] = frozenset(reps)
+            self._replica_pods[sid] = tuple(sorted({r.pod for r in reps}))
+        return h
 
     # -- shard placement -----------------------------------------------------
     def place_shard(self, shard_id, replicas: Sequence[HostId]) -> None:
@@ -148,7 +215,13 @@ class VirtualCluster:
         return Locality.OFF_POD
 
     def nearest_replica(self, shard_id, hid: HostId) -> Tuple[HostId, Locality]:
-        """Closest replica of shard_id as seen from host hid."""
+        """Closest replica of shard_id as seen from host hid.
+
+        A shard with no surviving replica (all holders departed) reads as
+        ``(None, OFF_POD)``: the bytes must come from the external store.
+        """
+        if not self.shard_replicas[shard_id]:
+            return None, Locality.OFF_POD
         best = None
         best_loc = None
         order = {Locality.HOST: 0, Locality.POD: 1, Locality.OFF_POD: 2}

@@ -1,0 +1,28 @@
+"""Elastic virtual-cluster subsystem (PR 2).
+
+The paper's tenant *rents* VPSs to form the virtual MapReduce cluster —
+this package makes the fleet mutable: leases and rental-cost accounting
+(``leases``), a deterministic churn event model for failures / spot
+preemptions / lease expiries (``churn``), autoscaler policies driven by
+the PR 1 backlog counters (``autoscaler``), and the engine that glues
+them to the discrete-event simulator (``engine``).
+
+(``repro.runtime.elastic`` remains the training-side re-meshing planner;
+this package is the scheduling/simulation side.)
+"""
+from repro.elastic.autoscaler import (Autoscaler, BacklogThresholdScaler,
+                                      CostCappedSpotScaler, FixedFleet,
+                                      FleetObservation, ScaleDecision)
+from repro.elastic.churn import ChurnConfig, ChurnEvent, ChurnModel
+from repro.elastic.engine import (ElasticActions, ElasticEngine,
+                                  ElasticSummary)
+from repro.elastic.leases import (ON_DEMAND, SPOT, Lease, LeaseBook,
+                                  PriceSheet)
+
+__all__ = [
+    "Autoscaler", "BacklogThresholdScaler", "CostCappedSpotScaler",
+    "FixedFleet", "FleetObservation", "ScaleDecision",
+    "ChurnConfig", "ChurnEvent", "ChurnModel",
+    "ElasticActions", "ElasticEngine", "ElasticSummary",
+    "ON_DEMAND", "SPOT", "Lease", "LeaseBook", "PriceSheet",
+]

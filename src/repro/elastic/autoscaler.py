@@ -1,0 +1,165 @@
+"""Autoscaler policies: how the tenant sizes the rented fleet over time.
+
+A policy sees a ``FleetObservation`` (backlog counters, live fleet size,
+accrued cost — exactly the O(1) counters PR 1 exposed) and returns a
+``ScaleDecision``; it also answers lease-renewal questions at expiry
+events. Policies never touch the cluster directly — the ``ElasticEngine``
+maps decisions onto pods/hosts so policy code stays deterministic and
+cluster-agnostic.
+
+Shipped policies:
+
+  * ``FixedFleet``           — the paper's static testbed: never scales,
+    always renews. The elastic machinery with this policy and no churn is
+    bit-identical to the static simulator.
+  * ``BacklogThresholdScaler`` — scale out when backlog per host exceeds a
+    threshold, scale idle hosts in when the backlog drains; renew leases
+    only while there is work (cost falls to the work's shape).
+  * ``CostCappedSpotScaler``  — same triggers, but growth uses spot leases
+    and stops at a dollar budget; spot leases are never renewed once the
+    budget is spent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.topology import HostId
+
+from repro.elastic.leases import ON_DEMAND, SPOT
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetObservation:
+    """What a policy may look at. Everything is O(1) to produce except the
+    fleet walk behind ``idle_hosts``/``busy_hosts``, which runs only at
+    autoscale ticks of policies that declare ``needs_idle_hosts`` (both
+    fields are zero/empty everywhere else)."""
+
+    now: float
+    n_hosts: int
+    map_backlog: int       # queued-but-unassigned map tasks
+    red_backlog: int       # ready-but-unassigned reduce tasks
+    busy_hosts: int        # hosts with at least one occupied slot
+    cost: float            # $ accrued so far
+    vps_hours: float
+    idle_hosts: Tuple[HostId, ...] = ()   # fully-idle hosts, newest lease
+    #                                       first (engine sorts by the book)
+
+    @property
+    def backlog(self) -> int:
+        return self.map_backlog + self.red_backlog
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    """add N hosts of `kind`, and/or remove the given (idle) hosts."""
+
+    add: int = 0
+    kind: str = ON_DEMAND
+    remove: Tuple[HostId, ...] = ()
+
+    @property
+    def empty(self) -> bool:
+        return self.add == 0 and not self.remove
+
+
+class Autoscaler:
+    """Base policy: a fixed fleet (no ticks, renew everything)."""
+
+    name = "fixed"
+    #: seconds between scaling decisions; None = the policy never ticks
+    interval: Optional[float] = None
+    #: whether decide() wants idle_hosts populated (costs O(hosts)/tick)
+    needs_idle_hosts = False
+
+    def decide(self, obs: FleetObservation) -> ScaleDecision:
+        return ScaleDecision()
+
+    def renew_lease(self, hid: HostId, kind: str,
+                    obs: FleetObservation) -> bool:
+        return True
+
+
+class FixedFleet(Autoscaler):
+    """The static-testbed policy, stated explicitly."""
+
+
+class BacklogThresholdScaler(Autoscaler):
+    """Scale out on backlog pressure, in on idleness.
+
+    Out: when backlog / host > ``hi`` (and cooldown passed), lease ``step``
+    more on-demand VPSs up to ``max_hosts``. In: when the backlog is zero,
+    return up to ``step`` fully-idle VPSs down to ``min_hosts``, newest
+    lease first (``obs.idle_hosts`` arrives in that order from the
+    engine's lease book), so surge capacity with empty disks is returned
+    before base hosts that hold shard replicas. Expiring leases are
+    renewed only while there is backlog or the fleet is at ``min_hosts``
+    — lease boundaries become free scale-in points.
+    """
+
+    name = "backlog"
+    needs_idle_hosts = True
+
+    def __init__(self, *, interval: float = 30.0, hi: float = 4.0,
+                 step: int = 4, min_hosts: int = 2, max_hosts: int = 1 << 30,
+                 cooldown: float = 60.0):
+        self.interval = interval
+        self.hi = hi
+        self.step = step
+        self.min_hosts = min_hosts
+        self.max_hosts = max_hosts
+        self.cooldown = cooldown
+        self._last_change = -1e18
+
+    # hook so the cost-capped subclass can gate growth and pick lease kind
+    def _grow(self, obs: FleetObservation, want: int) -> ScaleDecision:
+        return ScaleDecision(add=want, kind=ON_DEMAND)
+
+    def decide(self, obs: FleetObservation) -> ScaleDecision:
+        if obs.now - self._last_change < self.cooldown:
+            return ScaleDecision()
+        per_host = obs.backlog / max(obs.n_hosts, 1)
+        if per_host > self.hi and obs.n_hosts < self.max_hosts:
+            want = min(self.step, self.max_hosts - obs.n_hosts)
+            dec = self._grow(obs, want)
+            if not dec.empty:
+                self._last_change = obs.now
+            return dec
+        if obs.backlog == 0 and obs.n_hosts > self.min_hosts:
+            spare = obs.n_hosts - self.min_hosts
+            victims = tuple(obs.idle_hosts[:min(self.step, spare)])
+            if victims:
+                self._last_change = obs.now
+                return ScaleDecision(remove=victims)
+        return ScaleDecision()
+
+    def renew_lease(self, hid: HostId, kind: str,
+                    obs: FleetObservation) -> bool:
+        return obs.backlog > 0 or obs.n_hosts <= self.min_hosts
+
+
+class CostCappedSpotScaler(BacklogThresholdScaler):
+    """Backlog-triggered growth on *spot* leases under a dollar budget.
+
+    The base fleet (on-demand) is kept; surge capacity is spot. Growth
+    stops once accrued cost reaches ``budget``; past the budget, expiring
+    spot leases are never renewed (the fleet decays back to the base).
+    """
+
+    name = "spotcap"
+
+    def __init__(self, *, budget: float, **kw):
+        super().__init__(**kw)
+        self.budget = budget
+
+    def _grow(self, obs: FleetObservation, want: int) -> ScaleDecision:
+        if obs.cost >= self.budget:
+            return ScaleDecision()
+        return ScaleDecision(add=want, kind=SPOT)
+
+    def renew_lease(self, hid: HostId, kind: str,
+                    obs: FleetObservation) -> bool:
+        if kind == SPOT and obs.cost >= self.budget:
+            return False
+        return super().renew_lease(hid, kind, obs)

@@ -17,10 +17,45 @@ operating point). The incremental dispatcher below tracks hosts-with-free-
 slots sets plus queued-map / ready-reduce backlog counters, skips dispatch
 outright when there is no assignable work, and offers slots only to
 eligible hosts (still in shuffled order, so no algorithm benefits from host
-enumeration order). It also pushes ``job_maps_done`` notifications into the
+enumeration order). Per-pod backlog flags (``map_work_in_pod`` /
+``reduce_work_in_pod`` on JoSS algorithms) additionally skip hosts whose
+pod has drained while another pod still has work — the skip is exact (a
+skipped host's poll was guaranteed to return None), so trajectories are
+unchanged. It also pushes ``job_maps_done`` notifications into the
 algorithm so ready-reduce transitions are O(1) events instead of per-slot
 predicate scans. ``SimConfig.poll_all_hosts`` restores the seed's
 full-polling loop for old-vs-new benchmarking.
+
+Elastic clusters (PR 2): pass an ``repro.elastic.ElasticEngine`` to run on
+a *rented* fleet that churns. The lease / failure / re-execution timing
+model is:
+
+  * A departing host (failure, spot preemption, non-renewed lease expiry)
+    vanishes at the event instant — a hard stop, as a reclaimed VPS gives
+    no grace period. Its free slots leave the offer sets immediately, so
+    no task is ever assigned to a departed host.
+  * Tasks RUNNING on the host are killed (state FAILED) and re-executed:
+    a fresh attempt is enqueued through the algorithm's requeue interface
+    (JoSS routes retries through MQ_FIFO/RQ_FIFO, which assigners serve
+    first — Hadoop's failed-task retry priority). Bytes already read by a
+    killed task stay counted: the traffic physically happened.
+  * Completed map outputs stored on the dead host's local disk are lost.
+    If the job still has unfinished reduce work, each lost output forces
+    its map task to re-run (``work_lost_mb`` accumulates the lost output
+    bytes), and the job's shuffle gate RE-CLOSES (``job_maps_undone``)
+    until the re-runs land: reduces not yet started must wait and re-read
+    from the re-executed mappers' new locations. Reduces that already
+    started keep the data they fetched at start (our shuffle is eager).
+  * A joining host (replacement VPS, autoscale-out) starts with an empty
+    disk — no shard replicas — and a brand-new ``HostId`` (indices are
+    never reused), entering the offer sets at the event instant.
+  * Lease accounting (VPS-hours, $) and churn policy live in the engine;
+    all churn randomness comes from the engine's own seeded RNG, so a
+    churn-disabled elastic run is bit-identical to the static simulator
+    and any churn run is deterministic per (workload seed, churn seed).
+  * The autoscaler observes the PR 1 backlog counters at a fixed tick
+    interval and leases/returns VPSs; scale-in only returns fully-idle
+    hosts and the engine never drops the last host of the cluster.
 """
 from __future__ import annotations
 
@@ -87,26 +122,38 @@ class SimResult:
     wtt: float
     jobs: List[Job]
     scheduler_decision_time: float = 0.0  # cumulative wall time in scheduler
+    # -- elastic-cluster outputs (all zero for static runs) ------------------
+    vps_hours: float = 0.0      # rented VPS-hours over the run
+    cost_dollars: float = 0.0   # rental cost at the engine's price sheet
+    work_lost_mb: float = 0.0   # completed map-output MB lost to churn
+    n_reexec: int = 0           # task re-executions forced by churn
+    n_host_adds: int = 0
+    n_host_losses: int = 0
+    elastic: object = None      # ElasticSummary when run with an engine
 
     def jtt(self, job: Job) -> float:
         return self.job_finish[job.job_id] - self.job_submit[job.job_id]
 
 
 class Simulator:
-    """Runs one workload under one algorithm. Deterministic given the seed."""
+    """Runs one workload under one algorithm. Deterministic given the seed
+    (plus the elastic engine's churn seed, when one is attached)."""
 
     def __init__(self, cluster: VirtualCluster, algorithm, jobs: List[Job],
-                 config: Optional[SimConfig] = None, seed: int = 0):
+                 config: Optional[SimConfig] = None, seed: int = 0,
+                 elastic=None):
         self.cluster = cluster
         self.algo = algorithm
         self.jobs = jobs
         self.cfg = config or SimConfig()
         self.rng = np.random.RandomState(seed)
+        self.elastic = elastic   # Optional[repro.elastic.ElasticEngine]
         self._seq = itertools.count()
 
     # ------------------------------------------------------------------ run --
     def run(self) -> SimResult:
         cfg = self.cfg
+        elastic = self.elastic
         events: List[Tuple[float, int, str, object]] = []
 
         def push(t, kind, payload):
@@ -124,10 +171,18 @@ class Simulator:
         free_red_hosts = {h for h, n in red_free.items() if n > 0}
         maps_left = {j.job_id: j.m for j in self.jobs}
         reds_left = {j.job_id: len(j.reduce_tasks) for j in self.jobs}
+        # queued-but-unassigned reduces per job (for gate open/close sizing;
+        # statically equals len(reduce_tasks) at the single gate opening)
+        reds_unassigned = {j.job_id: len(j.reduce_tasks) for j in self.jobs}
         job_by_id = {j.job_id: j for j in self.jobs}
-        # mapper placements for shuffle accounting: job -> [(host, out_bytes)]
-        map_out: Dict[int, List[Tuple[HostId, float]]] = {
+        # mapper placements for shuffle accounting:
+        # job -> [(host, out_bytes, map_index)]
+        map_out: Dict[int, List[Tuple[HostId, float, int]]] = {
             j.job_id: [] for j in self.jobs}
+        # reverse index: host -> jobs with map output on its disk, so a
+        # host departure touches only the affected jobs instead of
+        # scanning every job's full output list (churn-scale fix)
+        host_outputs: Dict[HostId, set] = {}
         running: Dict[object, TaskLog] = {}
         task_logs: List[TaskLog] = []
         job_submit: Dict[int, float] = {}
@@ -141,9 +196,20 @@ class Simulator:
         map_backlog = 0
         red_ready_backlog = 0
         notify_maps_done = getattr(self.algo, "job_maps_done", None)
+        # elastic-cluster accounting
+        work_lost_mb = 0.0
+        n_reexec = 0
+        n_host_adds = 0
+        n_host_losses = 0
+        # highest attempt number handed out per task (speculative twins and
+        # churn re-executions share the sequence so tids stay unique)
+        m_attempt: Dict[Tuple[int, int], int] = {}
+        r_attempt: Dict[Tuple[int, int], int] = {}
         # speculative-execution bookkeeping (straggler mitigation)
         done_pairs: set = set()              # (job_id, map_index) finished
         backups: Dict[Tuple[int, int], int] = {}
+        spec_tids: set = set()               # tids of backup shadows (the
+        # attempt counter alone can't tell a backup from a churn re-run)
         map_durations: List[float] = []
 
         def ready_reduce(t: ReduceTask) -> bool:
@@ -191,7 +257,7 @@ class Simulator:
             r = len(job.reduce_tasks)
             log = TaskLog(job, t, hid, now, 0.0, None)
             read_t = 0.0
-            for (src, out_bytes) in map_out[job.job_id]:
+            for (src, out_bytes, _mi) in map_out[job.job_id]:
                 share = out_bytes * fp / r
                 if src == hid:
                     log.bytes_local += share
@@ -211,6 +277,7 @@ class Simulator:
             t.host = hid
             log.finish = now + dur
             running[t.tid] = log
+            reds_unassigned[t.job_id] -= 1
             left = red_free[hid] - 1
             red_free[hid] = left
             if left == 0:
@@ -241,13 +308,19 @@ class Simulator:
                     continue
                 cands.sort(key=lambda h: (h.pod == log.host.pod,
                                           h.pod, h.index))
+                a = m_attempt[pair] = m_attempt.get(pair, 0) + 1
                 shadow = MapTask(t.job_id, t.index, t.shard_id,
-                                 t.input_bytes, attempt=t.attempt + 1)
+                                 t.input_bytes, attempt=a)
                 backups[pair] = backups.get(pair, 0) + 1
+                spec_tids.add(shadow.tid)
                 start_map(shadow, cands[0], now)
 
         host_rank = {hid: i for i, hid in enumerate(all_hosts)}
         n_hosts = len(all_hosts)
+        # O(1) per-pod backlog flags (PR 2 satellite): skip hosts whose pod
+        # provably has no work. Exact — a skipped poll was guaranteed None.
+        map_pod_ok = getattr(self.algo, "map_work_in_pod", None)
+        red_pod_ok = getattr(self.algo, "reduce_work_in_pod", None)
 
         def naive_dispatch(now: float):
             # seed dispatcher (kept for old-vs-new benchmarking): shuffle
@@ -292,10 +365,19 @@ class Simulator:
                 else:
                     order = sorted(elig, key=host_rank.__getitem__)
                 self.rng.shuffle(order)
+                # per-pod work flags, memoized per pass (work can only
+                # drain during a pass, so a cached True is merely a poll)
+                mflags: Dict[int, bool] = {}
+                rflags: Dict[int, bool] = {}
                 progress = False
                 for hid in order:
+                    pod = hid.pod
                     if map_backlog:
-                        while map_free[hid] > 0:
+                        ok = (mflags.get(pod) if map_pod_ok is not None
+                              else True)
+                        if ok is None:
+                            ok = mflags[pod] = map_pod_ok(pod)
+                        while ok and map_free[hid] > 0:
                             t = algo.next_map_task(hid)
                             if t is None:
                                 break
@@ -303,7 +385,11 @@ class Simulator:
                             start_map(t, hid, now)
                             progress = True
                     if red_ready_backlog:
-                        while red_free[hid] > 0:
+                        ok = (rflags.get(pod) if red_pod_ok is not None
+                              else True)
+                        if ok is None:
+                            ok = rflags[pod] = red_pod_ok(pod)
+                        while ok and red_free[hid] > 0:
                             t = algo.next_reduce_task(hid, ready_reduce)
                             if t is None:
                                 break
@@ -318,9 +404,178 @@ class Simulator:
         if cfg.poll_all_hosts:
             dispatch = naive_dispatch
 
+        # ---------------------------------------------- elastic mechanics --
+        def remake_map(jid: int, midx: int) -> MapTask:
+            orig = job_by_id[jid].map_tasks[midx]
+            a = m_attempt[(jid, midx)] = m_attempt.get((jid, midx), 0) + 1
+            return MapTask(jid, midx, orig.shard_id, orig.input_bytes,
+                           attempt=a)
+
+        def remake_reduce(jid: int, ridx: int) -> ReduceTask:
+            a = r_attempt[(jid, ridx)] = r_attempt.get((jid, ridx), 0) + 1
+            return ReduceTask(jid, ridx, attempt=a)
+
+        def add_host_sim(pod: int, kind: str, now: float) -> HostId:
+            nonlocal n_hosts, n_host_adds
+            h = self.cluster.add_host(pod)
+            hid = h.hid
+            map_free[hid] = h.map_slots
+            red_free[hid] = h.reduce_slots
+            free_map_hosts.add(hid)
+            free_red_hosts.add(hid)
+            all_hosts.append(hid)
+            host_rank[hid] = len(host_rank)   # ranks are never reused
+            n_hosts += 1
+            n_host_adds += 1
+            hook = getattr(self.algo, "host_added", None)
+            if hook is not None:
+                hook(hid)
+            return hid
+
+        def lose_host_sim(hid: HostId, now: float):
+            """Apply one host departure: kill+requeue its running tasks,
+            re-run maps whose outputs died with its disk, re-close shuffle
+            gates, and patch every index/offer structure."""
+            nonlocal n_hosts, n_host_losses, map_backlog, red_ready_backlog
+            nonlocal unfinished, work_lost_mb, n_reexec
+            self.cluster.remove_host(hid)
+            map_free.pop(hid, None)
+            red_free.pop(hid, None)
+            free_map_hosts.discard(hid)
+            free_red_hosts.discard(hid)
+            all_hosts.remove(hid)
+            n_hosts -= 1
+            n_host_losses += 1
+            algo = self.algo
+            hook = getattr(algo, "host_lost", None)
+            if hook is not None:
+                hook(hid)   # patches locality indexes; evacuates empty pods
+            notify_undone = getattr(algo, "job_maps_undone", None)
+            requeue_map = getattr(algo, "requeue_map_task", None)
+            requeue_red = getattr(algo, "requeue_reduce_task", None)
+            # (a) completed map outputs on the dead disk are lost; if the
+            # job still has reduce work ahead, those maps must re-run and
+            # the shuffle gate re-closes until they land
+            for jid in sorted(host_outputs.pop(hid, ())):
+                if reds_left[jid] == 0:
+                    continue    # every reduce already consumed its shuffle
+                entries = map_out[jid]
+                lost = [e for e in entries if e[0] == hid]
+                if not lost:    # pragma: no cover - index is add-only
+                    continue
+                map_out[jid] = [e for e in entries if e[0] != hid]
+                job = job_by_id[jid]
+                gate_was_open = maps_left[jid] == 0
+                for (_h, out_b, midx) in lost:
+                    done_pairs.discard((jid, midx))
+                    job.map_tasks[midx].state = TaskState.FAILED
+                    maps_left[jid] += 1
+                    unfinished += 1
+                    work_lost_mb += out_b * job.true_fp
+                    # a still-running speculative twin will re-produce the
+                    # output — no fresh attempt needed (same backups-gated
+                    # O(1) guard as the killed-running path below)
+                    if backups.get((jid, midx), 0) and any(
+                            isinstance(l.task, MapTask)
+                            and (l.task.job_id, l.task.index) == (jid, midx)
+                            for l in running.values()):
+                        continue
+                    requeue_map(remake_map(jid, midx))
+                    map_backlog += 1
+                    n_reexec += 1
+                if gate_was_open:
+                    red_ready_backlog -= reds_unassigned[jid]
+                    if notify_undone is not None:
+                        notify_undone(jid)
+            # (b) tasks running on the host are killed and re-executed
+            for tid, log in list(running.items()):
+                if log.host != hid:
+                    continue
+                del running[tid]
+                t = log.task
+                t.state = TaskState.FAILED
+                algo.task_finished(t)   # the attempt ended (killed) — keeps
+                # running_tasks honest for Fair/Capacity ordering
+                jid = t.job_id
+                if isinstance(t, MapTask):
+                    pair = (jid, t.index)
+                    if pair in done_pairs:
+                        continue    # a speculative twin already finished it
+                    # a concurrent attempt can only exist if a backup was
+                    # launched for this pair, so the O(running) twin scan
+                    # is gated on the O(1) backups counter
+                    if backups.get(pair, 0) and any(
+                            isinstance(l.task, MapTask)
+                            and (l.task.job_id, l.task.index) == pair
+                            for l in running.values()):
+                        continue    # a twin is still running elsewhere
+                    requeue_map(remake_map(jid, t.index))
+                    map_backlog += 1
+                    n_reexec += 1
+                else:
+                    requeue_red(remake_reduce(jid, t.index))
+                    reds_unassigned[jid] += 1
+                    n_reexec += 1
+                    if maps_left[jid] == 0:
+                        red_ready_backlog += 1
+                        if notify_maps_done is not None:
+                            notify_maps_done(jid)   # re-mark the new bucket
+
+        def make_observation(now: float, full: bool = False):
+            """The O(hosts) idle/busy fleet walk runs only for autoscale
+            ticks (``full=True``) of policies that declared
+            ``needs_idle_hosts`` — churn events (including lease-expiry
+            renewals, which read only backlog/fleet-size/cost, all O(1))
+            never pay it."""
+            idle: Tuple[HostId, ...] = ()
+            busy = 0
+            if full and getattr(elastic.autoscaler, "needs_idle_hosts",
+                                False):
+                cl = self.cluster
+                idle_list = []
+                for hid in all_hosts:
+                    h = cl.host(hid)
+                    if (map_free[hid] == h.map_slots
+                            and red_free[hid] == h.reduce_slots):
+                        idle_list.append(hid)
+                    else:
+                        busy += 1
+                idle = tuple(sorted(idle_list,
+                                    key=lambda h: (h.pod, h.index)))
+            return elastic.observe(
+                now, map_backlog=map_backlog,
+                red_backlog=red_ready_backlog, busy_hosts=busy,
+                idle_hosts=idle)
+
+        def apply_elastic(actions, now: float):
+            for hid, reason in actions.losses:
+                lose_host_sim(hid, now)
+                elastic.applied_loss(hid, now, reason)
+            for pod, kind in actions.adds:
+                hid = add_host_sim(pod, kind, now)
+                for fev in elastic.applied_add(hid, kind, now):
+                    push(fev.time, "churn", fev)
+            for fev in actions.followups:
+                push(fev.time, "churn", fev)
+
+        if elastic is not None:
+            for ev in elastic.startup(0.0):
+                push(ev.time, "churn", ev)
+            tick = getattr(elastic.autoscaler, "interval", None)
+            if tick:
+                push(tick, "scale", None)
+
         # total outstanding work, to know when the heartbeat chain may stop
         unfinished = sum(j.m + len(j.reduce_tasks) for j in self.jobs)
         hb_scheduled = False
+
+        def finish_job(job: Job, now: float):
+            job_finish[job.job_id] = now
+            fp = job.true_fp
+            if cfg.fp_noise:
+                fp *= float(1.0 + cfg.fp_noise
+                            * self.rng.standard_normal())
+            self.algo.record_completion(job, max(fp, 0.0))
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
@@ -338,7 +593,7 @@ class Simulator:
                 self.algo.submit(job)
                 map_backlog += job.m
                 if maps_left[job.job_id] == 0:  # map-less job: reduces ready
-                    red_ready_backlog += len(job.reduce_tasks)
+                    red_ready_backlog += reds_unassigned[job.job_id]
                     if notify_maps_done is not None:
                         notify_maps_done(job.job_id)
                 if not hb_scheduled:
@@ -346,7 +601,9 @@ class Simulator:
                     hb_scheduled = True
             elif kind == "map_done":
                 t = payload
-                log = running.pop(t.tid)
+                log = running.pop(t.tid, None)
+                if log is None:
+                    continue    # killed by churn before completion
                 pair = (t.job_id, t.index)
                 if pair in done_pairs:
                     # a speculative twin already finished this map task
@@ -357,12 +614,19 @@ class Simulator:
                 done_pairs.add(pair)
                 t.state = TaskState.DONE
                 log.finish = now
-                log.speculative = t.attempt > 0
+                log.speculative = t.tid in spec_tids
                 task_logs.append(log)
                 map_durations.append(log.finish - log.start)
                 job = job_by_id[t.job_id]
+                canon = job.map_tasks[t.index]
+                if canon is not t:   # re-execution/twin: sync canonical
+                    canon.state = TaskState.DONE
                 map_out[job.job_id].append(
-                    (log.host, job.shard_bytes[t.index]))
+                    (log.host, job.shard_bytes[t.index], t.index))
+                outs = host_outputs.get(log.host)
+                if outs is None:
+                    outs = host_outputs[log.host] = set()
+                outs.add(t.job_id)
                 left = maps_left[t.job_id] - 1
                 maps_left[t.job_id] = left
                 unfinished -= 1
@@ -370,35 +634,62 @@ class Simulator:
                 free_map_hosts.add(log.host)
                 self.algo.task_finished(t)
                 if left == 0:
-                    # shuffle gate opens exactly once per job
-                    red_ready_backlog += len(job.reduce_tasks)
+                    # shuffle gate opens (again, after churn re-runs)
+                    red_ready_backlog += reds_unassigned[t.job_id]
                     if notify_maps_done is not None:
                         notify_maps_done(t.job_id)
+                    if (reds_left[t.job_id] == 0
+                            and t.job_id not in job_finish):
+                        # churn only: every reduce finished before a lost
+                        # map output was re-run; the re-run completes the job
+                        finish_job(job, now)
             elif kind == "reduce_done":
                 t = payload
-                log = running.pop(t.tid)
+                log = running.pop(t.tid, None)
+                if log is None:
+                    continue    # killed by churn before completion
                 t.state = TaskState.DONE
                 log.finish = now
                 task_logs.append(log)
+                job = job_by_id[t.job_id]
+                canon = job.reduce_tasks[t.index]
+                if canon is not t:
+                    canon.state = TaskState.DONE
                 reds_left[t.job_id] -= 1
                 unfinished -= 1
                 red_free[log.host] += 1
                 free_red_hosts.add(log.host)
                 self.algo.task_finished(t)
                 if reds_left[t.job_id] == 0 and maps_left[t.job_id] == 0:
-                    job = job_by_id[t.job_id]
-                    job_finish[job.job_id] = now
-                    fp = job.true_fp
-                    if cfg.fp_noise:
-                        fp *= float(1.0 + cfg.fp_noise
-                                    * self.rng.standard_normal())
-                    self.algo.record_completion(job, max(fp, 0.0))
+                    finish_job(job, now)
+            elif kind == "churn":
+                apply_elastic(elastic.on_churn(payload,
+                                               make_observation(now)), now)
+            elif kind == "scale":
+                if unfinished > 0:
+                    apply_elastic(
+                        elastic.autoscale(make_observation(now, full=True)),
+                        now)
+                    push(now + elastic.autoscaler.interval, "scale", None)
             dispatch(now)
+            if unfinished == 0:
+                # all work done: the rest of the heap is heartbeats and
+                # churn/autoscale ticks — nothing observable can happen,
+                # and stopping here keeps lease accounting at makespan
+                break
 
         wtt = (max(job_finish.values()) - min(job_submit.values())
                if job_finish else 0.0)
-        return SimResult(
+        res = SimResult(
             algorithm=getattr(self.algo, "name", type(self.algo).__name__),
             task_logs=task_logs, job_submit=job_submit,
             job_finish=job_finish, int_bytes=int_bytes, pod_bytes=pod_bytes,
-            wtt=wtt, jobs=self.jobs)
+            wtt=wtt, jobs=self.jobs,
+            work_lost_mb=work_lost_mb, n_reexec=n_reexec,
+            n_host_adds=n_host_adds, n_host_losses=n_host_losses)
+        if elastic is not None:
+            summary = elastic.finalize(now)
+            res.elastic = summary
+            res.vps_hours = summary.vps_hours
+            res.cost_dollars = summary.cost
+        return res

@@ -1,6 +1,9 @@
 """Metrics of paper §6.1/§6.2: map-data locality (Eqs. 9-11), reduce-data
 locality, INT, JTT (+ normalized, Table 8), WTT, VPS load (Tables 9-10),
-cumulative completion (Fig. 15)."""
+cumulative completion (Fig. 15). Elastic runs (PR 2) additionally report
+the tenant's rental economics: VPS-hours, dollar cost, churn-lost work
+(MB of finished map output destroyed with departed disks) and the task
+re-execution count."""
 from __future__ import annotations
 
 import dataclasses
@@ -31,6 +34,13 @@ class Summary:
     vps_load_mean: float
     vps_load_std: float
     completion_curve: List[Tuple[float, float]]     # (time, fraction done)
+    # -- elastic-cluster outputs (zero for static runs) ----------------------
+    vps_hours: float = 0.0
+    cost_dollars: float = 0.0
+    work_lost_mb: float = 0.0
+    n_reexec: int = 0
+    n_host_adds: int = 0
+    n_host_losses: int = 0
 
 
 def _bench_of(log) -> str:
@@ -79,7 +89,10 @@ def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
         wtt=res.wtt,
         vps_load_mean=float(loads.mean()) if loads.size else 0.0,
         vps_load_std=float(loads.std(ddof=0)) if loads.size else 0.0,
-        completion_curve=curve)
+        completion_curve=curve,
+        vps_hours=res.vps_hours, cost_dollars=res.cost_dollars,
+        work_lost_mb=res.work_lost_mb, n_reexec=res.n_reexec,
+        n_host_adds=res.n_host_adds, n_host_losses=res.n_host_losses)
 
 
 def normalized_jtt(summaries: List[Summary], reference: str = "joss-t"

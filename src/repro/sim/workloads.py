@@ -126,6 +126,28 @@ def mixed_workload(cluster: VirtualCluster, seed: int = 11,
     return jobs
 
 
+def churn_scenarios() -> Dict[str, dict]:
+    """Named churn scenarios for elastic-cluster runs (PR 2): kwargs for
+    ``repro.elastic.ChurnConfig`` (minus the seed, which callers supply so
+    scenario and replica seeds stay independent).
+
+      * ``stable``  — no churn at all: the paper's static testbed. With a
+        fixed fleet this must be bit-identical to the static simulator.
+      * ``flaky``   — permanent VPS failures at 1/host-hour with 2-minute
+        replacement provisioning (provider-maintained fleet size).
+      * ``spot``    — 40% of the fleet on spot leases, preempted at
+        1.5/spot-host-hour, never replaced (the tenant rides it out).
+      * ``lease``   — 20-minute lease terms; expiry is a renewal decision
+        point for the autoscaler (rolling rentals, staggered start).
+    """
+    return {
+        "stable": dict(),
+        "flaky": dict(fail_rate=1.0, rejoin_delay=120.0),
+        "spot": dict(spot_fraction=0.4, spot_preempt_rate=1.5),
+        "lease": dict(lease_term=1200.0),
+    }
+
+
 def profiling_prelude(cluster: VirtualCluster, seed: int = 3) -> List[Job]:
     """One tiny job per (benchmark, input-type) submitted ahead of a workload
     so JoSS's FP registry is warm (the paper's steady state, where H already

@@ -1,0 +1,548 @@
+"""Elastic virtual-cluster invariants (PR 2).
+
+Equivalence: with churn disabled, the elastic machinery is bit-identical
+to the static simulator for all five algorithms (same harness style as
+tests/test_dispatch_fastpath.py). Churn runs are deterministic per seed,
+every job still completes, no task is ever assigned to a departed host,
+and the re-execution/cost accounting obeys basic conservation laws. Plus
+unit coverage for the mutable topology, queue patch/evacuation paths, the
+lease book, the churn model, the autoscaler policies, and the Fair
+scheduler's activity-keyed job order (PR 2 satellite).
+"""
+import random
+
+import pytest
+
+from repro.core.baselines import FairScheduler
+from repro.core.job import Job, MapTask, ReduceTask, TaskState
+from repro.core.joss import make_algorithm
+from repro.core.queues import ClusterQueues
+from repro.core.reference import ReferenceFair
+from repro.core.topology import HostId, Locality, VirtualCluster
+from repro.elastic import (ON_DEMAND, SPOT, Autoscaler,
+                           BacklogThresholdScaler, ChurnConfig, ChurnModel,
+                           CostCappedSpotScaler, ElasticEngine,
+                           FixedFleet, FleetObservation, LeaseBook,
+                           PriceSheet)
+from repro.sim.cluster_sim import SimConfig, Simulator
+from repro.sim.workloads import churn_scenarios, make_cluster, small_workload
+
+from tests.test_dispatch_fastpath import random_cluster_and_jobs
+
+ALGOS = ("joss-t", "joss-j", "fifo", "fair", "capacity")
+
+
+# --------------------------------------------------------------- helpers --
+def run_sim(name, seed, elastic_factory=None, n_jobs=12):
+    cluster, jobs = random_cluster_and_jobs(seed, n_jobs=n_jobs)
+    idx = {j.job_id: i for i, j in enumerate(jobs)}
+    algo = make_algorithm(name, cluster)
+    if hasattr(algo, "registry"):
+        for j in jobs:
+            if j.code_key in ("code0", "code1"):
+                algo.registry.record(j, j.true_fp)
+    elastic = elastic_factory(cluster) if elastic_factory else None
+    res = Simulator(cluster, algo, jobs, seed=7, elastic=elastic).run()
+    seq = [((log.task.tid[0], idx[log.task.tid[1]], *log.task.tid[2:]),
+            (log.host.pod, log.host.index), log.start, log.finish)
+           for log in res.task_logs]
+    metrics = (res.wtt, res.int_bytes, res.pod_bytes,
+               sorted((idx[k], v) for k, v in res.job_finish.items()))
+    return res, metrics, seq
+
+
+def mk_map(job_id, index, shard):
+    return MapTask(job_id, index, shard, 128)
+
+
+# ----------------------------------------------- churn-disabled identity --
+@pytest.mark.parametrize("name", ALGOS)
+@pytest.mark.parametrize("seed", [1, 3])
+def test_churn_disabled_is_bit_identical_to_static(name, seed):
+    """An attached engine with zero churn and a fixed fleet must not
+    perturb the static simulator at all (its RNG is untouched)."""
+    _, static_m, static_s = run_sim(name, seed)
+    _, elast_m, elast_s = run_sim(
+        name, seed, lambda cl: ElasticEngine(cl, autoscaler=FixedFleet()))
+    assert static_m == elast_m
+    assert static_s == elast_s
+
+
+# -------------------------------------------------- churn determinism etc --
+def flaky_engine(cluster, churn_seed=5):
+    return ElasticEngine(
+        cluster,
+        churn=ChurnConfig(seed=churn_seed, fail_rate=2.0,
+                          rejoin_delay=90.0, spot_fraction=0.25,
+                          spot_preempt_rate=2.0),
+        autoscaler=BacklogThresholdScaler(min_hosts=2))
+
+
+@pytest.mark.parametrize("name", ALGOS)
+def test_churn_runs_complete_and_are_deterministic(name):
+    res_a, met_a, seq_a = run_sim(name, 2, flaky_engine)
+    res_b, met_b, seq_b = run_sim(name, 2, flaky_engine)
+    assert met_a == met_b and seq_a == seq_b
+    assert (res_a.n_reexec, res_a.work_lost_mb, res_a.vps_hours,
+            res_a.cost_dollars) == (res_b.n_reexec, res_b.work_lost_mb,
+                                    res_b.vps_hours, res_b.cost_dollars)
+    # every job completed despite the churn
+    assert len(res_a.job_finish) == len(res_a.jobs)
+    for j in res_a.jobs:
+        assert j.done()
+
+
+@pytest.mark.parametrize("name", ALGOS)
+def test_no_task_assigned_to_departed_host(name):
+    res, _, _ = run_sim(name, 4, flaky_engine)
+    assert res.n_host_losses > 0, "scenario produced no churn"
+    # no task may start on a host at or after its departure instant
+    # (strictly before: same-instant starts would be stale slot offers);
+    # and since HostIds are never reused, one removal time per host suffices
+    removed = {}
+    for (t, hid, _r) in res.elastic.loss_log:
+        assert hid not in removed, "HostId reused after departure"
+        removed[hid] = t
+    for log in res.task_logs:
+        if log.host in removed:
+            assert log.start < removed[log.host]
+
+
+def test_reexecution_accounting():
+    """Churn that destroys finished map outputs forces re-runs and counts
+    the lost shuffle bytes."""
+    found = False
+    for seed in range(1, 8):
+        res, _, _ = run_sim("joss-t", seed, flaky_engine)
+        if res.work_lost_mb > 0:
+            assert res.n_reexec > 0
+            found = True
+            break
+    assert found, "no seed produced lost map outputs"
+
+
+def test_scenarios_cover_all_channels():
+    scen = churn_scenarios()
+    assert set(scen) >= {"stable", "flaky", "spot", "lease"}
+    assert scen["stable"] == {}
+    assert ChurnConfig(**scen["flaky"]).enabled
+    assert ChurnConfig(**scen["spot"]).enabled
+    assert ChurnConfig(**scen["lease"]).enabled
+
+
+# ------------------------------------------------------- mutable topology --
+def test_add_remove_host_replica_maintenance():
+    cluster = VirtualCluster([2, 2])
+    h00, h01, h10 = HostId(0, 0), HostId(0, 1), HostId(1, 0)
+    cluster.place_shard("a", [h00, h10])
+    cluster.place_shard("b", [h01])
+    # removal drops the host's replicas
+    cluster.remove_host(h00)
+    assert not cluster.has_host(h00)
+    assert cluster.replica_hosts("a") == frozenset({h10})
+    assert cluster.replica_pods("a") == [1]
+    assert cluster.locality_of("a", h01) is Locality.OFF_POD
+    # last-replica loss degrades reads to off-pod, never crashes
+    cluster.remove_host(h01)
+    assert cluster.replica_hosts("b") == frozenset()
+    assert cluster.nearest_replica("b", h10) == (None, Locality.OFF_POD)
+    assert cluster.locality_of("b", h10) is Locality.OFF_POD
+    # pod 0 is now empty but still listed; active_pods skips it
+    assert cluster.pods[0].hosts == []
+    assert cluster.active_pods() == [1]
+    # indices are never reused: the next lease in pod 0 gets index 2
+    h = cluster.add_host(0)
+    assert h.hid == HostId(0, 2)
+    assert cluster.host(h.hid) is h
+    assert h.local_shards == set()
+    assert cluster.active_pods() == [0, 1]
+
+
+def test_greedy_cover_never_places_in_hostless_pod():
+    """Policy B/C placement after churn: a job whose shards lost every
+    replica must not be routed into a hostless pod (its tasks would be
+    stranded forever — only a pod's own hosts serve its queues)."""
+    from repro.core.policies import policy_b, policy_c
+    cluster = VirtualCluster([2, 2])
+    cluster.place_shard("x0", [HostId(0, 0)])
+    cluster.place_shard("x1", [HostId(0, 1)])
+    cluster.remove_host(HostId(0, 0))
+    cluster.remove_host(HostId(0, 1))     # pod 0 dead, replicas all gone
+    queues = ClusterQueues(cluster)
+    job = Job(name="late", code_key="c", input_type="web",
+              shard_ids=["x0", "x1"], shard_bytes=[128.0, 128.0],
+              n_reducers=1)
+    for policy in (policy_b, policy_c):
+        plan = policy(job, cluster, queues)
+        assert plan.reduce_pod == 1
+        assert set(plan.map_assignment) == {1}
+
+
+def test_high_churn_late_submissions_complete():
+    """End-to-end: jobs submitted after heavy fleet decay (entire pods can
+    die, shards lose all replicas) still complete — placement avoids
+    hostless pods and reads degrade to off-pod."""
+    cluster = make_cluster((3, 3))
+    jobs = small_workload(cluster, seed=9, n_jobs=6)
+    for i, j in enumerate(jobs):
+        j.submit_time = 300.0 + 60.0 * i  # submit into the decayed fleet
+    algo = make_algorithm("joss-j", cluster)
+    eng = ElasticEngine(cluster, churn=ChurnConfig(
+        seed=13, fail_rate=20.0, horizon=2 * 3600.0))
+    res = Simulator(cluster, algo, jobs, seed=9, elastic=eng).run()
+    assert res.n_host_losses >= 4
+    assert len(res.job_finish) == len(jobs)
+
+
+def test_least_loaded_pod_skips_hostless_pods():
+    cluster = VirtualCluster([1, 2])
+    queues = ClusterQueues(cluster)
+    cluster.remove_host(HostId(0, 0))     # pod 0 empty but zero load
+    assert queues.least_loaded_pod() == 1
+
+
+# ----------------------------------------------------- queue churn hooks --
+def test_taskqueue_drop_host_purges_host_index():
+    cluster = VirtualCluster([2, 2])
+    h00, h10 = HostId(0, 0), HostId(1, 0)
+    cluster.place_shard("s", [h00, h10])
+    queues = ClusterQueues(cluster)
+    t = mk_map(1, 0, "s")
+    queues.pods[0].mq0.append(t)
+    assert queues.pods[0].mq0.peek_local(1, h00) is t
+    queues.host_lost(h00)
+    assert queues.pods[0].mq0.peek_local(1, h00) is None
+    assert queues.pods[0].mq0.peek_local(1, h10) is t   # survivor intact
+
+
+def test_mark_job_unready_reverses_ready_transition():
+    queues = ClusterQueues(VirtualCluster([2, 2]))
+    rq = queues.pods[0].rq0
+    rq.extend([ReduceTask(1, 0), ReduceTask(1, 1)])
+    queues.register_reduce_queue(1, rq)
+    never = lambda t: False
+    queues.mark_job_ready(1)
+    assert rq.pick_ready(never, trust_marks=True) is not None
+    queues.mark_job_unready(1)
+    assert rq.pick_ready(never, trust_marks=True) is None
+    queues.mark_job_ready(1)              # gate reopens after re-runs
+    assert rq.pick_ready(never, trust_marks=True) is not None
+
+
+def test_evacuate_pod_moves_work_and_ready_marks():
+    cluster = VirtualCluster([2, 2])
+    queues = ClusterQueues(cluster)
+    ms = [mk_map(1, i, f"s{i}") for i in range(3)]
+    rs = [ReduceTask(1, 0), ReduceTask(2, 0)]
+    queues.pods[0].mq0.extend(ms)
+    rq = queues.pods[0].new_reduce_queue()
+    rq.extend(rs)
+    queues.register_reduce_queue(1, rq)
+    queues.register_reduce_queue(2, rq)
+    queues.mark_job_ready(1)
+    total_before = queues.total_pending()
+    n_maps, n_reds = queues.evacuate_pod(0)
+    assert (n_maps, n_reds) == (3, 2)
+    assert queues.total_pending() == total_before     # moved, not created
+    assert queues.pods[0].unprocessed() == 0
+    assert len(queues.mq_fifo) == 3 and len(queues.rq_fifo) == 2
+    never = lambda t: False
+    # job 1's ready mark followed the move; job 2 stays gated
+    t = queues.rq_fifo.pick_ready(never, trust_marks=True)
+    assert t is rs[0]
+    assert queues.rq_fifo.pick_ready(never, trust_marks=True) is None
+
+
+def test_requeue_reduce_reaches_both_queues_for_marks():
+    """A job whose reduces are split across its original queue and RQ_FIFO
+    (churn requeue) must have gate notifications reach both."""
+    cluster = VirtualCluster([2, 2])
+    algo = make_algorithm("joss-t", cluster)
+    queues = algo.scheduler.queues
+    rq = queues.pods[1].rq0
+    r_orig = ReduceTask(7, 0)
+    rq.append(r_orig)
+    queues.register_reduce_queue(7, rq)
+    retry = ReduceTask(7, 1, attempt=1)
+    algo.requeue_reduce_task(retry)
+    queues.mark_job_ready(7)
+    never = lambda t: False
+    assert queues.rq_fifo.pick_ready(never, trust_marks=True) is retry
+    assert rq.pick_ready(never, trust_marks=True) is r_orig
+    queues.mark_job_unready(7)
+    assert rq.pick_ready(never, trust_marks=True) is None
+
+
+# ------------------------------------------------------------ lease book --
+def test_lease_book_accounting():
+    book = LeaseBook(PriceSheet(ondemand_per_hour=1.0, spot_per_hour=0.25))
+    a, b = HostId(0, 0), HostId(0, 1)
+    book.open(a, ON_DEMAND, 0.0)
+    book.open(b, SPOT, 1800.0)
+    book.close(a, 3600.0, "expire")
+    assert book.kind_of(b) == SPOT and book.kind_of(a) is None
+    # a: 1h @ $1; b: 0.5h open so far @ $0.25
+    assert book.vps_hours(3600.0) == pytest.approx(1.5)
+    assert book.cost(3600.0) == pytest.approx(1.0 + 0.5 * 0.25)
+    book.close_all(5400.0)
+    assert book.vps_hours() == pytest.approx(2.0)
+    assert book.n_leases() == 2
+    book2 = LeaseBook()
+    book2.open(a, ON_DEMAND, 0.0)
+    with pytest.raises(ValueError):
+        book2.open(a, SPOT, 1.0)          # double-open
+
+
+# ------------------------------------------------------------ churn model --
+def test_churn_model_deterministic_and_sorted():
+    cluster = VirtualCluster([3, 3])
+    cfg = ChurnConfig(seed=11, fail_rate=3.0, rejoin_delay=60.0,
+                      spot_fraction=0.5, spot_preempt_rate=3.0,
+                      lease_term=600.0, horizon=7200.0)
+    spot_a, ev_a = ChurnModel(cfg).initial_trace(cluster)
+    spot_b, ev_b = ChurnModel(cfg).initial_trace(cluster)
+    assert spot_a == spot_b and ev_a == ev_b
+    assert ev_a == sorted(ev_a, key=lambda e: e.time)
+    kinds = {e.kind for e in ev_a}
+    assert "expire" in kinds              # every host gets a lease term
+    assert all(0 < e.time for e in ev_a)
+    # expiries are staggered over [term, 2*term)
+    first_exp = [e.time for e in ev_a if e.kind == "expire"]
+    assert all(600.0 <= t < 1200.0 for t in first_exp)
+
+
+# ------------------------------------------------------------ autoscalers --
+def obs(now=0.0, n_hosts=8, mb=0, rb=0, cost=0.0, idle=()):
+    return FleetObservation(now=now, n_hosts=n_hosts, map_backlog=mb,
+                            red_backlog=rb, busy_hosts=n_hosts - len(idle),
+                            cost=cost, vps_hours=0.0,
+                            idle_hosts=tuple(idle))
+
+
+def test_fixed_fleet_never_scales():
+    pol = FixedFleet()
+    assert pol.interval is None
+    assert pol.decide(obs(mb=1000)).empty
+    assert pol.renew_lease(HostId(0, 0), ON_DEMAND, obs())
+
+
+def test_backlog_scaler_out_in_and_renewal():
+    pol = BacklogThresholdScaler(hi=4.0, step=3, min_hosts=4,
+                                 max_hosts=10, cooldown=0.0)
+    d = pol.decide(obs(n_hosts=8, mb=100))
+    assert d.add == 2 and d.kind == ON_DEMAND     # capped at max_hosts
+    idle = [HostId(0, i) for i in range(6)]
+    d = pol.decide(obs(now=100.0, n_hosts=8, mb=0, idle=idle))
+    assert d.add == 0 and len(d.remove) == 3
+    # the policy trusts the observation's order (engine sorts newest
+    # lease first) and returns a prefix
+    assert d.remove == (HostId(0, 0), HostId(0, 1), HostId(0, 2))
+    assert pol.renew_lease(HostId(0, 0), ON_DEMAND, obs(mb=5))
+    assert not pol.renew_lease(HostId(0, 0), ON_DEMAND,
+                               obs(n_hosts=8, mb=0))
+    assert pol.renew_lease(HostId(0, 0), ON_DEMAND, obs(n_hosts=4, mb=0))
+
+
+def test_backlog_scaler_cooldown():
+    pol = BacklogThresholdScaler(hi=1.0, step=2, cooldown=60.0)
+    assert pol.decide(obs(now=10.0, n_hosts=2, mb=50)).add == 2
+    assert pol.decide(obs(now=30.0, n_hosts=4, mb=50)).empty   # cooling
+    assert pol.decide(obs(now=80.0, n_hosts=4, mb=50)).add == 2
+
+
+def test_cost_capped_spot_scaler_respects_budget():
+    pol = CostCappedSpotScaler(budget=5.0, hi=1.0, step=2, cooldown=0.0)
+    d = pol.decide(obs(n_hosts=4, mb=50, cost=1.0))
+    assert d.add == 2 and d.kind == SPOT
+    assert pol.decide(obs(n_hosts=4, mb=50, cost=5.0)).empty
+    # over budget: spot leases lapse, on-demand renewal falls to parent
+    assert not pol.renew_lease(HostId(0, 9), SPOT, obs(mb=50, cost=6.0))
+    assert pol.renew_lease(HostId(0, 0), ON_DEMAND, obs(mb=50, cost=6.0))
+    assert pol.renew_lease(HostId(0, 9), SPOT, obs(mb=50, cost=1.0))
+
+
+def test_engine_orders_idle_hosts_newest_lease_first():
+    """Scale-in victims come from the lease book's true recency order, so
+    cross-pod index comparisons can't sacrifice replica-holding base
+    hosts before empty surge hosts."""
+    cluster = VirtualCluster([1, 3])
+    eng = ElasticEngine(cluster)
+    eng.startup(0.0)                       # base fleet leased at t=0
+    surge = cluster.add_host(0)            # pod 0 is least populated
+    eng.applied_add(surge.hid, ON_DEMAND, 500.0)
+    idle = (HostId(1, 2), surge.hid, HostId(1, 0))
+    o = eng.observe(600.0, map_backlog=0, red_backlog=0, busy_hosts=0,
+                    idle_hosts=idle)
+    assert o.idle_hosts[0] == surge.hid    # newest lease leads
+    assert o.idle_hosts[1:] == (HostId(1, 0), HostId(1, 2))
+
+
+def test_batch_scale_out_spreads_across_pods():
+    """A multi-host scale-out batch balances pods instead of piling every
+    new lease into the pod that was smallest before the batch."""
+    cluster = VirtualCluster([2, 2])
+    eng = ElasticEngine(cluster, autoscaler=BacklogThresholdScaler(
+        hi=0.5, step=4, cooldown=0.0, max_hosts=16))
+    eng.startup(0.0)
+    o = eng.observe(50.0, map_backlog=40, red_backlog=0, busy_hosts=4)
+    actions = eng.autoscale(o)
+    assert sorted(pod for pod, _k in actions.adds) == [0, 0, 1, 1]
+
+
+def test_autoscaler_instances_are_single_run():
+    """A policy keeps cooldown state in absolute sim time; reusing it
+    across engines would silently suppress scaling in the second run."""
+    pol = BacklogThresholdScaler()
+    ElasticEngine(VirtualCluster([2]), autoscaler=pol)
+    with pytest.raises(ValueError):
+        ElasticEngine(VirtualCluster([2]), autoscaler=pol)
+
+
+def test_churn_reexecutions_not_flagged_speculative():
+    """TaskLog.speculative marks straggler backups only — churn re-runs
+    share the attempt counter but are not speculative."""
+    res, _, _ = run_sim("joss-t", 2, flaky_engine)
+    assert res.n_reexec > 0
+    assert not any(l.speculative for l in res.task_logs)
+
+
+def test_engine_vetoes_last_host_loss():
+    cluster = VirtualCluster([1])
+    eng = ElasticEngine(cluster)
+    eng.startup(0.0)
+    o = eng.observe(0.0, map_backlog=0, red_backlog=0, busy_hosts=0)
+    from repro.elastic import ChurnEvent
+    actions = eng.on_churn(ChurnEvent(1.0, "fail", 0, 0), o)
+    assert actions.losses == []
+    assert eng.summary.n_vetoed == 1
+
+
+def test_engine_vetoes_batch_scale_in_to_zero():
+    """A multi-host scale-in batch must keep at least one host even when
+    the policy's min_hosts would allow dropping everything."""
+    cluster = VirtualCluster([2])
+    eng = ElasticEngine(cluster, autoscaler=BacklogThresholdScaler(
+        min_hosts=0, cooldown=0.0))
+    eng.startup(0.0)
+    idle = (HostId(0, 0), HostId(0, 1))
+    o = eng.observe(100.0, map_backlog=0, red_backlog=0, busy_hosts=0,
+                    idle_hosts=idle)
+    actions = eng.autoscale(o)
+    assert len(actions.losses) == 1
+    assert eng.summary.n_vetoed == 1
+
+
+def test_join_follows_only_applied_failures():
+    """Replacement joins pair 1:1 with failures the engine actually
+    applied — a vetoed failure spawns no phantom host."""
+    cluster = VirtualCluster([1])
+    cfg = ChurnConfig(seed=1, fail_rate=1.0, rejoin_delay=60.0)
+    eng = ElasticEngine(cluster, churn=cfg)
+    eng.startup(0.0)
+    from repro.elastic import ChurnEvent
+    o = eng.observe(5.0, map_backlog=0, red_backlog=0, busy_hosts=0)
+    actions = eng.on_churn(ChurnEvent(5.0, "fail", 0, 0), o)
+    assert actions.losses == [] and actions.followups == []  # vetoed
+    # with a second host, the failure applies and a join is scheduled
+    cluster.add_host(0)
+    actions = eng.on_churn(ChurnEvent(6.0, "fail", 0, 0), o)
+    assert len(actions.losses) == 1
+    assert [e.kind for e in actions.followups] == ["join"]
+    assert actions.followups[0].time == pytest.approx(65.0)
+
+
+# ------------------------------------- Fair activity-keyed order satellite --
+def test_fair_job_order_matches_reference_sort():
+    """Property test: after arbitrary interleavings of submits, task
+    starts/finishes and drains, the bucketed order equals the seed's
+    sorted() order."""
+    rng = random.Random(123)
+    cluster = VirtualCluster([2, 2])
+    fast, ref = FairScheduler(cluster), ReferenceFair(cluster)
+    pending, running = [], []
+    for step in range(500):
+        op = rng.random()
+        if op < 0.2 or not (pending or running):
+            m = rng.randint(1, 4)
+            job = Job(name=f"f{step}", code_key="c", input_type="web",
+                      shard_ids=[f"fs{step}/{b}" for b in range(m)],
+                      shard_bytes=[128.0] * m, n_reducers=1,
+                      submit_time=float(rng.randint(0, 50)))
+            fast.submit(job)
+            ref.submit(job)
+            pending += job.map_tasks
+        elif op < 0.6 and pending:
+            t = pending.pop(rng.randrange(len(pending)))
+            t.state = TaskState.RUNNING
+            fast.task_started(t)
+            ref.task_started(t)
+            running.append(t)
+        elif running:
+            t = running.pop(rng.randrange(len(running)))
+            t.state = TaskState.DONE
+            fast.task_finished(t)
+            ref.task_finished(t)
+        order_fast = [j.job_id for j in fast.job_order()]
+        order_ref = [j.job_id for j in ref.job_order()]
+        # fast may track drained-but-running jobs the reference pruned and
+        # vice versa at the margins; compare order on the common set
+        common = set(order_ref) & set(order_fast)
+        assert ([j for j in order_fast if j in common]
+                == [j for j in order_ref if j in common])
+        assert len(common) >= max(1, len(order_ref) - 1)
+
+
+@pytest.mark.parametrize("seed", [5, 9])
+def test_fair_pick_sequence_equivalence_under_churn(seed):
+    """End-to-end: fast Fair == reference Fair trajectories still hold
+    (the static equivalence tests cover this; here with a churn engine on
+    the fast side against itself for determinism)."""
+    res_a, met_a, seq_a = run_sim("fair", seed, flaky_engine)
+    res_b, met_b, seq_b = run_sim("fair", seed, flaky_engine)
+    assert met_a == met_b and seq_a == seq_b
+
+
+# ------------------------------------------------------------- integration --
+def test_speculative_execution_with_churn():
+    """Speculative twins and churn kills share the attempt sequence: no tid
+    collisions, every job completes."""
+    cluster, jobs = random_cluster_and_jobs(21, n_jobs=8)
+    algo = make_algorithm("joss-t", cluster)
+    slow = {HostId(0, 0): 3.0}
+    eng = flaky_engine(cluster)
+    cfg = SimConfig(slow_hosts=slow, speculative=True)
+    res = Simulator(cluster, algo, jobs, config=cfg, seed=3,
+                    elastic=eng).run()
+    assert len(res.job_finish) == len(jobs)
+
+
+def test_churned_in_hosts_match_fleet_slot_shape():
+    """Replacement/scale-out hosts inherit the cluster's construction-time
+    slot configuration, so a multi-slot fleet keeps uniform capacity."""
+    cluster = VirtualCluster([2, 2], map_slots=2, reduce_slots=3)
+    h = cluster.add_host(0)
+    assert (h.map_slots, h.reduce_slots) == (2, 3)
+    assert cluster.add_host(1, map_slots=1).map_slots == 1  # explicit wins
+    # end-to-end: churn on a 2-slot fleet never degrades host capacity
+    cluster2 = make_cluster((4, 4), map_slots=2)
+    jobs = small_workload(cluster2, seed=3, n_jobs=8)
+    algo = make_algorithm("joss-t", cluster2)
+    eng = ElasticEngine(cluster2, churn=ChurnConfig(
+        seed=4, fail_rate=2.0, rejoin_delay=60.0))
+    res = Simulator(cluster2, algo, jobs, seed=3, elastic=eng).run()
+    assert res.n_host_adds > 0 or res.n_host_losses > 0
+    assert len(res.job_finish) == len(jobs)
+    for h in cluster2.hosts():
+        assert (h.map_slots, h.reduce_slots) == (2, 1)
+
+
+def test_paper_workload_under_churn_all_jobs_finish():
+    cluster = make_cluster((4, 4))
+    jobs = small_workload(cluster, seed=5, n_jobs=10)
+    algo = make_algorithm("joss-j", cluster)
+    eng = ElasticEngine(
+        cluster, churn=ChurnConfig(seed=2, **churn_scenarios()["flaky"]),
+        autoscaler=FixedFleet())
+    res = Simulator(cluster, algo, jobs, seed=5, elastic=eng).run()
+    assert len(res.job_finish) == len(jobs)
+    assert res.vps_hours > 0 and res.cost_dollars > 0
