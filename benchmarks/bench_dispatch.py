@@ -103,7 +103,7 @@ def run(quick: bool = False) -> str:
         rows.append([f"{len(hpp)}x{hpp[0]}", n, old_ev, new_ev,
                      new_ev / old_ev])
         payload["events"].append(
-            {"hosts": n, "jobs": n_jobs,
+            {"hosts": n, "pods": len(hpp), "jobs": n_jobs,
              "old_events_per_s": old_ev, "new_events_per_s": new_ev})
     out += "\n" + table(
         "Dispatch throughput — simulator events/s (backlog-gated dispatch "

@@ -1,4 +1,5 @@
-"""Beyond-paper: elastic virtual clusters — churn rate x fleet size sweep.
+"""Beyond-paper: elastic virtual clusters — churn rate x fleet size sweep,
+plus the PR 3 durability axis (re-replication / shuffle checkpointing).
 
 Runs all five algorithms on rented fleets under the named churn scenarios
 (``repro.sim.workloads.churn_scenarios``): VPS failures with replacement,
@@ -8,25 +9,47 @@ economics the static simulator cannot see: VPS-hours, dollar cost,
 work-lost MB (finished map output destroyed with departed disks) and the
 forced re-execution count, next to the WTT the paper measures.
 
+The durability sweep re-runs the churny scenarios under the
+``repro.sim.workloads.durability_scenarios`` modes and reports the deltas
+vs the PR 2 baseline: re-exec count, work-lost MB, re-executed-map
+locality rate (the rate re-replication exists to raise), checkpoint MB
+written/saved and the object-store bill.
+
 Claim checks:
   * the ``stable`` scenario (fixed fleet, zero churn) is bit-identical to
-    the static simulator for every algorithm;
+    the static simulator for every algorithm — with and without a
+    disabled durability config attached;
+  * a *disabled* durability config leaves churn runs bit-identical to
+    the PR 2 elastic simulator for every algorithm — and so does an
+    *enabled-but-inert* one (checkpointing armed with a threshold no job
+    reaches, re-replication armed under zero churn), which actually
+    executes the new gated branches;
   * churn runs are deterministic per seed;
   * every job completes under churn, and no task is ever assigned to a
     departed host;
-  * churn costs re-executed work (re-exec count > 0 somewhere in the sweep).
+  * churn costs re-executed work (re-exec count > 0 somewhere in the
+    sweep), and checkpointed sweep rows lose exactly 0 MB of finished
+    output;
+  * on the saturated-fleet probe (``_durability_probe``, where retries
+    out-wait the repair delay), re-replication measurably raises the
+    re-executed-map locality rate over the ``off`` baseline and
+    checkpointing strictly reduces total re-executions — aggregated
+    over all five algorithms.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 from benchmarks.common import table
 from repro.core.joss import make_algorithm
 from repro.elastic import (BacklogThresholdScaler, ChurnConfig,
-                           CostCappedSpotScaler, ElasticEngine, FixedFleet)
-from repro.sim.cluster_sim import Simulator
-from repro.sim.workloads import (churn_scenarios, make_cluster,
-                                 profiling_prelude, small_workload)
+                           CostCappedSpotScaler, DurabilityConfig,
+                           ElasticEngine, FixedFleet)
+from repro.sim.metrics import reexec_map_stats as _reexec_stats
+from repro.sim.cluster_sim import SimConfig, Simulator
+from repro.sim.workloads import (churn_scenarios, durability_scenarios,
+                                 make_cluster, profiling_prelude,
+                                 small_workload)
 
 ALGOS = ("joss-t", "joss-j", "fifo", "fair", "capacity")
 
@@ -46,7 +69,7 @@ def _autoscaler_for(scenario: str, n_hosts: int):
 
 
 def _run(name: str, hosts_per_pod, scenario: str, cfg_kw: dict,
-         n_jobs: int, seed: int = 11):
+         n_jobs: int, seed: int = 11, durability: Optional[dict] = None):
     cluster = make_cluster(hosts_per_pod)
     jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
     algo = make_algorithm(name, cluster)
@@ -58,7 +81,9 @@ def _run(name: str, hosts_per_pod, scenario: str, cfg_kw: dict,
         churn = ChurnConfig(seed=seed + 1, **cfg_kw) if cfg_kw else None
         elastic = ElasticEngine(
             cluster, churn=churn,
-            autoscaler=_autoscaler_for(scenario, sum(hosts_per_pod)))
+            autoscaler=_autoscaler_for(scenario, sum(hosts_per_pod)),
+            durability=(DurabilityConfig(**durability)
+                        if durability is not None else None))
     res = Simulator(cluster, algo, jobs, seed=seed, elastic=elastic).run()
     assert len(res.job_finish) == len(jobs), \
         f"{name}/{scenario}: {len(res.job_finish)}/{len(jobs)} jobs finished"
@@ -79,18 +104,66 @@ def _static_sig(res):
             tuple(sorted(res.job_finish.values())))
 
 
+def _full_sig(res):
+    """Trajectory signature for bit-identity claims: every task placement
+    and timing, not just the aggregate metrics. Job ids are globally
+    counted across runs, so they are remapped to submission order."""
+    idx = {j.job_id: i for i, j in enumerate(res.jobs)}
+    return (_static_sig(res), res.n_reexec, res.work_lost_mb,
+            tuple(((log.task.tid[0], idx[log.task.tid[1]],
+                    *log.task.tid[2:]),
+                   (log.host.pod, log.host.index),
+                   log.start, log.finish) for log in res.task_logs))
+
+
+def _durability_probe(name: str, dur_kw: Optional[dict],
+                      seed: int = 11, n_jobs: int = 12):
+    """The durability claim-check experiment: a saturated fleet.
+
+    Requeued retries are served with Hadoop's failed-task priority, so on
+    a lightly loaded fleet they are re-assigned within one heartbeat —
+    before any repair with a positive detection delay can land. The
+    regime where re-replication pays is a backlogged cluster: long map
+    tasks (``map_rate=2``) submitted as one burst keep every slot busy,
+    so a retry waits in MQ_FIFO longer than the repair takes and its
+    locality pick sees the restored replica. That is exactly the paper's
+    §1 premise (map inputs stay replicated) under load, and it makes the
+    claim check deterministic-by-margin instead of racing the heartbeat.
+    """
+    cluster = make_cluster((4, 4))
+    jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
+    for j in jobs:
+        j.submit_time = 0.0
+    algo = make_algorithm(name, cluster)
+    if hasattr(algo, "registry"):
+        for j in profiling_prelude(cluster):
+            algo.registry.record(j, j.true_fp)
+    eng = ElasticEngine(
+        cluster,
+        churn=ChurnConfig(seed=seed + 1, fail_rate=4.0, rejoin_delay=60.0),
+        autoscaler=FixedFleet(),
+        durability=(DurabilityConfig(**dur_kw)
+                    if dur_kw is not None else None))
+    return Simulator(cluster, algo, jobs, config=SimConfig(map_rate=2.0),
+                     seed=seed, elastic=eng).run()
+
+
 def run(quick: bool = False) -> str:
     fleets = [(8, 8)] if quick else [(8, 8), (32, 32)]
     n_jobs = 20 if quick else 40
     scenarios = churn_scenarios()
+    dur_modes = durability_scenarios()
 
     rows: List[List] = []
     reexec_total = 0
+    base: Dict[Tuple[str, str], object] = {}   # (scenario, algo) -> res
     for hosts_per_pod in fleets:
         for scen, cfg_kw in scenarios.items():
             for name in ALGOS:
                 res = _run(name, hosts_per_pod, scen, cfg_kw, n_jobs)
                 reexec_total += res.n_reexec
+                if hosts_per_pod == fleets[0]:
+                    base[(scen, name)] = res
                 rows.append([
                     f"{len(hosts_per_pod)}x{hosts_per_pod[0]}", scen, name,
                     res.wtt, res.vps_hours, res.cost_dollars,
@@ -102,14 +175,79 @@ def run(quick: bool = False) -> str:
         ["fleet", "scenario", "algo", "wtt s", "VPS-h", "$", "lost MB",
          "re-exec", "losses", "adds"], rows)
 
-    # claim check: zero-churn elastic == static simulator, bit-identical
+    # ---------------------------------------------- durability axis (PR 3) --
+    churny = ("flaky", "spot")
+    lost_mb: Dict[str, float] = {m: 0.0 for m in dur_modes}
+    drows: List[List] = []
+    ckpt_written = 0.0
+    for scen in churny:
+        for mode, dur_kw in dur_modes.items():
+            for name in ALGOS:
+                if mode == "off":
+                    res = base[(scen, name)]     # the PR 2 baseline rows
+                else:
+                    res = _run(name, fleets[0], scen, scenarios[scen],
+                               n_jobs, durability=dur_kw)
+                n_re, n_loc = _reexec_stats(res)
+                lost_mb[mode] += res.work_lost_mb
+                ckpt_written += res.ckpt_mb_written
+                drows.append([
+                    scen, mode, name, res.wtt, res.n_reexec,
+                    res.work_lost_mb,
+                    (f"{n_loc}/{n_re}" if n_re else "-"),
+                    res.n_rerep, res.rerep_mb, res.ckpt_mb_written,
+                    res.ckpt_saved_mb, res.cost_dollars])
+    out += "\n" + table(
+        "Durability axis — re-replication / shuffle checkpointing under "
+        f"churn (fleet {len(fleets[0])}x{fleets[0][0]}; 'reexec-loc' = "
+        "node/pod-local re-executed maps)",
+        ["scenario", "durability", "algo", "wtt s", "re-exec", "lost MB",
+         "reexec-loc", "rerep", "rerep MB", "ckpt MB", "saved MB", "$"],
+        drows)
+
+    # claim check: zero-churn elastic == static simulator, bit-identical —
+    # with and without a disabled durability config attached
+    disabled = dict(rereplicate=False, checkpoint=False)
     for name in ALGOS:
         static = _run(name, fleets[0], None, {}, n_jobs)
         stable = _run(name, fleets[0], "stable", {}, n_jobs)
+        stable_d = _run(name, fleets[0], "stable", {}, n_jobs,
+                        durability=disabled)
         assert _static_sig(static) == _static_sig(stable), \
             f"stable-scenario run diverged from static simulator for {name}"
+        assert _full_sig(stable) == _full_sig(stable_d), \
+            f"disabled durability perturbed the stable scenario for {name}"
     out += ("\n\n[claim check: stable scenario bit-identical to the static "
-            "simulator for all 5 algorithms]")
+            "simulator for all 5 algorithms, durability config attached "
+            "or not]")
+
+    # claim check: disabled durability is bit-identical to the PR 2
+    # elastic simulator under churn, for every algorithm. A disabled
+    # config attaches no manager (same code path by construction), so an
+    # *enabled-but-inert* config — checkpointing on with a threshold no
+    # job reaches — is also checked: it executes the ckpt-gated branches
+    # (store-read routing, loss-path skip, write-time) and still must not
+    # change a single bit.
+    inert_ckpt = dict(checkpoint=True, ckpt_min_job_mb=1e18)
+    for name in ALGOS:
+        a = base[("flaky", name)]
+        b = _run(name, fleets[0], "flaky", scenarios["flaky"], n_jobs,
+                 durability=disabled)
+        c = _run(name, fleets[0], "flaky", scenarios["flaky"], n_jobs,
+                 durability=inert_ckpt)
+        assert _full_sig(a) == _full_sig(b), \
+            f"disabled durability perturbed the flaky scenario for {name}"
+        assert _full_sig(a) == _full_sig(c), \
+            f"inert checkpointing perturbed the flaky scenario for {name}"
+    # rerep enabled under zero churn: the repair pipeline arms (shard
+    # sizes indexed) but no loss ever fires it — still bit-static
+    static = _run("joss-t", fleets[0], None, {}, n_jobs)
+    stable_r = _run("joss-t", fleets[0], "stable", {}, n_jobs,
+                    durability=durability_scenarios()["rerep"])
+    assert _static_sig(static) == _static_sig(stable_r), \
+        "armed re-replication perturbed the zero-churn scenario"
+    out += ("\n[claim check: disabled AND enabled-but-inert durability "
+            "bit-identical to the PR 2 elastic runs for all 5 algorithms]")
 
     # claim check: determinism per seed (repeat one churn run)
     a = _run("joss-t", fleets[0], "flaky", scenarios["flaky"], n_jobs)
@@ -120,6 +258,50 @@ def run(quick: bool = False) -> str:
     out += "\n[claim check: churn runs deterministic per seed]"
 
     assert reexec_total > 0, "churn sweep produced no re-executions"
+
+    # structural claim: checkpointed sweep rows never lose finished work
+    assert lost_mb["ckpt"] == 0.0 and lost_mb["full"] == 0.0, \
+        "checkpointed runs lost finished map output"
+    assert ckpt_written > 0, "checkpoint sweep wrote nothing"
+
+    # claim check: on a saturated fleet (see _durability_probe), delayed
+    # re-replication measurably raises the re-executed-map locality rate,
+    # and checkpointing drives work-lost to 0 MB while cutting forced
+    # re-executions to the killed-running remainder — both aggregated
+    # over all five algorithms
+    probe_rerep = dict(durability_scenarios()["rerep"],
+                       rerep_delay=2.0, rerep_bandwidth=400.0)
+    p_off = p_loc = r_off = r_loc = 0
+    off_reexec = ckpt_reexec = 0
+    for name in ALGOS:
+        off = _durability_probe(name, None)
+        rer = _durability_probe(name, probe_rerep)
+        ckp = _durability_probe(name, durability_scenarios()["ckpt"])
+        n, loc = _reexec_stats(off)
+        p_off += n
+        p_loc += loc
+        n, loc = _reexec_stats(rer)
+        r_off += n
+        r_loc += loc
+        assert rer.n_rerep > 0, f"probe produced no repairs for {name}"
+        off_reexec += off.n_reexec
+        ckpt_reexec += ckp.n_reexec
+        assert ckp.work_lost_mb == 0.0, \
+            f"checkpointing lost finished output for {name}"
+    off_rate = p_loc / max(1, p_off)
+    rer_rate = r_loc / max(1, r_off)
+    assert p_off > 0 and r_off > 0, "probe produced no re-executions"
+    assert rer_rate > off_rate + 0.1, \
+        (f"re-replication did not raise re-executed-map locality "
+         f"({rer_rate:.3f} vs {off_rate:.3f})")
+    out += ("\n[claim check: re-replication raises re-executed-map "
+            f"locality rate {off_rate:.2f} -> {rer_rate:.2f} "
+            "(saturated-fleet probe, all 5 algorithms)]")
+    assert ckpt_reexec < off_reexec, \
+        (f"checkpointing did not reduce re-executions "
+         f"({ckpt_reexec} vs {off_reexec})")
+    out += ("\n[claim check: checkpointing -> work-lost 0 MB, re-execs "
+            f"{off_reexec} -> {ckpt_reexec} (probe, all 5 algorithms)]")
     return out
 
 

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""CI gate on the dispatch-perf trajectory (PR 3 satellite).
+
+Re-measures the scheduling hot path at the committed operating points and
+compares against the stored ``BENCH_dispatch.json`` trajectory (written by
+full ``benchmarks/run.py --only dispatch`` sweeps):
+
+  * **assign µs/slot** at every stored point with >= 4096 total map slots
+    (the 4096-host single-slot, 8192-host, and 4096x2-slot entries) —
+    fails when the fresh measurement is more than ``--threshold`` (default
+    25%) slower than the stored trajectory;
+  * **simulator events/s** at the largest stored event point — fails when
+    the fresh rate drops below stored / (1 + threshold).
+
+Measurements are best-of-N (the same harness the benches use), so a
+failure means the hot path actually regressed, not that the CI machine
+sneezed. ``--slowdown`` multiplies the fresh assign time / divides the
+fresh event rate by a factor — an injectable regression used by
+``tests/test_ci_gate.py`` to prove the gate trips.
+
+Exit code: 0 = within budget, 1 = regression (or missing trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+JSON_PATH = os.path.join(_ROOT, "BENCH_dispatch.json")
+
+#: assign entries are gated at and above this many total map slots — the
+#: scale points PR 1's O(1) envelope was accepted at
+MIN_GATED_SLOTS = 4096
+
+
+def _hpp(entry: dict) -> list:
+    """Reconstruct hosts_per_pod from a stored sweep entry (event entries
+    predating PR 3 carry no pod count; that sweep is 2-pod)."""
+    pods = entry.get("pods", 2)
+    return [entry["hosts"] // pods] * pods
+
+
+def _key(entry: dict) -> tuple:
+    return entry["hosts"], entry.get("map_slots", 1)
+
+
+def gated_assign_entries(stored: dict) -> list:
+    """The stored assign entries the gate judges — the single source of
+    truth for both the measurement loop and the comparison."""
+    return [e for e in stored["assign"]
+            if e["hosts"] * e.get("map_slots", 1) >= MIN_GATED_SLOTS]
+
+
+def gated_event_entry(stored: dict) -> dict:
+    """The stored event point the gate judges (the largest sweep point)."""
+    return max(stored["events"], key=lambda e: e["hosts"])
+
+
+def _fresh_assign_us(entry: dict) -> float:
+    """Fresh best-of-N assign µs/slot at a stored sweep point."""
+    from benchmarks.bench_dispatch import _assign_rate
+    rate = _assign_rate(_hpp(entry), reference=False,
+                        map_slots=entry.get("map_slots", 1))
+    return 1e6 / rate
+
+
+def _fresh_events_per_s(entry: dict, reps: int = 2) -> float:
+    """Fresh best-of-N simulator events/s at a stored event point."""
+    from benchmarks.bench_dispatch import _event_rate
+    return max(_event_rate(_hpp(entry), poll_all=False,
+                           n_jobs=entry["jobs"]) for _ in range(reps))
+
+
+def compare(stored: dict, fresh_assign_us: dict, fresh_events: float,
+            threshold: float) -> list:
+    """Pure comparison: returns a list of human-readable failure strings.
+
+    ``fresh_assign_us`` maps (hosts, map_slots) -> fresh µs/slot for every
+    gated assign entry; ``fresh_events`` is the fresh events/s at the
+    largest stored event point.
+    """
+    failures = []
+    for entry in gated_assign_entries(stored):
+        key = _key(entry)
+        stored_us = 1e6 / entry["new_tasks_per_s"]
+        fresh_us = fresh_assign_us[key]
+        if fresh_us > stored_us * (1.0 + threshold):
+            failures.append(
+                f"assign µs/slot at {entry['hosts']} hosts x "
+                f"{key[1]} slots: {fresh_us:.2f}us vs stored "
+                f"{stored_us:.2f}us (> {threshold:.0%} regression)")
+    biggest = gated_event_entry(stored)
+    stored_ev = biggest["new_events_per_s"]
+    if fresh_events < stored_ev / (1.0 + threshold):
+        failures.append(
+            f"events/s at {biggest['hosts']} hosts: {fresh_events:.0f} vs "
+            f"stored {stored_ev:.0f} (> {threshold:.0%} regression)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=JSON_PATH,
+                    help="stored trajectory (default: BENCH_dispatch.json)")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_THRESHOLD", "0.25")),
+                    help="allowed fractional regression (default 0.25; "
+                         "override via BENCH_REGRESSION_THRESHOLD for "
+                         "hardware slower than the machine that wrote "
+                         "the committed trajectory)")
+    ap.add_argument("--slowdown", type=float, default=1.0,
+                    help="inject an artificial slowdown factor into the "
+                         "fresh measurements (gate self-test)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.json) as f:
+            stored = json.load(f)
+    except OSError as e:
+        print(f"[bench-regression] cannot read trajectory: {e}")
+        return 1
+
+    fresh_assign: dict = {}
+    for entry in gated_assign_entries(stored):
+        key = _key(entry)
+        fresh_assign[key] = _fresh_assign_us(entry) * args.slowdown
+        print(f"[bench-regression] assign {key[0]} hosts x {key[1]} slots: "
+              f"{fresh_assign[key]:.2f} us/slot "
+              f"(stored {1e6 / entry['new_tasks_per_s']:.2f})")
+    biggest = gated_event_entry(stored)
+    fresh_events = _fresh_events_per_s(biggest) / args.slowdown
+    print(f"[bench-regression] events {biggest['hosts']} hosts: "
+          f"{fresh_events:.0f} events/s "
+          f"(stored {biggest['new_events_per_s']:.0f})")
+
+    failures = compare(stored, fresh_assign, fresh_events, args.threshold)
+    for f in failures:
+        print(f"[bench-regression] FAIL: {f}")
+    if not failures:
+        print(f"[bench-regression] OK: trajectory held within "
+              f"{args.threshold:.0%} at every gated point")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,23 +1,47 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests plus the scheduler-perf claim checks.
+# CI gate, in named stages with per-stage timing:
 #
-# The benchmark sections assert on the paper's claims AND on the indexed
-# fast path's performance envelope (assign µs/slot at the 4096-host point,
-# dispatch events/s vs the naive reference), so scheduler-perf regressions
-# fail this script rather than landing silently.
+#   lint             — python -m compileall (syntax/import rot fails fast)
+#                      + ruff when available
+#   tier-1           — the full pytest suite
+#   claim-checks     — quick benchmark runs that hard-assert the paper's
+#                      claims AND the indexed fast path's perf envelope
+#                      (assign µs/slot at the 4096-host point, dispatch
+#                      events/s vs the naive reference)
+#   elastic-claims   — churn-disabled bit-identity with the static
+#                      simulator, disabled-durability bit-identity with
+#                      the PR 2 elastic simulator, per-seed determinism,
+#                      no-assignment-to-departed-hosts, re-replication
+#                      locality gain and checkpoint zero-loss — all
+#                      asserted inside bench_elastic
+#   bench-regression — fresh dispatch sweep vs the committed
+#                      BENCH_dispatch.json trajectory (>25% regression at
+#                      the 4096/8192-host points fails)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+stage() {
+    local name="$1"; shift
+    echo "== ${name} =="
+    local t0=$SECONDS
+    "$@"
+    echo "-- [stage ${name}: $((SECONDS - t0))s]"
+}
 
-echo "== benchmark claim checks (quick) =="
-python -m benchmarks.run --quick --only overhead,dispatch,small
+lint() {
+    python -m compileall -q src benchmarks scripts tests
+    if command -v ruff >/dev/null 2>&1; then
+        ruff check src benchmarks scripts tests
+    else
+        echo "(ruff not installed; compileall only)"
+    fi
+}
 
-echo "== elastic-cluster claim checks (quick) =="
-# churn-disabled bit-identity with the static simulator, per-seed
-# determinism under churn, and the no-assignment-to-departed-hosts
-# invariant — all asserted inside the bench
-python -m benchmarks.run --quick --only elastic
+stage lint lint
+stage tier-1 python -m pytest -x -q
+stage claim-checks python -m benchmarks.run --quick --only overhead,dispatch,small
+stage elastic-claims python -m benchmarks.run --quick --only elastic
+stage bench-regression python scripts/check_bench_regression.py
+echo "== CI green: $((SECONDS))s total =="

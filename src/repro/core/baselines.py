@@ -117,6 +117,24 @@ class GlobalScheduler:
         for k in [k for k in host_maps if k[1] == hid]:
             del host_maps[k]
 
+    def replica_restored(self, shard_id, hid: HostId,
+                         pod_covered: bool) -> None:
+        """Re-replication (PR 3): a repair copy of ``shard_id`` landed on
+        ``hid`` — pending maps of the shard become node-local candidates
+        there. The baselines are pod-blind (flat-rack), so ``pod_covered``
+        is irrelevant to them. Scan over pending work, same rarity argument
+        as ``host_lost``."""
+        host_maps = self._host_maps
+        for jid, dq in self._pending_maps.items():
+            for t in dq:
+                if (t.state is _PENDING
+                        and getattr(t, "shard_id", None) == shard_id):
+                    k = (jid, hid)
+                    hq = host_maps.get(k)
+                    if hq is None:
+                        hq = host_maps[k] = collections.deque()
+                    hq.append(t)
+
     def _resurrect(self, job: Job) -> None:
         """Undo drain bookkeeping for a job that got work back (churn).
 

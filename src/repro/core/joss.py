@@ -78,6 +78,12 @@ class Joss:
         if not self.cluster.pods[hid.pod].hosts:
             queues.evacuate_pod(hid.pod)
 
+    def replica_restored(self, shard_id, hid: HostId,
+                         pod_covered: bool) -> None:
+        """Re-replication (PR 3): a repair copy landed on ``hid`` — re-patch
+        the queue locality indexes so queued work regains locality."""
+        self.scheduler.queues.replica_restored(shard_id, hid, pod_covered)
+
     def requeue_map_task(self, task: MapTask) -> None:
         """Re-execution of a map lost to churn. Routed through MQ_FIFO,
         which every assigner serves first — Hadoop's failed-task-first

@@ -257,6 +257,44 @@ class TaskQueue:
         for k in [k for k in hidx if k[1] == hid]:
             del hidx[k]
 
+    def reindex_shard(self, shard_id, hid, pod_covered: bool) -> None:
+        """A replica of ``shard_id`` was re-created on ``hid`` (PR 3
+        re-replication): give queued tasks of that shard their host-local
+        index entry back, and a pod entry when the pod had lost coverage
+        (``pod_covered`` is the pre-patch truth from the cluster).
+
+        Scan-based over the queue's live tasks for the same reason
+        ``drop_host`` scans keys: repairs are per-host-loss rare, while a
+        shard-keyed reverse index would tax every ``append`` on the static
+        hot path. Tasks enqueued *after* the repair index themselves against
+        the patched replica map, so this never runs twice for one task.
+        """
+        if not self._indexed:
+            return
+        live = self._live
+        hidx, pidx = self._hidx, self._pidx
+        pod = hid.pod
+        for t in self._q:
+            if id(t) not in live or getattr(t, "shard_id", None) != shard_id:
+                continue
+            jid = getattr(t, "job_id", None)
+            keys = self._job_keys.get(jid)
+            if keys is None:    # pragma: no cover - untracked sentinel task
+                continue
+            k = (jid, hid)
+            dq = hidx.get(k)
+            if dq is None:
+                dq = hidx[k] = collections.deque()
+                keys.append(("h", k))
+            dq.append(t)
+            if not pod_covered:
+                pk = (jid, pod)
+                pq = pidx.get(pk)
+                if pq is None:
+                    pq = pidx[pk] = collections.deque()
+                    keys.append(("p", pk))
+                pq.append(t)
+
     # -- ready-reduce transition ----------------------------------------------
     def mark_job_ready(self, jid) -> None:
         """Move job ``jid``'s pending reduce bucket to the ready heap (once).
@@ -443,6 +481,17 @@ class ClusterQueues:
         its shuffle gate re-closes until the re-executed maps finish."""
         for q in self._reduce_queue_of.get(job_id, ()):
             q.mark_job_unready(job_id)
+
+    def replica_restored(self, shard_id, hid, pod_covered: bool) -> None:
+        """Re-replication (PR 3): a replica of ``shard_id`` came back on
+        ``hid`` — re-patch the map-queue locality indexes so queued and
+        re-executed maps of the shard regain node/pod locality. Reduce
+        queues never index shards (reduce tasks carry no shard), so only
+        map queues are touched."""
+        for p in self.pods.values():
+            for q in p.map_queues:
+                q.reindex_shard(shard_id, hid, pod_covered)
+        self.mq_fifo.reindex_shard(shard_id, hid, pod_covered)
 
     # -- elasticity (PR 2) ----------------------------------------------------
     def host_lost(self, hid) -> None:

@@ -177,6 +177,21 @@ class VirtualCluster:
             self._replica_pods[sid] = tuple(sorted({r.pod for r in reps}))
         return h
 
+    def add_replica(self, shard_id, hid: HostId) -> None:
+        """Re-replication (PR 3): register one more replica of a known shard
+        on a live host, undoing the degradation ``remove_host`` caused.
+
+        No-op if the host already holds the shard. The shard must have been
+        placed before (its registration survives even total replica loss).
+        """
+        if hid in self._replica_host_set[shard_id]:
+            return
+        reps = self.shard_replicas[shard_id]
+        reps.append(hid)
+        self._replica_host_set[shard_id] = frozenset(reps)
+        self._replica_pods[shard_id] = tuple(sorted({r.pod for r in reps}))
+        self.host(hid).local_shards.add(shard_id)
+
     # -- shard placement -----------------------------------------------------
     def place_shard(self, shard_id, replicas: Sequence[HostId]) -> None:
         """Register a shard's replica locations (HDFS block placement)."""

@@ -14,6 +14,8 @@ from repro.elastic.autoscaler import (Autoscaler, BacklogThresholdScaler,
                                       CostCappedSpotScaler, FixedFleet,
                                       FleetObservation, ScaleDecision)
 from repro.elastic.churn import ChurnConfig, ChurnEvent, ChurnModel
+from repro.elastic.durability import (DurabilityConfig, DurabilityManager,
+                                      DurabilitySummary, RerepEvent)
 from repro.elastic.engine import (ElasticActions, ElasticEngine,
                                   ElasticSummary)
 from repro.elastic.leases import (ON_DEMAND, SPOT, Lease, LeaseBook,
@@ -23,6 +25,8 @@ __all__ = [
     "Autoscaler", "BacklogThresholdScaler", "CostCappedSpotScaler",
     "FixedFleet", "FleetObservation", "ScaleDecision",
     "ChurnConfig", "ChurnEvent", "ChurnModel",
+    "DurabilityConfig", "DurabilityManager", "DurabilitySummary",
+    "RerepEvent",
     "ElasticActions", "ElasticEngine", "ElasticSummary",
     "ON_DEMAND", "SPOT", "Lease", "LeaseBook", "PriceSheet",
 ]

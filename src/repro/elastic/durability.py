@@ -1,0 +1,189 @@
+"""Data durability for elastic virtual clusters (PR 3).
+
+PR 2 made the fleet mutable and paid for it in durability: a departing
+host takes its shard replicas and its finished map outputs with it, so
+re-executed maps degrade to off-pod reads forever and jobs re-open their
+shuffle gates. This module restores both halves of the paper's locality
+assumption (§1, §4 — map inputs stay replicated, map outputs survive
+until shuffle) the way production stacks do:
+
+  * **Delayed HDFS-style re-replication.** When ``remove_host`` orphans
+    replicas, every shard the dead disk held enters a re-replication
+    queue. After a detection/trigger delay (``rerep_delay``, NameNode
+    timeout analog) the copies drain *serially* through a bandwidth
+    budget (``rerep_bandwidth``): copy i completes at
+    ``max(loss + delay, pipeline_free) + size / bandwidth``. Each
+    completion re-creates the replica on a surviving host — preferring
+    the pod that lost it, then the host with the fewest replicas — and
+    the caller patches the queue locality indexes so still-queued and
+    re-executed maps regain node/pod locality instead of staying
+    off-pod for the rest of the run.
+  * **Off-host shuffle checkpointing.** Finished map outputs are
+    persisted to the *pod object store* as part of the map task
+    (synchronous write at ``ckpt_write_bw``, extending the map
+    duration). A host departure then no longer destroys them: no map
+    re-execution, no ``mark_job_unready`` gate re-close, zero
+    ``work_lost_mb`` for checkpointed jobs. The price is the write time
+    plus remote shuffle reads — a reduce fetching a departed mapper's
+    output reads the pod store at ``ckpt_read_bw`` (WAN-capped across
+    pods) instead of the mapper's local disk, and the store bills
+    ``PriceSheet.storage_per_gb`` per GB written.
+
+Everything here is deterministic — no RNG is consumed — so a durability
+run is reproducible per (workload seed, churn seed) and a *disabled*
+durability config is bit-identical to the PR 2 elastic simulator (the
+claim checks in ``benchmarks/bench_elastic.py`` assert both).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.topology import Host, HostId, VirtualCluster
+
+from repro.elastic.leases import PriceSheet
+
+
+@dataclasses.dataclass(frozen=True)
+class DurabilityConfig:
+    """Knobs for the two durability channels. Both default off, so an
+    attached-but-default config changes nothing (bit-identity)."""
+
+    # -- delayed re-replication (HDFS under-replication repair) --------------
+    rereplicate: bool = False
+    rerep_delay: float = 30.0      # loss-detection delay before copying (s)
+    rerep_bandwidth: float = 80.0  # MB/s budget of the one-copy-at-a-time
+    #                                re-replication pipeline
+    # -- off-host shuffle checkpointing (pod object store) -------------------
+    checkpoint: bool = False
+    ckpt_write_bw: float = 90.0    # MB/s map-output persist (extends map)
+    ckpt_read_bw: float = 90.0     # MB/s shuffle read from the pod store
+    ckpt_min_job_mb: float = 0.0   # only jobs with >= this much input
+    #                                checkpoint (0 = every job)
+
+    @property
+    def enabled(self) -> bool:
+        return self.rereplicate or self.checkpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class RerepEvent:
+    """One scheduled replica re-creation (fires in the sim event loop)."""
+
+    time: float      # copy completion instant (delay + bandwidth queue)
+    shard_id: object
+    pod: int         # pod that lost the replica (preferred restore target)
+    mb: float        # shard size (for traffic accounting)
+
+
+@dataclasses.dataclass
+class DurabilitySummary:
+    """Durability-side accounting for one run (merged into ``SimResult``)."""
+
+    n_rerep_scheduled: int = 0
+    n_rerep: int = 0               # replicas actually re-created
+    n_rerep_skipped: int = 0       # fired with no eligible target host
+    rerep_mb: float = 0.0          # bytes copied by the repair pipeline
+    ckpt_mb_written: float = 0.0   # map output persisted to pod stores
+    ckpt_saved_mb: float = 0.0     # output MB a host loss would have
+    #                                destroyed but the store preserved
+    n_ckpt_saves: int = 0          # map outputs saved from a dead disk
+    storage_dollars: float = 0.0   # object-store bill (filled at finalize)
+
+
+class DurabilityManager:
+    """Run-scoped durability state (one per ``ElasticEngine``).
+
+    The simulator owns the event loop; the manager owns the policy: which
+    shards to repair, when each copy completes under the bandwidth budget,
+    where the new replica lands, and what checkpointing costs. All clocks
+    advance on the engine's event times, never on an RNG.
+    """
+
+    def __init__(self, cfg: DurabilityConfig, cluster: VirtualCluster,
+                 prices: Optional[PriceSheet] = None):
+        self.cfg = cfg
+        self.cluster = cluster
+        self.prices = prices or PriceSheet()
+        self.summary = DurabilitySummary()
+        self._pipeline_free = 0.0   # repair pipeline busy-until clock
+        self._ckpt_cache: Dict[int, bool] = {}   # job_id -> checkpointed?
+
+    # -- re-replication ------------------------------------------------------
+    def host_lost(self, dead: Host, now: float,
+                  size_of: Callable[[object], Optional[float]]
+                  ) -> List[RerepEvent]:
+        """Schedule repair copies for every shard the dead disk held.
+
+        Shards are visited in sorted-id order (deterministic per seed) and
+        drain serially through the bandwidth budget. Shards whose size the
+        caller cannot resolve (not part of the simulated workload, e.g.
+        profiling-prelude placements) are skipped — no simulated task can
+        ever read them, so repairing them would only burn budget.
+        """
+        if not self.cfg.rereplicate:
+            return []
+        events: List[RerepEvent] = []
+        ready_at = now + self.cfg.rerep_delay
+        for sid in sorted(dead.local_shards, key=str):
+            size = size_of(sid)
+            if size is None:
+                continue
+            start = max(ready_at, self._pipeline_free)
+            done = start + size / self.cfg.rerep_bandwidth
+            self._pipeline_free = done
+            events.append(RerepEvent(done, sid, dead.hid.pod, float(size)))
+            self.summary.n_rerep_scheduled += 1
+        return events
+
+    def apply(self, ev: RerepEvent) -> Optional[Tuple[HostId, bool]]:
+        """A repair copy finished: pick the target and patch the cluster.
+
+        Target choice is deterministic: a live host not already holding the
+        shard, preferring the pod that lost the replica (restores pod
+        locality), then the fewest-replica host, then (pod, index). Returns
+        ``(target, pod_was_covered)`` — the flag tells queue re-indexing
+        whether the shard already had pod-level coverage there — or None
+        when every live host already holds the shard (nothing to repair).
+        """
+        cl = self.cluster
+        holders = cl.replica_hosts(ev.shard_id)
+        cands = [h for h in cl.hosts() if h.hid not in holders]
+        if not cands:
+            self.summary.n_rerep_skipped += 1
+            return None
+        target = min(cands, key=lambda h: (h.hid.pod != ev.pod,
+                                           len(h.local_shards),
+                                           h.hid.pod, h.hid.index))
+        pod_covered = target.hid.pod in cl.replica_pods(ev.shard_id)
+        cl.add_replica(ev.shard_id, target.hid)
+        self.summary.n_rerep += 1
+        self.summary.rerep_mb += ev.mb
+        return target.hid, pod_covered
+
+    # -- shuffle checkpointing -----------------------------------------------
+    def checkpoints_job(self, job) -> bool:
+        """Does ``job`` persist its map outputs to the pod object store?"""
+        if not self.cfg.checkpoint:
+            return False
+        hit = self._ckpt_cache.get(job.job_id)
+        if hit is None:
+            hit = sum(job.shard_bytes) >= self.cfg.ckpt_min_job_mb
+            self._ckpt_cache[job.job_id] = hit
+        return hit
+
+    def note_ckpt_write(self, mb: float) -> None:
+        self.summary.ckpt_mb_written += mb
+
+    def note_ckpt_save(self, mb: float, n_outputs: int) -> None:
+        self.summary.ckpt_saved_mb += mb
+        self.summary.n_ckpt_saves += n_outputs
+
+    # -- accounting ----------------------------------------------------------
+    def storage_cost(self) -> float:
+        return self.summary.ckpt_mb_written / 1024.0 \
+            * self.prices.storage_per_gb
+
+    def finalize(self) -> DurabilitySummary:
+        self.summary.storage_dollars = self.storage_cost()
+        return self.summary

@@ -31,6 +31,7 @@ from repro.core.topology import HostId, VirtualCluster
 
 from repro.elastic.autoscaler import Autoscaler, FleetObservation
 from repro.elastic.churn import ChurnConfig, ChurnEvent, ChurnModel
+from repro.elastic.durability import DurabilityConfig, DurabilityManager
 from repro.elastic.leases import ON_DEMAND, SPOT, LeaseBook, PriceSheet
 
 
@@ -54,6 +55,8 @@ class ElasticSummary:
     n_host_losses: int = 0
     n_vetoed: int = 0
     peak_hosts: int = 0
+    #: DurabilitySummary when the run had a durability manager (PR 3)
+    durability: object = None
     losses_by_reason: Dict[str, int] = dataclasses.field(default_factory=dict)
     #: (time, hid, reason) per departure — lets tests assert that no task
     #: was ever assigned to a departed host
@@ -67,7 +70,8 @@ class ElasticEngine:
     def __init__(self, cluster: VirtualCluster, *,
                  churn: Optional[ChurnConfig] = None,
                  autoscaler: Optional[Autoscaler] = None,
-                 prices: Optional[PriceSheet] = None):
+                 prices: Optional[PriceSheet] = None,
+                 durability: Optional[DurabilityConfig] = None):
         self.cluster = cluster
         self.churn_cfg = churn
         self.model = ChurnModel(churn) if churn is not None else None
@@ -81,6 +85,12 @@ class ElasticEngine:
                 "state in sim time); create a fresh policy per engine")
         self.autoscaler._engine_bound = True
         self.book = LeaseBook(prices)
+        # durability (PR 3): a disabled/absent config attaches no manager,
+        # so those runs stay bit-identical to the PR 2 elastic simulator
+        self.durability: Optional[DurabilityManager] = None
+        if durability is not None and durability.enabled:
+            self.durability = DurabilityManager(durability, cluster,
+                                                prices=self.book.prices)
         self.summary = ElasticSummary()
         self._started = False
 
@@ -230,4 +240,7 @@ class ElasticEngine:
         s.vps_hours = self.book.vps_hours()
         s.cost = self.book.cost()
         s.n_leases = self.book.n_leases()
+        if self.durability is not None:
+            s.durability = self.durability.finalize()
+            s.cost += s.durability.storage_dollars
         return s

@@ -26,10 +26,14 @@ SPOT = "spot"
 @dataclasses.dataclass(frozen=True)
 class PriceSheet:
     """Hourly rates per lease kind ($/VPS-hour), roughly a 3:1 on-demand
-    to spot discount (typical public-cloud ratio)."""
+    to spot discount (typical public-cloud ratio), plus the pod object
+    store's per-GB-written rate for shuffle checkpointing (PR 3) —
+    one-shot sim runs have no monthly retention, so a flat write charge
+    models the bill."""
 
     ondemand_per_hour: float = 0.50
     spot_per_hour: float = 0.15
+    storage_per_gb: float = 0.02
 
     def rate(self, kind: str) -> float:
         if kind == SPOT:

@@ -56,6 +56,30 @@ model is:
   * The autoscaler observes the PR 1 backlog counters at a fixed tick
     interval and leases/returns VPSs; scale-in only returns fully-idle
     hosts and the engine never drops the last host of the cluster.
+
+Data durability (PR 3): an engine built with a ``DurabilityConfig``
+(``repro.elastic.durability``) restores the two guarantees churn broke:
+
+  * **Re-replication** — each shard a departing disk held is repaired
+    after a detection delay, the copies draining serially through a
+    bandwidth budget (the manager owns the clock; completions arrive here
+    as ``rerep`` events). A completed repair patches the cluster's
+    replica map and re-patches the queue locality indexes
+    (``replica_restored``), so re-executed and still-queued maps regain
+    node/pod locality. Repair traffic is tracked in ``rerep_mb`` —
+    separate from INT, which remains the paper's task-read metric.
+  * **Shuffle checkpointing** — a checkpointed job's map tasks
+    synchronously persist their output to the pod object store
+    (``+ output / ckpt_write_bw`` inside the map duration). Its finished
+    outputs then survive host loss: no re-execution, no shuffle-gate
+    re-close, no ``work_lost_mb``. Reduces fetching a *departed*
+    mapper's output read the store instead of the dead disk — pod
+    bandwidth capped at ``ckpt_read_bw``, WAN-capped across pods — and
+    the store bills ``PriceSheet.storage_per_gb`` into ``cost_dollars``.
+
+Both channels are deterministic (no RNG) and fully gated: durability
+disabled is bit-identical to the PR 2 elastic simulator, asserted by the
+``bench_elastic`` claim checks and ``tests/test_durability.py``.
 """
 from __future__ import annotations
 
@@ -130,6 +154,12 @@ class SimResult:
     n_host_adds: int = 0
     n_host_losses: int = 0
     elastic: object = None      # ElasticSummary when run with an engine
+    # -- durability outputs (PR 3; all zero without a durability config) -----
+    n_rerep: int = 0            # shard replicas re-created after host loss
+    rerep_mb: float = 0.0       # repair-pipeline traffic (not INT)
+    ckpt_mb_written: float = 0.0  # map output persisted to pod stores
+    ckpt_saved_mb: float = 0.0  # output MB the store saved from dead disks
+    storage_dollars: float = 0.0  # object-store bill (also in cost_dollars)
 
     def jtt(self, job: Job) -> float:
         return self.job_finish[job.job_id] - self.job_submit[job.job_id]
@@ -154,6 +184,17 @@ class Simulator:
     def run(self) -> SimResult:
         cfg = self.cfg
         elastic = self.elastic
+        # durability (PR 3): both flags gate every new branch below, so a
+        # run without a manager executes exactly the PR 2 code path
+        dur = elastic.durability if elastic is not None else None
+        ckpt_on = dur is not None and dur.cfg.checkpoint
+        rerep_on = dur is not None and dur.cfg.rereplicate
+        departed: set = set()       # HostIds gone (ckpt store-read routing)
+        shard_size: Dict[object, float] = {}
+        if rerep_on:
+            for j in self.jobs:
+                for sid, b in zip(j.shard_ids, j.shard_bytes):
+                    shard_size[sid] = float(b)
         events: List[Tuple[float, int, str, object]] = []
 
         def push(t, kind, payload):
@@ -230,10 +271,16 @@ class Simulator:
                 loc = Locality.OFF_POD
             read_t = size / cfg.read_bw(loc)
             comp_t = size / cfg.map_rate * job.cost_scale
-            dur = (cfg.task_overhead + read_t + comp_t) * host_slow(hid)
+            write_t = 0.0
+            if ckpt_on and dur.checkpoints_job(job):
+                # synchronous persist of the map output to the pod object
+                # store before the task reports done (PR 3 checkpointing)
+                write_t = size * job.true_fp / dur.cfg.ckpt_write_bw
+            dur_s = (cfg.task_overhead + read_t + comp_t + write_t) \
+                * host_slow(hid)
             t.state = TaskState.RUNNING
             t.host, t.locality = hid, loc
-            log = TaskLog(job, t, hid, now, now + dur, loc)
+            log = TaskLog(job, t, hid, now, now + dur_s, loc)
             if loc is Locality.POD:
                 log.bytes_pod = size
                 pod_bytes += size
@@ -248,7 +295,7 @@ class Simulator:
             if left == 0:
                 free_map_hosts.discard(hid)
             self.algo.task_started(t)
-            push(now + dur, "map_done", t)
+            push(now + dur_s, "map_done", t)
 
         def start_reduce(t: ReduceTask, hid: HostId, now: float):
             nonlocal int_bytes, pod_bytes
@@ -259,7 +306,22 @@ class Simulator:
             read_t = 0.0
             for (src, out_bytes, _mi) in map_out[job.job_id]:
                 share = out_bytes * fp / r
-                if src == hid:
+                if ckpt_on and src in departed:
+                    # the mapper's disk is gone; its output survives only
+                    # in src's pod object store (PR 3 checkpointing). A
+                    # store read is network traffic even within the pod,
+                    # and WAN-capped across pods.
+                    if src.pod == hid.pod:
+                        log.bytes_pod += share
+                        pod_bytes += share
+                        read_t += share / min(cfg.pod_bw,
+                                              dur.cfg.ckpt_read_bw)
+                    else:
+                        log.bytes_offpod += share
+                        int_bytes += share
+                        read_t += share / min(cfg.dcn_bw,
+                                              dur.cfg.ckpt_read_bw)
+                elif src == hid:
                     log.bytes_local += share
                     read_t += share / cfg.disk_bw
                 elif src.pod == hid.pod:
@@ -272,10 +334,10 @@ class Simulator:
                     read_t += share / cfg.dcn_bw
             total_in = (log.bytes_local + log.bytes_pod + log.bytes_offpod)
             comp_t = total_in / cfg.reduce_rate * job.cost_scale
-            dur = (cfg.task_overhead + read_t + comp_t) * host_slow(hid)
+            dur_s = (cfg.task_overhead + read_t + comp_t) * host_slow(hid)
             t.state = TaskState.RUNNING
             t.host = hid
-            log.finish = now + dur
+            log.finish = now + dur_s
             running[t.tid] = log
             reds_unassigned[t.job_id] -= 1
             left = red_free[hid] - 1
@@ -283,7 +345,7 @@ class Simulator:
             if left == 0:
                 free_red_hosts.discard(hid)
             self.algo.task_started(t)
-            push(now + dur, "reduce_done", t)
+            push(now + dur_s, "reduce_done", t)
 
         all_hosts = [h.hid for h in self.cluster.hosts()]
 
@@ -438,7 +500,8 @@ class Simulator:
             gates, and patch every index/offer structure."""
             nonlocal n_hosts, n_host_losses, map_backlog, red_ready_backlog
             nonlocal unfinished, work_lost_mb, n_reexec
-            self.cluster.remove_host(hid)
+            dead = self.cluster.remove_host(hid)
+            departed.add(hid)
             map_free.pop(hid, None)
             red_free.pop(hid, None)
             free_map_hosts.discard(hid)
@@ -462,6 +525,14 @@ class Simulator:
                 entries = map_out[jid]
                 lost = [e for e in entries if e[0] == hid]
                 if not lost:    # pragma: no cover - index is add-only
+                    continue
+                if ckpt_on and dur.checkpoints_job(job_by_id[jid]):
+                    # outputs persisted to the pod object store survive the
+                    # disk: no re-run, no gate re-close; reduces started
+                    # from here on read them via the store (``departed``)
+                    dur.note_ckpt_save(
+                        sum(e[1] for e in lost) * job_by_id[jid].true_fp,
+                        len(lost))
                     continue
                 map_out[jid] = [e for e in entries if e[0] != hid]
                 job = job_by_id[jid]
@@ -520,6 +591,12 @@ class Simulator:
                         red_ready_backlog += 1
                         if notify_maps_done is not None:
                             notify_maps_done(jid)   # re-mark the new bucket
+            # (c) re-replication (PR 3): schedule a repair copy for every
+            # shard the dead disk held (delay + bandwidth budget live in
+            # the manager; completions fire as "rerep" events)
+            if rerep_on:
+                for rev in dur.host_lost(dead, now, shard_size.get):
+                    push(rev.time, "rerep", rev)
 
         def make_observation(now: float, full: bool = False):
             """The O(hosts) idle/busy fleet walk runs only for autoscale
@@ -623,6 +700,11 @@ class Simulator:
                     canon.state = TaskState.DONE
                 map_out[job.job_id].append(
                     (log.host, job.shard_bytes[t.index], t.index))
+                if ckpt_on and dur.checkpoints_job(job):
+                    # the synchronous store write this task already paid
+                    # for (start_map) lands with its completion
+                    dur.note_ckpt_write(
+                        job.shard_bytes[t.index] * job.true_fp)
                 outs = host_outputs.get(log.host)
                 if outs is None:
                     outs = host_outputs[log.host] = set()
@@ -671,6 +753,15 @@ class Simulator:
                         elastic.autoscale(make_observation(now, full=True)),
                         now)
                     push(now + elastic.autoscaler.interval, "scale", None)
+            elif kind == "rerep":
+                # a repair copy completed: patch the replica map and give
+                # queued/re-executed maps their locality index entries back
+                restored = dur.apply(payload)
+                if restored is not None:
+                    tgt, pod_covered = restored
+                    hook = getattr(self.algo, "replica_restored", None)
+                    if hook is not None:
+                        hook(payload.shard_id, tgt, pod_covered)
             dispatch(now)
             if unfinished == 0:
                 # all work done: the rest of the heap is heartbeats and
@@ -692,4 +783,11 @@ class Simulator:
             res.elastic = summary
             res.vps_hours = summary.vps_hours
             res.cost_dollars = summary.cost
+            if summary.durability is not None:
+                ds = summary.durability
+                res.n_rerep = ds.n_rerep
+                res.rerep_mb = ds.rerep_mb
+                res.ckpt_mb_written = ds.ckpt_mb_written
+                res.ckpt_saved_mb = ds.ckpt_saved_mb
+                res.storage_dollars = ds.storage_dollars
         return res

@@ -41,10 +41,38 @@ class Summary:
     n_reexec: int = 0
     n_host_adds: int = 0
     n_host_losses: int = 0
+    # -- durability outputs (PR 3; zero without a durability config) ---------
+    n_rerep: int = 0
+    rerep_mb: float = 0.0
+    ckpt_mb_written: float = 0.0
+    ckpt_saved_mb: float = 0.0
+    storage_dollars: float = 0.0
+    #: locality of re-executed maps (churn retries; excludes speculative
+    #: twins) — the rate re-replication exists to raise. None when the run
+    #: had no re-executed maps.
+    reexec_map_locality: Optional[float] = None
 
 
 def _bench_of(log) -> str:
     return log.job.name
+
+
+def reexec_map_stats(res: SimResult) -> Tuple[int, int]:
+    """(re-executed maps, of which node/pod local) for a run.
+
+    Churn retries only: speculative twins share the attempt counter, so
+    ``attempt > 0`` alone would overcount — the ``speculative`` log flag
+    excludes them. The single source of truth for this predicate (the
+    elastic bench and ``Summary.reexec_map_locality`` both use it)."""
+    n = loc = 0
+    for log in res.task_logs:
+        t = log.task
+        if not isinstance(t, MapTask) or t.attempt == 0 or log.speculative:
+            continue
+        n += 1
+        if log.locality is not Locality.OFF_POD:
+            loc += 1
+    return n, loc
 
 
 def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
@@ -83,6 +111,9 @@ def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
     n_jobs = max(1, len(res.job_finish))
     curve = [(t, (i + 1) / n_jobs) for i, t in enumerate(finishes)]
 
+    n_re, n_re_loc = reexec_map_stats(res)
+    reexec_loc = n_re_loc / n_re if n_re else None
+
     return Summary(
         algorithm=res.algorithm, map_locality=map_loc,
         reduce_locality=red_loc, int_mb=res.int_bytes, avg_jtt=jtt,
@@ -92,7 +123,12 @@ def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
         completion_curve=curve,
         vps_hours=res.vps_hours, cost_dollars=res.cost_dollars,
         work_lost_mb=res.work_lost_mb, n_reexec=res.n_reexec,
-        n_host_adds=res.n_host_adds, n_host_losses=res.n_host_losses)
+        n_host_adds=res.n_host_adds, n_host_losses=res.n_host_losses,
+        n_rerep=res.n_rerep, rerep_mb=res.rerep_mb,
+        ckpt_mb_written=res.ckpt_mb_written,
+        ckpt_saved_mb=res.ckpt_saved_mb,
+        storage_dollars=res.storage_dollars,
+        reexec_map_locality=reexec_loc)
 
 
 def normalized_jtt(summaries: List[Summary], reference: str = "joss-t"

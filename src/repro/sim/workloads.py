@@ -148,6 +148,31 @@ def churn_scenarios() -> Dict[str, dict]:
     }
 
 
+def durability_scenarios() -> Dict[str, Optional[dict]]:
+    """Named durability modes for elastic-cluster runs (PR 3): kwargs for
+    ``repro.elastic.DurabilityConfig`` (None = no config attached at all).
+
+      * ``off``   — PR 2 behaviour: departed replicas stay gone, lost map
+        outputs force re-execution with shuffle-gate re-close.
+      * ``rerep`` — delayed HDFS-style re-replication: orphaned shards are
+        re-created on surviving hosts after a short detection delay,
+        draining through a bandwidth budget, so re-executed and queued
+        maps regain node/pod locality.
+      * ``ckpt``  — off-host shuffle checkpointing: map outputs persist to
+        the pod object store (synchronous write), so host loss destroys
+        no finished work — at a write-time + store-read-bandwidth price.
+      * ``full``  — both channels.
+    """
+    rerep = dict(rereplicate=True, rerep_delay=20.0, rerep_bandwidth=100.0)
+    ckpt = dict(checkpoint=True)
+    return {
+        "off": None,
+        "rerep": dict(rerep),
+        "ckpt": dict(ckpt),
+        "full": dict(**rerep, **ckpt),
+    }
+
+
 def profiling_prelude(cluster: VirtualCluster, seed: int = 3) -> List[Job]:
     """One tiny job per (benchmark, input-type) submitted ahead of a workload
     so JoSS's FP registry is warm (the paper's steady state, where H already

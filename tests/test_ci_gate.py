@@ -1,0 +1,86 @@
+"""The bench-regression CI gate (PR 3 satellite): the gate passes when the
+fresh measurement matches the committed trajectory and demonstrably fails
+on an injected 2x slowdown — without paying for real wall-clock
+measurements in the test (the measurement functions are stubbed to echo
+the stored trajectory; ``scripts/ci.sh`` runs the real thing)."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_gate():
+    path = os.path.join(_ROOT, "scripts", "check_bench_regression.py")
+    spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def gate():
+    return _load_gate()
+
+
+@pytest.fixture(scope="module")
+def stored():
+    with open(os.path.join(_ROOT, "BENCH_dispatch.json")) as f:
+        return json.load(f)
+
+
+def _stored_assign_us(stored):
+    gate = _load_gate()
+    return {gate._key(e): 1e6 / e["new_tasks_per_s"]
+            for e in gate.gated_assign_entries(stored)}
+
+
+def test_trajectory_covers_the_gated_points(stored):
+    """The committed trajectory must contain the acceptance points the
+    gate asserts on (4096- and 8192-host)."""
+    hosts = {e["hosts"] for e in stored["assign"]}
+    assert {4096, 8192} <= hosts
+    assert stored["events"], "no event-rate trajectory committed"
+
+
+def test_compare_passes_on_identical_measurement(gate, stored):
+    fresh = _stored_assign_us(stored)
+    ev = max(stored["events"], key=lambda e: e["hosts"])
+    assert gate.compare(stored, fresh, ev["new_events_per_s"], 0.25) == []
+
+
+def test_compare_tolerates_sub_threshold_noise(gate, stored):
+    fresh = {k: v * 1.2 for k, v in _stored_assign_us(stored).items()}
+    ev = max(stored["events"], key=lambda e: e["hosts"])
+    assert gate.compare(stored, fresh,
+                        ev["new_events_per_s"] / 1.2, 0.25) == []
+
+
+def test_compare_fails_on_2x_slowdown(gate, stored):
+    fresh = {k: v * 2.0 for k, v in _stored_assign_us(stored).items()}
+    ev = max(stored["events"], key=lambda e: e["hosts"])
+    failures = gate.compare(stored, fresh,
+                            ev["new_events_per_s"] / 2.0, 0.25)
+    # every gated assign point plus the event point trips
+    assert len(failures) == len(fresh) + 1
+    assert all("regression" in f for f in failures)
+
+
+def test_main_trips_on_injected_slowdown(gate, stored, monkeypatch):
+    """End-to-end through main(): stubbed measurements echo the stored
+    trajectory, so --slowdown 1 passes and --slowdown 2 must exit 1."""
+    monkeypatch.setattr(
+        gate, "_fresh_assign_us",
+        lambda entry: 1e6 / entry["new_tasks_per_s"])
+    monkeypatch.setattr(
+        gate, "_fresh_events_per_s",
+        lambda entry, reps=2: entry["new_events_per_s"])
+    assert gate.main([]) == 0
+    assert gate.main(["--slowdown", "2.0"]) == 1
+
+
+def test_main_fails_cleanly_without_trajectory(gate, tmp_path):
+    assert gate.main(["--json", str(tmp_path / "missing.json")]) == 1

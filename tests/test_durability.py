@@ -1,0 +1,314 @@
+"""Data-durability subsystem invariants (PR 3).
+
+Equivalence: a *disabled* durability config leaves elastic runs
+bit-identical to the PR 2 simulator (and, with churn also disabled, to
+the static simulator) for all five algorithms. Re-replication event
+ordering is deterministic per seed, the repair pipeline honors its delay
+and bandwidth budget, restored replicas re-patch every locality index
+(JoSS queues and baseline host maps), and checkpointed jobs survive host
+loss with zero lost work. Plus the PR 2 seam the tentpole builds on: a
+churned job whose ready-marks span its original queue and RQ_FIFO after
+``evacuate_pod`` + ``mark_job_unready``.
+"""
+import pytest
+
+from repro.core.job import Job, MapTask, ReduceTask
+from repro.core.joss import make_algorithm
+from repro.core.queues import ClusterQueues
+from repro.core.topology import HostId, Locality, VirtualCluster
+from repro.elastic import (BacklogThresholdScaler, ChurnConfig,
+                           DurabilityConfig, DurabilityManager,
+                           ElasticEngine, PriceSheet)
+from repro.sim.cluster_sim import Simulator
+from repro.sim.workloads import durability_scenarios, make_cluster, \
+    small_workload
+
+from tests.test_elastic import ALGOS, mk_map, run_sim
+
+
+# --------------------------------------------------------------- helpers --
+CHURN_KW = dict(fail_rate=2.0, rejoin_delay=90.0, spot_fraction=0.25,
+                spot_preempt_rate=2.0)
+
+
+def dur_engine(dur_kw, churn_seed=5):
+    def factory(cluster):
+        return ElasticEngine(
+            cluster, churn=ChurnConfig(seed=churn_seed, **CHURN_KW),
+            autoscaler=BacklogThresholdScaler(min_hosts=2),
+            durability=(None if dur_kw is None
+                        else DurabilityConfig(**dur_kw)))
+    return factory
+
+
+# ------------------------------------------------ disabled == PR 2 elastic --
+@pytest.mark.parametrize("name", ALGOS)
+def test_disabled_durability_is_bit_identical_to_elastic(name):
+    """An attached-but-disabled durability config must not perturb churn
+    runs at all (no manager is built, no new code path taken)."""
+    _, base_m, base_s = run_sim(name, 2, dur_engine(None))
+    _, off_m, off_s = run_sim(
+        name, 2, dur_engine(dict(rereplicate=False, checkpoint=False)))
+    assert base_m == off_m
+    assert base_s == off_s
+
+
+def test_disabled_durability_and_churn_is_static():
+    """With churn also disabled the whole elastic+durability stack must
+    reduce to the static simulator."""
+    _, static_m, static_s = run_sim("joss-t", 3)
+    _, stack_m, stack_s = run_sim(
+        "joss-t", 3,
+        lambda cl: ElasticEngine(cl, durability=DurabilityConfig()))
+    assert static_m == stack_m
+    assert static_s == stack_s
+
+
+# ------------------------------------------------------ topology patching --
+def test_add_replica_restores_locality():
+    cluster = VirtualCluster([2, 2])
+    h00, h01, h11 = HostId(0, 0), HostId(0, 1), HostId(1, 1)
+    cluster.place_shard("a", [h00])
+    cluster.remove_host(h00)
+    assert cluster.replica_hosts("a") == frozenset()
+    assert cluster.locality_of("a", h01) is Locality.OFF_POD
+    cluster.add_replica("a", h01)
+    assert cluster.replica_hosts("a") == frozenset({h01})
+    assert cluster.replica_pods("a") == [0]
+    assert cluster.locality_of("a", h01) is Locality.HOST
+    assert cluster.nearest_replica("a", h11) == (h01, Locality.OFF_POD)
+    assert "a" in cluster.host(h01).local_shards
+    cluster.add_replica("a", h01)           # idempotent
+    assert cluster.shard_replicas["a"] == [h01]
+
+
+# ------------------------------------------------------- repair pipeline --
+def test_manager_honors_delay_and_bandwidth_budget():
+    """Copies drain serially: copy i completes at
+    max(loss + delay, pipeline_free) + size/bandwidth."""
+    cluster = VirtualCluster([2, 2])
+    h = HostId(0, 0)
+    cluster.place_shard("s1", [h])
+    cluster.place_shard("s2", [h])
+    dead = cluster.remove_host(h)
+    mgr = DurabilityManager(
+        DurabilityConfig(rereplicate=True, rerep_delay=10.0,
+                         rerep_bandwidth=64.0), cluster)
+    evs = mgr.host_lost(dead, 100.0, {"s1": 128.0, "s2": 128.0}.get)
+    assert [e.shard_id for e in evs] == ["s1", "s2"]   # sorted-id order
+    assert evs[0].time == pytest.approx(112.0)         # 100 + 10 + 128/64
+    assert evs[1].time == pytest.approx(114.0)         # queued behind s1
+    assert mgr.summary.n_rerep_scheduled == 2
+    # a second loss queues behind the busy pipeline, not behind its delay
+    cluster.place_shard("s3", [HostId(0, 1)])
+    dead2 = cluster.remove_host(HostId(0, 1))
+    (ev3,) = mgr.host_lost(dead2, 100.0, {"s3": 64.0}.get)
+    assert ev3.time == pytest.approx(115.0)            # 114 + 64/64
+
+
+def test_manager_skips_unknown_size_shards():
+    """Shards outside the simulated workload (profiling-prelude
+    placements) are not worth repair bandwidth."""
+    cluster = VirtualCluster([2, 2])
+    cluster.place_shard("known", [HostId(0, 0)])
+    cluster.place_shard("prelude", [HostId(0, 0)])
+    dead = cluster.remove_host(HostId(0, 0))
+    mgr = DurabilityManager(DurabilityConfig(rereplicate=True), cluster)
+    evs = mgr.host_lost(dead, 0.0, {"known": 128.0}.get)
+    assert [e.shard_id for e in evs] == ["known"]
+
+
+def test_manager_target_prefers_lost_pod_then_least_loaded():
+    cluster = VirtualCluster([3, 2])
+    cluster.place_shard("x", [HostId(0, 0)])
+    cluster.place_shard("ballast", [HostId(0, 1)])    # loads host (0,1)
+    dead = cluster.remove_host(HostId(0, 0))
+    mgr = DurabilityManager(DurabilityConfig(rereplicate=True), cluster)
+    (ev,) = mgr.host_lost(dead, 0.0, {"x": 128.0,
+                                      "ballast": 128.0}.get)
+    target, pod_covered = mgr.apply(ev)
+    # pod 0 preferred (it lost the replica); (0,1) holds a shard already,
+    # so the empty (0,2) wins; the pod had lost all coverage
+    assert target == HostId(0, 2)
+    assert pod_covered is False
+    assert cluster.locality_of("x", target) is Locality.HOST
+    assert mgr.summary.n_rerep == 1
+    assert mgr.summary.rerep_mb == pytest.approx(128.0)
+
+
+def test_manager_apply_skips_when_every_host_holds_the_shard():
+    cluster = VirtualCluster([1, 1])
+    cluster.place_shard("x", [HostId(0, 0), HostId(1, 0)])
+    dead = cluster.remove_host(HostId(1, 0))
+    mgr = DurabilityManager(DurabilityConfig(rereplicate=True), cluster)
+    (ev,) = mgr.host_lost(dead, 0.0, {"x": 128.0}.get)
+    assert mgr.apply(ev) is None          # only live host already holds it
+    assert mgr.summary.n_rerep_skipped == 1
+
+
+# ------------------------------------------------- locality index repatch --
+def test_queue_reindex_restores_host_and_pod_entries():
+    cluster = VirtualCluster([2, 2])
+    h00, h01 = HostId(0, 0), HostId(0, 1)
+    cluster.place_shard("s", [h00])
+    cluster.remove_host(h00)              # replica gone before enqueue
+    queues = ClusterQueues(cluster)
+    t = mk_map(1, 0, "s")
+    queues.pods[0].mq0.append(t)
+    assert queues.pods[0].mq0.peek_local(1, h01) is None
+    assert queues.pods[0].mq0.peek_pod(1, 0) is None
+    cluster.add_replica("s", h01)
+    queues.replica_restored("s", h01, pod_covered=False)
+    assert queues.pods[0].mq0.peek_local(1, h01) is t
+    assert queues.pods[0].mq0.peek_pod(1, 0) is t
+    # the restored entries are real picks, and picking drains both indexes
+    assert queues.pods[0].mq0.pick_local(1, h01) is t
+    assert queues.pods[0].mq0.peek_pod(1, 0) is None
+
+
+def test_joss_replica_restored_reaches_requeued_fifo_tasks():
+    """A churn-requeued map in MQ_FIFO (zero surviving replicas at requeue
+    time) regains host locality when the repair copy lands."""
+    cluster = VirtualCluster([2, 2])
+    h00, h10 = HostId(0, 0), HostId(1, 0)
+    cluster.place_shard("s", [h00])
+    cluster.remove_host(h00)
+    algo = make_algorithm("joss-t", cluster)
+    retry = MapTask(9, 0, "s", 128, attempt=1)
+    algo.requeue_map_task(retry)
+    fifo = algo.scheduler.queues.mq_fifo
+    assert fifo.peek_local(9, h10) is None
+    cluster.add_replica("s", h10)
+    algo.replica_restored("s", h10, pod_covered=False)
+    assert fifo.peek_local(9, h10) is retry
+
+
+def test_baseline_replica_restored_indexes_pending_maps():
+    cluster = VirtualCluster([2, 2])
+    h00, h11 = HostId(0, 0), HostId(1, 1)
+    cluster.place_shard("b0/s", [h00])
+    algo = make_algorithm("fifo", cluster)
+    job = Job(name="b", code_key="c", input_type="web",
+              shard_ids=["b0/s"], shard_bytes=[128.0], n_reducers=1)
+    cluster.remove_host(h00)
+    algo.host_lost(h00)
+    algo.submit(job)
+    assert algo.next_map_task(h11) is job.map_tasks[0]  # non-local fallback
+    cluster.add_replica("b0/s", h11)
+    algo.replica_restored("b0/s", h11, pod_covered=False)
+    local = algo._host_maps.get((job.job_id, h11))
+    assert local is not None and local[0] is job.map_tasks[0]
+
+
+# ----------------------------------------------------------- end to end --
+def test_rerep_runs_complete_and_are_deterministic():
+    """Re-replication event ordering (and everything downstream) is a pure
+    function of (workload seed, churn seed)."""
+    kw = durability_scenarios()["rerep"]
+    res_a, met_a, seq_a = run_sim("joss-t", 6, dur_engine(kw))
+    res_b, met_b, seq_b = run_sim("joss-t", 6, dur_engine(kw))
+    assert met_a == met_b and seq_a == seq_b
+    assert res_a.n_rerep == res_b.n_rerep
+    assert res_a.rerep_mb == res_b.rerep_mb
+    assert res_a.n_rerep > 0, "scenario produced no repairs"
+    assert len(res_a.job_finish) == len(res_a.jobs)
+
+
+@pytest.mark.parametrize("name", ("joss-j", "fair"))
+def test_ckpt_runs_lose_no_finished_work(name):
+    res, _, _ = run_sim(name, 1, dur_engine(durability_scenarios()["ckpt"]))
+    base, _, _ = run_sim(name, 1, dur_engine(None))
+    assert base.n_host_losses > 0
+    assert base.work_lost_mb > 0          # churn does destroy work...
+    assert res.work_lost_mb == 0.0        # ...unless outputs checkpoint
+    assert res.ckpt_mb_written > 0
+    assert res.storage_dollars > 0
+    # the store bill is folded into the tenant's total
+    assert res.cost_dollars == pytest.approx(res.elastic.cost)
+    assert len(res.job_finish) == len(res.jobs)
+
+
+def test_ckpt_storage_priced_by_sheet():
+    cluster = VirtualCluster([2])
+    mgr = DurabilityManager(
+        DurabilityConfig(checkpoint=True), cluster,
+        prices=PriceSheet(storage_per_gb=1.0))
+    mgr.note_ckpt_write(2048.0)
+    assert mgr.storage_cost() == pytest.approx(2.0)
+    assert mgr.finalize().storage_dollars == pytest.approx(2.0)
+
+
+def test_ckpt_min_job_mb_filters_small_jobs():
+    cluster = VirtualCluster([2])
+    mgr = DurabilityManager(
+        DurabilityConfig(checkpoint=True, ckpt_min_job_mb=1000.0), cluster)
+    small = Job(name="s", code_key="c", input_type="web",
+                shard_ids=["s/0"], shard_bytes=[128.0], n_reducers=1)
+    big = Job(name="b", code_key="c", input_type="web",
+              shard_ids=[f"b/{i}" for i in range(10)],
+              shard_bytes=[128.0] * 10, n_reducers=1)
+    assert not mgr.checkpoints_job(small)
+    assert mgr.checkpoints_job(big)
+    assert mgr.checkpoints_job(big)       # cached path
+
+
+def test_full_durability_under_paper_workload():
+    """Both channels together on the paper workload: every job finishes,
+    nothing is lost, repairs happen, and the run is deterministic."""
+    kw = durability_scenarios()["full"]
+
+    def once():
+        cluster = make_cluster((4, 4))
+        jobs = small_workload(cluster, seed=5, n_jobs=10)
+        algo = make_algorithm("joss-j", cluster)
+        eng = ElasticEngine(
+            cluster, churn=ChurnConfig(seed=2, fail_rate=2.0,
+                                       rejoin_delay=120.0),
+            durability=DurabilityConfig(**kw))
+        return Simulator(cluster, algo, jobs, seed=5, elastic=eng).run()
+
+    a, b = once(), once()
+    assert a.n_host_losses > 0
+    assert a.work_lost_mb == 0.0
+    assert a.n_rerep > 0
+    assert len(a.job_finish) == len(a.jobs)
+    assert (a.wtt, a.n_rerep, a.rerep_mb, a.ckpt_mb_written,
+            a.cost_dollars) == (b.wtt, b.n_rerep, b.rerep_mb,
+                                b.ckpt_mb_written, b.cost_dollars)
+
+
+# ------------------------------------------- PR 2 seam (satellite cover) --
+def test_split_ready_marks_survive_evacuate_and_unready_cycle():
+    """A churned job whose reduce buckets span its original pod queue and
+    RQ_FIFO (requeue) and then lose their pod (evacuate) must keep gate
+    notifications coherent across every holding queue: unready closes
+    all of them, ready reopens all of them."""
+    cluster = VirtualCluster([2, 2])
+    algo = make_algorithm("joss-t", cluster)
+    queues = algo.scheduler.queues
+    rq = queues.pods[0].rq0
+    originals = [ReduceTask(7, 0), ReduceTask(7, 1)]
+    rq.extend(originals)
+    queues.register_reduce_queue(7, rq)
+    retry = ReduceTask(7, 2, attempt=1)
+    algo.requeue_reduce_task(retry)           # marks span rq0 and RQ_FIFO
+    queues.mark_job_ready(7)
+    never = lambda t: False
+    # churn re-closes the gate: nothing pickable anywhere
+    queues.mark_job_unready(7)
+    assert queues.rq_fifo.pick_ready(never, trust_marks=True) is None
+    assert rq.pick_ready(never, trust_marks=True) is None
+    # pod 0 dies: the original bucket evacuates to RQ_FIFO, still gated
+    cluster.remove_host(HostId(0, 0))
+    cluster.remove_host(HostId(0, 1))
+    algo.host_lost(HostId(0, 0))
+    algo.host_lost(HostId(0, 1))              # evacuates pod 0
+    assert len(queues.rq_fifo) == 3
+    assert queues.rq_fifo.pick_ready(never, trust_marks=True) is None
+    # re-runs land, the gate reopens: every reduce is served from RQ_FIFO
+    queues.mark_job_ready(7)
+    picked = [queues.rq_fifo.pick_ready(never, trust_marks=True)
+              for _ in range(3)]
+    assert set(id(t) for t in picked) == set(
+        id(t) for t in originals + [retry])
+    assert queues.rq_fifo.pick_ready(never, trust_marks=True) is None
