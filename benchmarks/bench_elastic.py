@@ -15,6 +15,13 @@ vs the PR 2 baseline: re-exec count, work-lost MB, re-executed-map
 locality rate (the rate re-replication exists to raise), checkpoint MB
 written/saved and the object-store bill.
 
+The replication sweep (PR 4 satellite) runs HDFS factors 1/2/3
+(``repro.sim.workloads.replication_scenarios``) against the PR 3
+re-replication pipeline under flaky churn, showing the three-way
+durability-vs-storage-vs-repair-traffic trade-off; full (non-quick)
+sweeps additionally write the gated elastic-WTT points to
+``BENCH_elastic.json`` for the CI bench-regression stage.
+
 Claim checks:
   * the ``stable`` scenario (fixed fleet, zero churn) is bit-identical to
     the static simulator for every algorithm — with and without a
@@ -38,6 +45,8 @@ Claim checks:
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Dict, List, Optional, Tuple
 
 from benchmarks.common import table
@@ -49,9 +58,18 @@ from repro.sim.metrics import reexec_map_stats as _reexec_stats
 from repro.sim.cluster_sim import SimConfig, Simulator
 from repro.sim.workloads import (churn_scenarios, durability_scenarios,
                                  make_cluster, profiling_prelude,
-                                 small_workload)
+                                 replication_scenarios, small_workload)
 
 ALGOS = ("joss-t", "joss-j", "fifo", "fair", "capacity")
+
+#: committed elastic-WTT trajectory (PR 4 satellite): full (non-quick)
+#: sweeps rewrite it; ``scripts/check_bench_regression.py`` re-measures
+#: the stored points and fails CI when a fresh WTT drifts
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_elastic.json")
+
+#: the gated (scenario, algo) points, measured on the first sweep fleet
+GATED_POINTS = (("flaky", "joss-t"), ("spot", "joss-t"))
 
 
 def _autoscaler_for(scenario: str, n_hosts: int):
@@ -69,9 +87,11 @@ def _autoscaler_for(scenario: str, n_hosts: int):
 
 
 def _run(name: str, hosts_per_pod, scenario: str, cfg_kw: dict,
-         n_jobs: int, seed: int = 11, durability: Optional[dict] = None):
+         n_jobs: int, seed: int = 11, durability: Optional[dict] = None,
+         replication: int = 1):
     cluster = make_cluster(hosts_per_pod)
-    jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
+    jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs,
+                          replication=replication)
     algo = make_algorithm(name, cluster)
     if hasattr(algo, "registry"):
         for j in profiling_prelude(cluster):
@@ -205,6 +225,57 @@ def run(quick: bool = False) -> str:
          "reexec-loc", "rerep", "rerep MB", "ckpt MB", "saved MB", "$"],
         drows)
 
+    # ------------------------------------ replication axis (PR 4 satellite) --
+    # The paper runs 1 replica/block; sweeping HDFS-style factors against
+    # the PR 3 re-replication pipeline shows the three-way trade-off:
+    # more replicas => better (retry) locality and less INT, but r x the
+    # storage footprint and MORE repair traffic per departing disk (every
+    # orphaned copy re-enters the pipeline — fabric load, when modelled).
+    repl_rows: List[List] = []
+    repl_int: Dict[str, float] = {}
+    repl_rerep: Dict[str, float] = {}
+    rerep_kw = durability_scenarios()["rerep"]
+    for rname, factor in replication_scenarios().items():
+        tot_int = tot_rerep = tot_lost = 0.0
+        for name in ALGOS:
+            res = _run(name, fleets[0], "flaky", scenarios["flaky"],
+                       n_jobs, durability=rerep_kw, replication=factor)
+            tot_int += res.int_bytes
+            tot_rerep += res.rerep_mb
+            tot_lost += res.work_lost_mb
+            n_re, n_loc = _reexec_stats(res)
+            repl_rows.append([
+                rname, name, res.wtt, res.int_bytes,
+                (f"{n_loc}/{n_re}" if n_re else "-"), res.n_rerep,
+                res.rerep_mb, res.work_lost_mb, f"{factor}x"])
+        repl_int[rname] = tot_int
+        repl_rerep[rname] = tot_rerep
+    out += "\n" + table(
+        "Replication axis — HDFS factor x algorithm under flaky churn "
+        f"with re-replication (fleet {len(fleets[0])}x{fleets[0][0]}; "
+        "'storage' = replicated block footprint vs the paper's 1x)",
+        ["replication", "algo", "wtt s", "INT MB", "reexec-loc", "rerep",
+         "rerep MB", "lost MB", "storage"], repl_rows)
+
+    # claim check: the replication trade-off is monotone when aggregated
+    # over all five algorithms — INT falls (reads find closer replicas)
+    # while repair traffic rises (every extra copy re-enters the
+    # pipeline when its disk departs)
+    r_names = list(replication_scenarios())
+    for a, b in zip(r_names, r_names[1:]):
+        assert repl_int[b] < repl_int[a], \
+            f"INT did not fall {a} -> {b}: " \
+            f"{repl_int[a]:.0f} -> {repl_int[b]:.0f}"
+        assert repl_rerep[b] > repl_rerep[a], \
+            f"repair traffic did not rise {a} -> {b}: " \
+            f"{repl_rerep[a]:.0f} -> {repl_rerep[b]:.0f}"
+    out += ("\n\n[claim check: replication 1->2->3 monotonically trades "
+            "INT (" + " -> ".join(f"{repl_int[r]/1024:.1f}GB"
+                                  for r in r_names)
+            + ") against repair traffic ("
+            + " -> ".join(f"{repl_rerep[r]/1024:.1f}GB" for r in r_names)
+            + "), all 5 algorithms aggregated]")
+
     # claim check: zero-churn elastic == static simulator, bit-identical —
     # with and without a disabled durability config attached
     disabled = dict(rereplicate=False, checkpoint=False)
@@ -302,6 +373,19 @@ def run(quick: bool = False) -> str:
          f"({ckpt_reexec} vs {off_reexec})")
     out += ("\n[claim check: checkpointing -> work-lost 0 MB, re-execs "
             f"{off_reexec} -> {ckpt_reexec} (probe, all 5 algorithms)]")
+
+    # full sweeps refresh the committed elastic-WTT trajectory that the
+    # CI bench-regression stage gates (quick runs never overwrite it —
+    # the stored points are full-size)
+    if not quick:
+        points = [dict(scenario=scen, fleet=list(fleets[0]), algo=name,
+                       n_jobs=n_jobs, seed=11,
+                       wtt=base[(scen, name)].wtt)
+                  for scen, name in GATED_POINTS]
+        with open(JSON_PATH, "w") as f:
+            json.dump({"points": points}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        out += f"\n[wrote {len(points)} gated WTT points -> {JSON_PATH}]"
     return out
 
 

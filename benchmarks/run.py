@@ -19,9 +19,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_dispatch, bench_elastic, bench_engine,
-                            bench_filtering, bench_mixed_workload,
-                            bench_overhead, bench_small_workload,
-                            bench_threshold)
+                            bench_fabric, bench_filtering,
+                            bench_mixed_workload, bench_overhead,
+                            bench_small_workload, bench_threshold)
 
     sections = {
         "filtering": lambda: bench_filtering.run(),
@@ -33,6 +33,7 @@ def main(argv=None) -> int:
         "overhead": lambda: bench_overhead.run(quick=args.quick),
         "dispatch": lambda: bench_dispatch.run(quick=args.quick),
         "elastic": lambda: bench_elastic.run(quick=args.quick),
+        "fabric": lambda: bench_fabric.run(quick=args.quick),
         "engine": lambda: bench_engine.run(),
     }
     picked = (args.only.split(",") if args.only else list(sections))

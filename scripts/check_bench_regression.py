@@ -18,6 +18,16 @@ sneezed. ``--slowdown`` multiplies the fresh assign time / divides the
 fresh event rate by a factor — an injectable regression used by
 ``tests/test_ci_gate.py`` to prove the gate trips.
 
+PR 4 adds the **elastic-WTT gate**: the stored ``BENCH_elastic.json``
+points ((scenario, fleet, algo) tuples written by full ``--only
+elastic`` sweeps) are re-simulated and compared against the stored WTT.
+Unlike the wall-clock gates, a simulated WTT is fully deterministic per
+seed, so the tolerance is essentially zero (``--wtt-threshold``, default
+0.1%): a trip means the simulator's *behaviour* changed, not that the
+machine was slow. After an intentional behaviour change, refresh the
+file with a full elastic sweep and say so in the commit.
+``--wtt-perturb`` scales the fresh WTT for the gate's self-test.
+
 Exit code: 0 = within budget, 1 = regression (or missing trajectory).
 """
 from __future__ import annotations
@@ -33,6 +43,7 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, p)
 
 JSON_PATH = os.path.join(_ROOT, "BENCH_dispatch.json")
+ELASTIC_JSON_PATH = os.path.join(_ROOT, "BENCH_elastic.json")
 
 #: assign entries are gated at and above this many total map slots — the
 #: scale points PR 1's O(1) envelope was accepted at
@@ -77,6 +88,33 @@ def _fresh_events_per_s(entry: dict, reps: int = 2) -> float:
                            n_jobs=entry["jobs"]) for _ in range(reps))
 
 
+def _fresh_wtt(point: dict) -> float:
+    """Re-simulate one stored elastic point (deterministic per seed)."""
+    from benchmarks.bench_elastic import _run
+    from repro.sim.workloads import churn_scenarios
+    cfg_kw = churn_scenarios()[point["scenario"]]
+    res = _run(point["algo"], tuple(point["fleet"]), point["scenario"],
+               cfg_kw, point["n_jobs"], seed=point.get("seed", 11))
+    return res.wtt
+
+
+def compare_elastic(stored: dict, fresh_wtt: dict,
+                    threshold: float) -> list:
+    """Pure comparison for the elastic-WTT gate: ``fresh_wtt`` maps
+    (scenario, algo) -> re-simulated WTT for every stored point."""
+    failures = []
+    for point in stored["points"]:
+        key = (point["scenario"], point["algo"])
+        fresh = fresh_wtt[key]
+        if abs(fresh - point["wtt"]) > threshold * point["wtt"]:
+            failures.append(
+                f"elastic WTT at {key[0]}/{key[1]} "
+                f"x{point['fleet']}: {fresh:.2f}s vs stored "
+                f"{point['wtt']:.2f}s (> {threshold:.2%} drift — the "
+                f"simulator's behaviour changed)")
+    return failures
+
+
 def compare(stored: dict, fresh_assign_us: dict, fresh_events: float,
             threshold: float) -> list:
     """Pure comparison: returns a list of human-readable failure strings.
@@ -118,6 +156,16 @@ def main(argv=None) -> int:
     ap.add_argument("--slowdown", type=float, default=1.0,
                     help="inject an artificial slowdown factor into the "
                          "fresh measurements (gate self-test)")
+    ap.add_argument("--elastic-json", default=ELASTIC_JSON_PATH,
+                    help="stored elastic-WTT points "
+                         "(default: BENCH_elastic.json)")
+    ap.add_argument("--wtt-threshold", type=float, default=0.001,
+                    help="allowed fractional WTT drift at the elastic "
+                         "points (default 0.1%%; the simulation is "
+                         "deterministic, so any drift is a behaviour "
+                         "change)")
+    ap.add_argument("--wtt-perturb", type=float, default=1.0,
+                    help="scale the fresh elastic WTTs (gate self-test)")
     args = ap.parse_args(argv)
 
     try:
@@ -125,6 +173,12 @@ def main(argv=None) -> int:
             stored = json.load(f)
     except OSError as e:
         print(f"[bench-regression] cannot read trajectory: {e}")
+        return 1
+    try:
+        with open(args.elastic_json) as f:
+            stored_elastic = json.load(f)
+    except OSError as e:
+        print(f"[bench-regression] cannot read elastic trajectory: {e}")
         return 1
 
     fresh_assign: dict = {}
@@ -140,12 +194,22 @@ def main(argv=None) -> int:
           f"{fresh_events:.0f} events/s "
           f"(stored {biggest['new_events_per_s']:.0f})")
 
+    fresh_wtt: dict = {}
+    for point in stored_elastic["points"]:
+        key = (point["scenario"], point["algo"])
+        fresh_wtt[key] = _fresh_wtt(point) * args.wtt_perturb
+        print(f"[bench-regression] elastic {key[0]}/{key[1]}: "
+              f"{fresh_wtt[key]:.2f}s wtt (stored {point['wtt']:.2f})")
+
     failures = compare(stored, fresh_assign, fresh_events, args.threshold)
+    failures += compare_elastic(stored_elastic, fresh_wtt,
+                                args.wtt_threshold)
     for f in failures:
         print(f"[bench-regression] FAIL: {f}")
     if not failures:
         print(f"[bench-regression] OK: trajectory held within "
-              f"{args.threshold:.0%} at every gated point")
+              f"{args.threshold:.0%} at every gated perf point and "
+              f"{args.wtt_threshold:.2%} at every elastic WTT point")
     return 1 if failures else 0
 
 

@@ -12,11 +12,20 @@
 #                      simulator, disabled-durability bit-identity with
 #                      the PR 2 elastic simulator, per-seed determinism,
 #                      no-assignment-to-departed-hosts, re-replication
-#                      locality gain and checkpoint zero-loss — all
-#                      asserted inside bench_elastic
+#                      locality gain, checkpoint zero-loss and the
+#                      replication-factor trade-off — all asserted
+#                      inside bench_elastic
+#   fabric-claims    — fabric-disabled bit-identity with the committed
+#                      PR 3 golden trajectories (25 cases), per-stream
+#                      parity on an uncontended fabric, INT ordering,
+#                      the contention-widens-JoSS-margin probe, and
+#                      flow-completion determinism — all asserted
+#                      inside bench_fabric
 #   bench-regression — fresh dispatch sweep vs the committed
 #                      BENCH_dispatch.json trajectory (>25% regression at
-#                      the 4096/8192-host points fails)
+#                      the 4096/8192-host points fails) + re-simulated
+#                      elastic WTT vs BENCH_elastic.json (any drift is a
+#                      behaviour change, tolerance 0.1%)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -43,5 +52,6 @@ stage lint lint
 stage tier-1 python -m pytest -x -q
 stage claim-checks python -m benchmarks.run --quick --only overhead,dispatch,small
 stage elastic-claims python -m benchmarks.run --quick --only elastic
+stage fabric-claims python -m benchmarks.run --quick --only fabric
 stage bench-regression python scripts/check_bench_regression.py
 echo "== CI green: $((SECONDS))s total =="

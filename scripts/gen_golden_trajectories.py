@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""(Re)generate the committed golden-trajectory anchor (PR 4).
+
+Runs the ``repro.sim.golden`` case matrix against the *current* simulator
+and writes the signature hashes to ``tests/golden/sim_trajectories.json``.
+The file in the tree was generated from the PR 3 simulator immediately
+before the event-kernel refactor; the equivalence tests and the
+``bench_fabric`` claim check compare fresh fabric-disabled runs against
+it, so regenerating is only legitimate after an *intentional* behaviour
+change (document it in the commit that refreshes the file).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.sim import golden  # noqa: E402
+
+
+def main() -> int:
+    hashes = {}
+    for algo, variant in golden.golden_cases():
+        res = golden.run_case(algo, variant)
+        hashes[golden.case_key(algo, variant)] = golden.signature_hash(res)
+        print(f"  {golden.case_key(algo, variant):32s} "
+              f"{hashes[golden.case_key(algo, variant)][:16]}  "
+              f"wtt={res.wtt:.3f} reexec={res.n_reexec}")
+    os.makedirs(os.path.dirname(golden.GOLDEN_PATH), exist_ok=True)
+    with open(golden.GOLDEN_PATH, "w") as f:
+        json.dump({"hashes": hashes}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(hashes)} trajectory hashes -> {golden.GOLDEN_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,6 +40,31 @@ class Locality(enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
+class LinkCapacities:
+    """Aggregate fabric capacities (MB/s) of the virtual cluster (PR 4).
+
+    The tenant-visible network is modelled as one uplink and one downlink
+    per pod (everything its hosts send into / receive from the fabric,
+    including pod-object-store traffic) plus a single shared WAN link that
+    every inter-pod byte crosses. ``sim.network.NetworkFabric`` drains
+    flows through these with max-min fair sharing; the per-stream rates of
+    ``SimConfig`` (``pod_bw``/``dcn_bw``) remain the *per-flow* caps, so an
+    uncontended fabric reproduces per-stream timing and contention only
+    ever slows transfers down. Defaults approximate the paper's 15-VPS
+    pods with a moderately oversubscribed WAN; benchmarks override them
+    explicitly (``repro.sim.workloads.fabric_links``).
+    """
+
+    pod_up: float = 1650.0    # per-pod aggregate uplink (15 x pod_bw)
+    pod_down: float = 1650.0  # per-pod aggregate downlink
+    wan: float = 525.0        # shared inter-pod capacity (15 x dcn_bw)
+
+    def __post_init__(self):
+        if min(self.pod_up, self.pod_down, self.wan) <= 0:
+            raise ValueError("link capacities must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
 class HostId:
     """Identifies one executor (paper: VPS_{c,l})."""
 
@@ -87,9 +112,14 @@ class VirtualCluster:
     """
 
     def __init__(self, hosts_per_pod: Sequence[int], *, map_slots: int = 1,
-                 reduce_slots: int = 1):
+                 reduce_slots: int = 1,
+                 links: Optional[LinkCapacities] = None):
         if len(hosts_per_pod) < 1:
             raise ValueError("need at least one pod")
+        # fabric capacities (PR 4): per-pod uplink/downlink + shared WAN.
+        # Only consulted when a run enables the contention-aware fabric
+        # (``SimConfig.fabric``); per-stream runs never read them.
+        self.links = links or LinkCapacities()
         self.pods: List[Pod] = []
         self._host_by_id: Dict[HostId, Host] = {}
         # construction-time slot shape: the default for leased hosts, so an

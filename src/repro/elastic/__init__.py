@@ -15,9 +15,10 @@ from repro.elastic.autoscaler import (Autoscaler, BacklogThresholdScaler,
                                       FleetObservation, ScaleDecision)
 from repro.elastic.churn import ChurnConfig, ChurnEvent, ChurnModel
 from repro.elastic.durability import (DurabilityConfig, DurabilityManager,
+                                      DurabilitySubsystem,
                                       DurabilitySummary, RerepEvent)
 from repro.elastic.engine import (ElasticActions, ElasticEngine,
-                                  ElasticSummary)
+                                  ElasticSubsystem, ElasticSummary)
 from repro.elastic.leases import (ON_DEMAND, SPOT, Lease, LeaseBook,
                                   PriceSheet)
 
@@ -25,8 +26,9 @@ __all__ = [
     "Autoscaler", "BacklogThresholdScaler", "CostCappedSpotScaler",
     "FixedFleet", "FleetObservation", "ScaleDecision",
     "ChurnConfig", "ChurnEvent", "ChurnModel",
-    "DurabilityConfig", "DurabilityManager", "DurabilitySummary",
-    "RerepEvent",
-    "ElasticActions", "ElasticEngine", "ElasticSummary",
+    "DurabilityConfig", "DurabilityManager", "DurabilitySubsystem",
+    "DurabilitySummary", "RerepEvent",
+    "ElasticActions", "ElasticEngine", "ElasticSubsystem",
+    "ElasticSummary",
     "ON_DEMAND", "SPOT", "Lease", "LeaseBook", "PriceSheet",
 ]

@@ -36,10 +36,13 @@ claim checks in ``benchmarks/bench_elastic.py`` assert both).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.job import MapTask
 from repro.core.topology import Host, HostId, VirtualCluster
+from repro.sim.engine import EventKernel, Subsystem
 
 from repro.elastic.leases import PriceSheet
 
@@ -187,3 +190,100 @@ class DurabilityManager:
     def finalize(self) -> DurabilitySummary:
         self.summary.storage_dollars = self.storage_cost()
         return self.summary
+
+
+class DurabilitySubsystem(Subsystem):
+    """Simulator plug-in (PR 4): owns the ``rerep`` event kind, schedules
+    repairs on the ``on_host_lost`` hook, and notes checkpoint writes on
+    ``on_task_finish`` — the arms PR 3 inlined into ``Simulator.run``.
+
+    Repair traffic has two transports:
+
+      * **per-stream mode** — the manager's serialized bandwidth-budget
+        clock decides each copy's completion (bit-identical to PR 3).
+      * **fabric mode** — each copy is a fabric *flow* (kind ``rerep``)
+        at the repair bandwidth, still strictly serial and still delayed
+        by the detection timeout, but now contending with task traffic
+        on the pod links and the WAN. The flow targets the pod that lost
+        the replica (where ``DurabilityManager.apply`` prefers to
+        restore); its source is the first surviving replica's pod, or
+        the external store (WAN ingress) when none survives.
+    """
+
+    def __init__(self, manager: DurabilityManager):
+        self.mgr = manager
+
+    def attach(self, sim, kernel: EventKernel) -> None:
+        super().attach(sim, kernel)
+        kernel.register("rerep", self._on_rerep)
+        self.shard_size: Dict[object, float] = {}
+        if self.mgr.cfg.rereplicate:
+            for j in sim.jobs:
+                for sid, b in zip(j.shard_ids, j.shard_bytes):
+                    self.shard_size[sid] = float(b)
+        # fabric-mode repair pipeline: FIFO of (shard, pod, mb, eligible_t)
+        self._repairs = collections.deque()
+        self._copying = False
+
+    # -- hooks -----------------------------------------------------------------
+    def on_host_lost(self, host: Host, now: float) -> None:
+        if not self.mgr.cfg.rereplicate:
+            return
+        if self.sim.fabric is None:
+            # completions computed by the manager's own pipeline clock
+            for rev in self.mgr.host_lost(host, now, self.shard_size.get):
+                self.kernel.push(rev.time, "rerep", rev)
+            return
+        eligible = now + self.mgr.cfg.rerep_delay
+        for sid in sorted(host.local_shards, key=str):
+            size = self.shard_size.get(sid)
+            if size is None:
+                continue   # not part of the simulated workload
+            self._repairs.append((sid, host.hid.pod, float(size), eligible))
+            self.mgr.summary.n_rerep_scheduled += 1
+        self._pump(now)
+
+    def on_task_finish(self, log, now: float) -> None:
+        job = log.job
+        if (self.mgr.cfg.checkpoint and isinstance(log.task, MapTask)
+                and self.mgr.checkpoints_job(job)):
+            # a finished map's synchronous store write (paid inside the
+            # task duration) lands with its completion
+            self.mgr.note_ckpt_write(
+                job.shard_bytes[log.task.index] * job.true_fp)
+
+    # -- event handlers ----------------------------------------------------------
+    def _on_rerep(self, now: float, ev: RerepEvent) -> None:
+        # a repair copy completed: patch the replica map and give
+        # queued/re-executed maps their locality index entries back
+        restored = self.mgr.apply(ev)
+        if restored is not None:
+            tgt, pod_covered = restored
+            hook = getattr(self.sim.algo, "replica_restored", None)
+            if hook is not None:
+                hook(ev.shard_id, tgt, pod_covered)
+
+    # -- fabric-mode repair pipeline ----------------------------------------------
+    def _pump(self, now: float) -> None:
+        if self._copying or not self._repairs:
+            return
+        self._copying = True
+        eligible = self._repairs[0][3]
+        if now < eligible:
+            self.kernel.call_at(eligible, self._launch)
+        else:
+            self._launch(now)
+
+    def _launch(self, now: float) -> None:
+        sid, pod, mb, _eligible = self._repairs.popleft()
+        reps = self.sim.cluster.shard_replicas.get(sid) or ()
+        src_pod = reps[0].pod if reps else None
+
+        def copied(tn):
+            self.kernel.push(tn, "rerep", RerepEvent(tn, sid, pod, mb))
+            self._copying = False
+            self._pump(tn)
+
+        self.sim.fabric.start_flow(now, mb, src_pod, pod,
+                                   self.mgr.cfg.rerep_bandwidth, "rerep",
+                                   copied)

@@ -28,6 +28,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.topology import HostId, VirtualCluster
+from repro.sim.engine import EventKernel, Subsystem
 
 from repro.elastic.autoscaler import Autoscaler, FleetObservation
 from repro.elastic.churn import ChurnConfig, ChurnEvent, ChurnModel
@@ -244,3 +245,50 @@ class ElasticEngine:
             s.durability = self.durability.finalize()
             s.cost += s.durability.storage_dollars
         return s
+
+
+class ElasticSubsystem(Subsystem):
+    """Simulator plug-in (PR 4): owns the ``churn`` and ``scale`` event
+    kinds and bridges the engine's policy decisions to the simulator's
+    fleet mechanics (``Simulator.add_host`` / ``Simulator.lose_host``).
+    Replaces the event arms that PRs 2-3 inlined into ``Simulator.run``;
+    the apply order (losses, then adds with their follow-up draws, then
+    policy follow-ups) is part of the bit-identity contract."""
+
+    def __init__(self, engine: ElasticEngine):
+        self.engine = engine
+
+    def attach(self, sim, kernel: EventKernel) -> None:
+        super().attach(sim, kernel)
+        kernel.register("churn", self._on_churn)
+        kernel.register("scale", self._on_scale)
+
+    def start(self, now: float) -> None:
+        for ev in self.engine.startup(now):
+            self.kernel.push(ev.time, "churn", ev)
+        tick = getattr(self.engine.autoscaler, "interval", None)
+        if tick:
+            self.kernel.push(now + tick, "scale", None)
+
+    def _on_churn(self, now: float, ev: ChurnEvent) -> None:
+        self._apply(self.engine.on_churn(
+            ev, self.sim.fleet_observation(now)), now)
+
+    def _on_scale(self, now: float, _payload) -> None:
+        if self.sim.unfinished > 0:
+            self._apply(self.engine.autoscale(
+                self.sim.fleet_observation(now, full=True)), now)
+            self.kernel.push(now + self.engine.autoscaler.interval,
+                             "scale", None)
+
+    def _apply(self, actions: ElasticActions, now: float) -> None:
+        engine = self.engine
+        for hid, reason in actions.losses:
+            self.sim.lose_host(hid, now)
+            engine.applied_loss(hid, now, reason)
+        for pod, kind in actions.adds:
+            hid = self.sim.add_host(pod, kind, now)
+            for fev in engine.applied_add(hid, kind, now):
+                self.kernel.push(fev.time, "churn", fev)
+        for fev in actions.followups:
+            self.kernel.push(fev.time, "churn", fev)

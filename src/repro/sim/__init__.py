@@ -6,9 +6,16 @@ hosts), without real VPSs. The same JoSS control-plane code that drives the
 JAX data pipeline is exercised here.
 """
 from repro.sim.cluster_sim import SimConfig, SimResult, Simulator
-from repro.sim.workloads import (PAPER_BENCHMARKS, make_cluster,
-                                 mixed_workload, small_workload)
+from repro.sim.engine import EventKernel, Subsystem
+from repro.sim.network import FabricConfig, FabricSummary, NetworkFabric
+from repro.sim.workloads import (PAPER_BENCHMARKS, fabric_links,
+                                 fabric_scenarios, make_cluster,
+                                 mixed_workload, replication_scenarios,
+                                 small_workload)
 from repro.sim.metrics import summarize
 
-__all__ = ["SimConfig", "SimResult", "Simulator", "PAPER_BENCHMARKS",
-           "make_cluster", "mixed_workload", "small_workload", "summarize"]
+__all__ = ["SimConfig", "SimResult", "Simulator", "EventKernel",
+           "Subsystem", "FabricConfig", "FabricSummary", "NetworkFabric",
+           "PAPER_BENCHMARKS", "fabric_links", "fabric_scenarios",
+           "make_cluster", "mixed_workload", "replication_scenarios",
+           "small_workload", "summarize"]

@@ -1,97 +1,46 @@
 """Discrete-event simulation of MapReduce execution on a virtual cluster.
 
-Timing model (tenant-visible, matching the paper's three locality levels):
+Architecture (PR 4): the event loop lives in the reusable kernel of
+``repro.sim.engine`` (event heap, deterministic sequencing, typed event
+registry); optional machinery — elastic churn/autoscaling, durability,
+the contention-aware network fabric — plugs in through the subsystem
+protocol instead of inline event branches. ``docs/ARCHITECTURE.md`` is
+the full tour: the kernel contract, the subsystem hooks, the per-stream
+timing model (map read / shuffle / reduce formulas, the shuffle gate,
+INT accounting), the elastic lease/failure/re-execution semantics, the
+durability channels, and the fabric flow model.
+
+The short version of the timing model (paper's three locality levels):
 
   map duration    = overhead + input/read_bw(locality) + input/map_rate
   shuffle read    = sum over mapper sources of bytes/read_bw(locality)
   reduce duration = overhead + shuffle read + reduce_input/reduce_rate
 
-Reduce tasks become *ready* when all map tasks of the job finished (Hadoop's
-shuffle gate, simplified; identical for every algorithm so comparisons are
-fair). Inter-pod bytes (INT) count every off-pod map read and every cross-pod
-shuffle transfer, exactly the paper's INT metric.
+with reduces gated on all maps of the job (Hadoop's shuffle gate) and
+INT counting every off-pod map read and cross-pod shuffle transfer.
 
-Dispatch engine: the seed shuffled and polled EVERY host on every event
-(O(hosts) algo calls per event, ~4096 no-op polls at the scale-sweep
-operating point). The incremental dispatcher below tracks hosts-with-free-
-slots sets plus queued-map / ready-reduce backlog counters, skips dispatch
-outright when there is no assignable work, and offers slots only to
-eligible hosts (still in shuffled order, so no algorithm benefits from host
-enumeration order). Per-pod backlog flags (``map_work_in_pod`` /
-``reduce_work_in_pod`` on JoSS algorithms) additionally skip hosts whose
-pod has drained while another pod still has work — the skip is exact (a
-skipped host's poll was guaranteed to return None), so trajectories are
-unchanged. It also pushes ``job_maps_done`` notifications into the
-algorithm so ready-reduce transitions are O(1) events instead of per-slot
-predicate scans. ``SimConfig.poll_all_hosts`` restores the seed's
-full-polling loop for old-vs-new benchmarking.
+Two transfer-timing modes share all scheduling/accounting code:
 
-Elastic clusters (PR 2): pass an ``repro.elastic.ElasticEngine`` to run on
-a *rented* fleet that churns. The lease / failure / re-execution timing
-model is:
-
-  * A departing host (failure, spot preemption, non-renewed lease expiry)
-    vanishes at the event instant — a hard stop, as a reclaimed VPS gives
-    no grace period. Its free slots leave the offer sets immediately, so
-    no task is ever assigned to a departed host.
-  * Tasks RUNNING on the host are killed (state FAILED) and re-executed:
-    a fresh attempt is enqueued through the algorithm's requeue interface
-    (JoSS routes retries through MQ_FIFO/RQ_FIFO, which assigners serve
-    first — Hadoop's failed-task retry priority). Bytes already read by a
-    killed task stay counted: the traffic physically happened.
-  * Completed map outputs stored on the dead host's local disk are lost.
-    If the job still has unfinished reduce work, each lost output forces
-    its map task to re-run (``work_lost_mb`` accumulates the lost output
-    bytes), and the job's shuffle gate RE-CLOSES (``job_maps_undone``)
-    until the re-runs land: reduces not yet started must wait and re-read
-    from the re-executed mappers' new locations. Reduces that already
-    started keep the data they fetched at start (our shuffle is eager).
-  * A joining host (replacement VPS, autoscale-out) starts with an empty
-    disk — no shard replicas — and a brand-new ``HostId`` (indices are
-    never reused), entering the offer sets at the event instant.
-  * Lease accounting (VPS-hours, $) and churn policy live in the engine;
-    all churn randomness comes from the engine's own seeded RNG, so a
-    churn-disabled elastic run is bit-identical to the static simulator
-    and any churn run is deterministic per (workload seed, churn seed).
-  * The autoscaler observes the PR 1 backlog counters at a fixed tick
-    interval and leases/returns VPSs; scale-in only returns fully-idle
-    hosts and the engine never drops the last host of the cluster.
-
-Data durability (PR 3): an engine built with a ``DurabilityConfig``
-(``repro.elastic.durability``) restores the two guarantees churn broke:
-
-  * **Re-replication** — each shard a departing disk held is repaired
-    after a detection delay, the copies draining serially through a
-    bandwidth budget (the manager owns the clock; completions arrive here
-    as ``rerep`` events). A completed repair patches the cluster's
-    replica map and re-patches the queue locality indexes
-    (``replica_restored``), so re-executed and still-queued maps regain
-    node/pod locality. Repair traffic is tracked in ``rerep_mb`` —
-    separate from INT, which remains the paper's task-read metric.
-  * **Shuffle checkpointing** — a checkpointed job's map tasks
-    synchronously persist their output to the pod object store
-    (``+ output / ckpt_write_bw`` inside the map duration). Its finished
-    outputs then survive host loss: no re-execution, no shuffle-gate
-    re-close, no ``work_lost_mb``. Reduces fetching a *departed*
-    mapper's output read the store instead of the dead disk — pod
-    bandwidth capped at ``ckpt_read_bw``, WAN-capped across pods — and
-    the store bills ``PriceSheet.storage_per_gb`` into ``cost_dollars``.
-
-Both channels are deterministic (no RNG) and fully gated: durability
-disabled is bit-identical to the PR 2 elastic simulator, asserted by the
-``bench_elastic`` claim checks and ``tests/test_durability.py``.
+  * **per-stream** (default, ``SimConfig.fabric=None``) — every transfer
+    is charged a fixed rate; bit-identical to the PR 3 simulator, held
+    to the committed golden trajectories (``repro.sim.golden``).
+  * **fabric** (``SimConfig.fabric=FabricConfig(...)``) — transfers
+    drain as flows through per-pod uplinks/downlinks and a shared WAN
+    with max-min fair sharing (``repro.sim.network``), so transfer
+    completion times respond to load and saving INT bytes actually
+    makes jobs faster — the paper's feedback loop.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.job import Job, MapTask, ReduceTask, TaskState
 from repro.core.topology import HostId, Locality, VirtualCluster
+from repro.sim.engine import EventKernel, Subsystem
+from repro.sim.network import FabricConfig, NetworkFabric
 
 
 @dataclasses.dataclass
@@ -115,6 +64,10 @@ class SimConfig:
     # seed-style dispatch: shuffle + poll every host on every event (kept
     # for old-vs-new benchmarking; the indexed dispatcher is the default)
     poll_all_hosts: bool = False
+    # contention-aware fabric (PR 4): None = per-stream mode (bit-identical
+    # to the PR 3 simulator); a FabricConfig routes map reads, shuffle
+    # fetches, checkpoint and repair traffic through shared links
+    fabric: Optional[FabricConfig] = None
 
     def read_bw(self, loc: Locality) -> float:
         return {Locality.HOST: self.disk_bw, Locality.POD: self.pod_bw,
@@ -160,6 +113,11 @@ class SimResult:
     ckpt_mb_written: float = 0.0  # map output persisted to pod stores
     ckpt_saved_mb: float = 0.0  # output MB the store saved from dead disks
     storage_dollars: float = 0.0  # object-store bill (also in cost_dollars)
+    # -- fabric outputs (PR 4; all zero/None in per-stream mode) -------------
+    fabric: object = None       # FabricSummary when run with a fabric
+    fabric_mb: float = 0.0      # MB drained through the fabric
+    fabric_stall_s: float = 0.0  # transfer time lost to link contention
+    wan_util: float = 0.0       # mean shared-WAN utilization over the run
 
     def jtt(self, job: Job) -> float:
         return self.job_finish[job.job_id] - self.job_submit[job.job_id]
@@ -178,244 +136,496 @@ class Simulator:
         self.cfg = config or SimConfig()
         self.rng = np.random.RandomState(seed)
         self.elastic = elastic   # Optional[repro.elastic.ElasticEngine]
-        self._seq = itertools.count()
 
     # ------------------------------------------------------------------ run --
     def run(self) -> SimResult:
+        kernel = self.kernel = EventKernel()
+        subs = self._setup_state()
+        kernel.register("submit", self._on_submit)
+        kernel.register("hb", self._on_heartbeat, post_step=False)
+        kernel.register("map_done", self._on_map_done)
+        kernel.register("reduce_done", self._on_reduce_done)
+        for s in subs:
+            s.attach(self, kernel)
+        self._bind_hooks(subs)
+        for job in self.jobs:
+            kernel.push(job.submit_time, "submit", job)
+        for s in subs:
+            s.start(0.0)
+        dispatch = (self._naive_dispatch if self.cfg.poll_all_hosts
+                    else self._dispatch)
+        self._dispatch_fn = dispatch
+        end = kernel.run(post_step=dispatch, stop=self._drained)
+        return self._finalize(end)
+
+    def _drained(self) -> bool:
+        # all work done: the rest of the heap is heartbeats and
+        # churn/autoscale ticks — nothing observable can happen, and
+        # stopping here keeps lease accounting at makespan
+        return self.unfinished == 0
+
+    # ---------------------------------------------------------------- state --
+    def _setup_state(self) -> List[Subsystem]:
         cfg = self.cfg
         elastic = self.elastic
         # durability (PR 3): both flags gate every new branch below, so a
         # run without a manager executes exactly the PR 2 code path
-        dur = elastic.durability if elastic is not None else None
-        ckpt_on = dur is not None and dur.cfg.checkpoint
-        rerep_on = dur is not None and dur.cfg.rereplicate
-        departed: set = set()       # HostIds gone (ckpt store-read routing)
-        shard_size: Dict[object, float] = {}
-        if rerep_on:
-            for j in self.jobs:
-                for sid, b in zip(j.shard_ids, j.shard_bytes):
-                    shard_size[sid] = float(b)
-        events: List[Tuple[float, int, str, object]] = []
-
-        def push(t, kind, payload):
-            heapq.heappush(events, (t, next(self._seq), kind, payload))
-
-        for job in self.jobs:
-            push(job.submit_time, "submit", job)
-
+        self.dur = dur = elastic.durability if elastic is not None else None
+        self.ckpt_on = dur is not None and dur.cfg.checkpoint
+        self.rerep_on = dur is not None and dur.cfg.rereplicate
+        self.departed = set()    # HostIds gone (ckpt store-read routing)
         # slot state
-        map_free = {h.hid: h.map_slots for h in self.cluster.hosts()}
-        red_free = {h.hid: h.reduce_slots for h in self.cluster.hosts()}
+        self.map_free = {h.hid: h.map_slots for h in self.cluster.hosts()}
+        self.red_free = {h.hid: h.reduce_slots for h in self.cluster.hosts()}
         # hosts with at least one free slot of each kind (incremental sets:
         # dispatch touches only eligible hosts instead of polling all)
-        free_map_hosts = {h for h, n in map_free.items() if n > 0}
-        free_red_hosts = {h for h, n in red_free.items() if n > 0}
-        maps_left = {j.job_id: j.m for j in self.jobs}
-        reds_left = {j.job_id: len(j.reduce_tasks) for j in self.jobs}
+        self.free_map_hosts = {h for h, n in self.map_free.items() if n > 0}
+        self.free_red_hosts = {h for h, n in self.red_free.items() if n > 0}
+        self.maps_left = {j.job_id: j.m for j in self.jobs}
+        self.reds_left = {j.job_id: len(j.reduce_tasks) for j in self.jobs}
         # queued-but-unassigned reduces per job (for gate open/close sizing;
         # statically equals len(reduce_tasks) at the single gate opening)
-        reds_unassigned = {j.job_id: len(j.reduce_tasks) for j in self.jobs}
-        job_by_id = {j.job_id: j for j in self.jobs}
+        self.reds_unassigned = {j.job_id: len(j.reduce_tasks)
+                                for j in self.jobs}
+        self.job_by_id = {j.job_id: j for j in self.jobs}
         # mapper placements for shuffle accounting:
         # job -> [(host, out_bytes, map_index)]
-        map_out: Dict[int, List[Tuple[HostId, float, int]]] = {
+        self.map_out: Dict[int, List[Tuple[HostId, float, int]]] = {
             j.job_id: [] for j in self.jobs}
         # reverse index: host -> jobs with map output on its disk, so a
         # host departure touches only the affected jobs instead of
         # scanning every job's full output list (churn-scale fix)
-        host_outputs: Dict[HostId, set] = {}
-        running: Dict[object, TaskLog] = {}
-        task_logs: List[TaskLog] = []
-        job_submit: Dict[int, float] = {}
-        job_finish: Dict[int, float] = {}
-        int_bytes = 0.0
-        pod_bytes = 0.0
-        submitted: set = set()
-        now = 0.0
+        self.host_outputs: Dict[HostId, set] = {}
+        self.running: Dict[object, TaskLog] = {}
+        self.task_logs: List[TaskLog] = []
+        self.job_submit: Dict[int, float] = {}
+        self.job_finish: Dict[int, float] = {}
+        self.int_bytes = 0.0
+        self.pod_bytes = 0.0
+        self.submitted: set = set()
         # backlog counters: queued-but-unassigned maps and ready-but-
         # unassigned reduces; dispatch is a no-op while both are zero
-        map_backlog = 0
-        red_ready_backlog = 0
-        notify_maps_done = getattr(self.algo, "job_maps_done", None)
+        self.map_backlog = 0
+        self.red_ready_backlog = 0
+        self.notify_maps_done = getattr(self.algo, "job_maps_done", None)
         # elastic-cluster accounting
-        work_lost_mb = 0.0
-        n_reexec = 0
-        n_host_adds = 0
-        n_host_losses = 0
+        self.work_lost_mb = 0.0
+        self.n_reexec = 0
+        self.n_host_adds = 0
+        self.n_host_losses = 0
         # highest attempt number handed out per task (speculative twins and
         # churn re-executions share the sequence so tids stay unique)
-        m_attempt: Dict[Tuple[int, int], int] = {}
-        r_attempt: Dict[Tuple[int, int], int] = {}
+        self.m_attempt: Dict[Tuple[int, int], int] = {}
+        self.r_attempt: Dict[Tuple[int, int], int] = {}
         # speculative-execution bookkeeping (straggler mitigation)
-        done_pairs: set = set()              # (job_id, map_index) finished
-        backups: Dict[Tuple[int, int], int] = {}
-        spec_tids: set = set()               # tids of backup shadows (the
+        self.done_pairs: set = set()          # (job_id, map_index) finished
+        self.backups: Dict[Tuple[int, int], int] = {}
+        self.spec_tids: set = set()           # tids of backup shadows (the
         # attempt counter alone can't tell a backup from a churn re-run)
-        map_durations: List[float] = []
-
-        def ready_reduce(t: ReduceTask) -> bool:
-            return (t.job_id in submitted and maps_left[t.job_id] == 0)
-
-        def host_slow(hid: HostId) -> float:
-            if cfg.slow_hosts:
-                return cfg.slow_hosts.get(hid, 1.0)
-            return 1.0
-
-        def start_map(t: MapTask, hid: HostId, now: float):
-            nonlocal int_bytes, pod_bytes
-            job = job_by_id[t.job_id]
-            size = job.shard_bytes[t.index]
-            if t.shard_id in self.cluster.shard_replicas:
-                _, loc = self.cluster.nearest_replica(t.shard_id, hid)
-            else:
-                loc = Locality.OFF_POD
-            read_t = size / cfg.read_bw(loc)
-            comp_t = size / cfg.map_rate * job.cost_scale
-            write_t = 0.0
-            if ckpt_on and dur.checkpoints_job(job):
-                # synchronous persist of the map output to the pod object
-                # store before the task reports done (PR 3 checkpointing)
-                write_t = size * job.true_fp / dur.cfg.ckpt_write_bw
-            dur_s = (cfg.task_overhead + read_t + comp_t + write_t) \
-                * host_slow(hid)
-            t.state = TaskState.RUNNING
-            t.host, t.locality = hid, loc
-            log = TaskLog(job, t, hid, now, now + dur_s, loc)
-            if loc is Locality.POD:
-                log.bytes_pod = size
-                pod_bytes += size
-            elif loc is Locality.OFF_POD:
-                log.bytes_offpod = size
-                int_bytes += size
-            else:
-                log.bytes_local = size
-            running[t.tid] = log
-            left = map_free[hid] - 1
-            map_free[hid] = left
-            if left == 0:
-                free_map_hosts.discard(hid)
-            self.algo.task_started(t)
-            push(now + dur_s, "map_done", t)
-
-        def start_reduce(t: ReduceTask, hid: HostId, now: float):
-            nonlocal int_bytes, pod_bytes
-            job = job_by_id[t.job_id]
-            fp = job.true_fp
-            r = len(job.reduce_tasks)
-            log = TaskLog(job, t, hid, now, 0.0, None)
-            read_t = 0.0
-            for (src, out_bytes, _mi) in map_out[job.job_id]:
-                share = out_bytes * fp / r
-                if ckpt_on and src in departed:
-                    # the mapper's disk is gone; its output survives only
-                    # in src's pod object store (PR 3 checkpointing). A
-                    # store read is network traffic even within the pod,
-                    # and WAN-capped across pods.
-                    if src.pod == hid.pod:
-                        log.bytes_pod += share
-                        pod_bytes += share
-                        read_t += share / min(cfg.pod_bw,
-                                              dur.cfg.ckpt_read_bw)
-                    else:
-                        log.bytes_offpod += share
-                        int_bytes += share
-                        read_t += share / min(cfg.dcn_bw,
-                                              dur.cfg.ckpt_read_bw)
-                elif src == hid:
-                    log.bytes_local += share
-                    read_t += share / cfg.disk_bw
-                elif src.pod == hid.pod:
-                    log.bytes_pod += share
-                    pod_bytes += share
-                    read_t += share / cfg.pod_bw
-                else:
-                    log.bytes_offpod += share
-                    int_bytes += share
-                    read_t += share / cfg.dcn_bw
-            total_in = (log.bytes_local + log.bytes_pod + log.bytes_offpod)
-            comp_t = total_in / cfg.reduce_rate * job.cost_scale
-            dur_s = (cfg.task_overhead + read_t + comp_t) * host_slow(hid)
-            t.state = TaskState.RUNNING
-            t.host = hid
-            log.finish = now + dur_s
-            running[t.tid] = log
-            reds_unassigned[t.job_id] -= 1
-            left = red_free[hid] - 1
-            red_free[hid] = left
-            if left == 0:
-                free_red_hosts.discard(hid)
-            self.algo.task_started(t)
-            push(now + dur_s, "reduce_done", t)
-
-        all_hosts = [h.hid for h in self.cluster.hosts()]
-
-        def launch_backups(now: float):
-            """MapReduce speculative execution: duplicate a map task that
-            exceeds spec_slack x the median duration onto a free host
-            (another pod preferred) — first copy to finish wins."""
-            if len(map_durations) < 5:
-                return
-            threshold = cfg.spec_slack * float(np.median(map_durations))
-            for log in list(running.values()):
-                t = log.task
-                if not isinstance(t, MapTask):
-                    continue
-                pair = (t.job_id, t.index)
-                if (pair in done_pairs or backups.get(pair, 0) > 0
-                        or now - log.start <= threshold):
-                    continue
-                cands = [h for h in all_hosts
-                         if map_free[h] > 0 and h != log.host]
-                if not cands:
-                    continue
-                cands.sort(key=lambda h: (h.pod == log.host.pod,
-                                          h.pod, h.index))
-                a = m_attempt[pair] = m_attempt.get(pair, 0) + 1
-                shadow = MapTask(t.job_id, t.index, t.shard_id,
-                                 t.input_bytes, attempt=a)
-                backups[pair] = backups.get(pair, 0) + 1
-                spec_tids.add(shadow.tid)
-                start_map(shadow, cands[0], now)
-
-        host_rank = {hid: i for i, hid in enumerate(all_hosts)}
-        n_hosts = len(all_hosts)
+        self.map_durations: List[float] = []
+        self.all_hosts = [h.hid for h in self.cluster.hosts()]
+        self.host_rank = {hid: i for i, hid in enumerate(self.all_hosts)}
+        self.n_hosts = len(self.all_hosts)
         # O(1) per-pod backlog flags (PR 2 satellite): skip hosts whose pod
         # provably has no work. Exact — a skipped poll was guaranteed None.
-        map_pod_ok = getattr(self.algo, "map_work_in_pod", None)
-        red_pod_ok = getattr(self.algo, "reduce_work_in_pod", None)
+        self.map_pod_ok = getattr(self.algo, "map_work_in_pod", None)
+        self.red_pod_ok = getattr(self.algo, "reduce_work_in_pod", None)
+        # total outstanding work, to know when the heartbeat chain may stop
+        self.unfinished = sum(j.m + len(j.reduce_tasks) for j in self.jobs)
+        self.hb_scheduled = False
+        # speculative backups of checkpointed jobs read the pod object
+        # store instead of a shard replica (PR 4 satellite); empty unless
+        # speculation AND checkpointing are both on
+        self._store_read_maps: set = set()
+        # fabric mode: in-flight flow per task tid (cancelled on kill)
+        self._task_flows: Dict[object, int] = {}
 
-        def naive_dispatch(now: float):
-            # seed dispatcher (kept for old-vs-new benchmarking): shuffle
-            # and poll every host on every event
-            order = list(all_hosts)
-            self.rng.shuffle(order)
-            progress = True
-            while progress:
-                progress = False
-                for hid in order:
-                    while map_free[hid] > 0:
-                        t = self.algo.next_map_task(hid)
-                        if t is None:
-                            break
-                        start_map(t, hid, now)
-                        progress = True
-                    while red_free[hid] > 0:
-                        t = self.algo.next_reduce_task(hid, ready_reduce)
-                        if t is None:
-                            break
-                        start_reduce(t, hid, now)
-                        progress = True
-            if cfg.speculative:
-                launch_backups(now)
+        subs: List[Subsystem] = []
+        if self.elastic is not None:
+            from repro.elastic.durability import DurabilitySubsystem
+            from repro.elastic.engine import ElasticSubsystem
+            subs.append(ElasticSubsystem(self.elastic))
+            if self.dur is not None:
+                subs.append(DurabilitySubsystem(self.dur))
+        self.fabric: Optional[NetworkFabric] = None
+        if cfg.fabric is not None:
+            self.fabric = NetworkFabric(self.cluster, cfg.fabric)
+            subs.append(self.fabric)
+        return subs
 
-        def dispatch(now: float):
-            # incremental dispatcher: a no-op unless there is assignable
-            # work AND a host with a free slot to offer; each pass touches
-            # only eligible hosts. Heartbeat order is arbitrary in a real
-            # cluster, so eligible hosts are still offered in shuffled
-            # order (no algorithm benefits from host enumeration order).
-            nonlocal map_backlog, red_ready_backlog
+    def _bind_hooks(self, subs: List[Subsystem]) -> None:
+        """Collect only the hooks a subsystem actually overrides, so the
+        per-task/per-event hook fan-out costs nothing when unused."""
+        def overridden(name):
+            return [getattr(s, name) for s in subs
+                    if getattr(type(s), name) is not getattr(Subsystem, name)]
+        self._hooks_host_added = overridden("on_host_added")
+        self._hooks_host_lost = overridden("on_host_lost")
+        self._hooks_task_start = overridden("on_task_start")
+        self._hooks_task_finish = overridden("on_task_finish")
+        self._hooks_tick = overridden("on_tick")
+
+    # ------------------------------------------------------------- helpers --
+    def _ready_reduce(self, t: ReduceTask) -> bool:
+        return (t.job_id in self.submitted and self.maps_left[t.job_id] == 0)
+
+    def _host_slow(self, hid: HostId) -> float:
+        if self.cfg.slow_hosts:
+            return self.cfg.slow_hosts.get(hid, 1.0)
+        return 1.0
+
+    # --------------------------------------------------------- task starts --
+    def _start_map(self, t: MapTask, hid: HostId, now: float):
+        cfg = self.cfg
+        job = self.job_by_id[t.job_id]
+        size = job.shard_bytes[t.index]
+        store_read = t.tid in self._store_read_maps
+        src = None
+        if store_read:
+            # PR 4 satellite: a speculative backup of a checkpointed job
+            # fetches its own pod's object store (the store stages the
+            # job's blocks on first read) instead of re-reading the
+            # straggler's remote disk replica — pod traffic, not WAN
+            loc = Locality.POD
+        elif t.shard_id in self.cluster.shard_replicas:
+            src, loc = self.cluster.nearest_replica(t.shard_id, hid)
+        else:
+            loc = Locality.OFF_POD
+        if self.fabric is not None:
+            return self._start_map_fabric(t, hid, now, job, size, loc,
+                                          src, store_read)
+        if store_read:
+            read_t = size / min(cfg.pod_bw, self.dur.cfg.ckpt_read_bw)
+        else:
+            read_t = size / cfg.read_bw(loc)
+        comp_t = size / cfg.map_rate * job.cost_scale
+        write_t = 0.0
+        if self.ckpt_on and self.dur.checkpoints_job(job):
+            # synchronous persist of the map output to the pod object
+            # store before the task reports done (PR 3 checkpointing)
+            write_t = size * job.true_fp / self.dur.cfg.ckpt_write_bw
+        dur_s = (cfg.task_overhead + read_t + comp_t + write_t) \
+            * self._host_slow(hid)
+        t.state = TaskState.RUNNING
+        t.host, t.locality = hid, loc
+        log = TaskLog(job, t, hid, now, now + dur_s, loc)
+        self._account_map_bytes(log, loc, size)
+        self.running[t.tid] = log
+        left = self.map_free[hid] - 1
+        self.map_free[hid] = left
+        if left == 0:
+            self.free_map_hosts.discard(hid)
+        self.algo.task_started(t)
+        self.kernel.push(now + dur_s, "map_done", t)
+        for h in self._hooks_task_start:
+            h(log, now)
+
+    def _account_map_bytes(self, log: TaskLog, loc: Locality, size: float):
+        if loc is Locality.POD:
+            log.bytes_pod = size
+            self.pod_bytes += size
+        elif loc is Locality.OFF_POD:
+            log.bytes_offpod = size
+            self.int_bytes += size
+        else:
+            log.bytes_local = size
+
+    def _start_map_fabric(self, t: MapTask, hid: HostId, now: float,
+                          job: Job, size: float, loc: Locality,
+                          src: Optional[HostId], store_read: bool):
+        """Fabric-mode map: overhead -> input transfer (flow, unless
+        host-local) -> compute -> checkpoint write (flow) -> done. Fixed
+        stages ride ``kernel.call_at``; transfers drain through the
+        fabric. The host slowdown factor applies to local work (overhead,
+        disk read, compute) — network time is the fabric's to decide."""
+        cfg = self.cfg
+        slow = self._host_slow(hid)
+        t.state = TaskState.RUNNING
+        t.host, t.locality = hid, loc
+        log = TaskLog(job, t, hid, now, 0.0, loc)
+        self._account_map_bytes(log, loc, size)
+        self.running[t.tid] = log
+        left = self.map_free[hid] - 1
+        self.map_free[hid] = left
+        if left == 0:
+            self.free_map_hosts.discard(hid)
+        self.algo.task_started(t)
+        for h in self._hooks_task_start:
+            h(log, now)
+
+        k = self.kernel
+        tid = t.tid
+        comp_t = size / cfg.map_rate * job.cost_scale * slow
+        write_mb = 0.0
+        if self.ckpt_on and self.dur.checkpoints_job(job):
+            write_mb = size * job.true_fp
+
+        def fin(tn):
+            if tid in self.running:
+                k.push(tn, "map_done", t)
+
+        def wstage(tn):
+            if tid not in self.running:
+                return
+            if write_mb > 0.0:
+                # persist to the pod object store: pod-internal hop
+                self._task_flow(tid, tn, write_mb, hid.pod, hid.pod,
+                                self.dur.cfg.ckpt_write_bw, "ckpt_write",
+                                fin)
+            else:
+                fin(tn)
+
+        def cstage(tn):
+            if tid in self.running:
+                k.call_at(tn + comp_t, wstage)
+
+        pre = cfg.task_overhead * slow
+        if loc is Locality.HOST:
+            k.call_at(now + pre + size / cfg.disk_bw * slow + comp_t, wstage)
+            return
+        if store_read:
+            src_pod, cap = hid.pod, min(cfg.pod_bw, self.dur.cfg.ckpt_read_bw)
+        elif src is None:   # no surviving replica: external durable store
+            src_pod, cap = None, cfg.dcn_bw
+        else:
+            src_pod = src.pod
+            cap = cfg.pod_bw if loc is Locality.POD else cfg.dcn_bw
+
+        def rstage(tn):
+            if tid in self.running:
+                self._task_flow(tid, tn, size, src_pod, hid.pod, cap,
+                                "map_read", cstage)
+
+        k.call_at(now + pre, rstage)
+
+    def _task_flow(self, tid, now: float, mb: float, src_pod, dst_pod: int,
+                   cap: float, kind: str, done) -> None:
+        """Start a fabric flow owned by a running task; the ownership map
+        lets a churn kill cancel the in-flight transfer."""
+        def _done(tn):
+            self._task_flows.pop(tid, None)
+            done(tn)
+        fid = self.fabric.start_flow(now, mb, src_pod, dst_pod, cap,
+                                     kind, _done)
+        if fid >= 0:
+            self._task_flows[tid] = fid
+
+    def _start_reduce(self, t: ReduceTask, hid: HostId, now: float):
+        cfg = self.cfg
+        job = self.job_by_id[t.job_id]
+        fp = job.true_fp
+        r = len(job.reduce_tasks)
+        if self.fabric is not None:
+            return self._start_reduce_fabric(t, hid, now, job, fp, r)
+        log = TaskLog(job, t, hid, now, 0.0, None)
+        read_t = 0.0
+        for (src, out_bytes, _mi) in self.map_out[job.job_id]:
+            share = out_bytes * fp / r
+            if self.ckpt_on and src in self.departed:
+                # the mapper's disk is gone; its output survives only
+                # in src's pod object store (PR 3 checkpointing). A
+                # store read is network traffic even within the pod,
+                # and WAN-capped across pods.
+                if src.pod == hid.pod:
+                    log.bytes_pod += share
+                    self.pod_bytes += share
+                    read_t += share / min(cfg.pod_bw,
+                                          self.dur.cfg.ckpt_read_bw)
+                else:
+                    log.bytes_offpod += share
+                    self.int_bytes += share
+                    read_t += share / min(cfg.dcn_bw,
+                                          self.dur.cfg.ckpt_read_bw)
+            elif src == hid:
+                log.bytes_local += share
+                read_t += share / cfg.disk_bw
+            elif src.pod == hid.pod:
+                log.bytes_pod += share
+                self.pod_bytes += share
+                read_t += share / cfg.pod_bw
+            else:
+                log.bytes_offpod += share
+                self.int_bytes += share
+                read_t += share / cfg.dcn_bw
+        total_in = (log.bytes_local + log.bytes_pod + log.bytes_offpod)
+        comp_t = total_in / cfg.reduce_rate * job.cost_scale
+        dur_s = (cfg.task_overhead + read_t + comp_t) * self._host_slow(hid)
+        t.state = TaskState.RUNNING
+        t.host = hid
+        log.finish = now + dur_s
+        self.running[t.tid] = log
+        self.reds_unassigned[t.job_id] -= 1
+        left = self.red_free[hid] - 1
+        self.red_free[hid] = left
+        if left == 0:
+            self.free_red_hosts.discard(hid)
+        self.algo.task_started(t)
+        self.kernel.push(now + dur_s, "reduce_done", t)
+        for h in self._hooks_task_start:
+            h(log, now)
+
+    def _start_reduce_fabric(self, t: ReduceTask, hid: HostId, now: float,
+                             job: Job, fp: float, r: int):
+        """Fabric-mode reduce: overhead -> sequential shuffle fetches
+        (each remote source one flow; local sources read the disk) ->
+        compute -> done. Byte counters are charged at start, exactly like
+        per-stream mode (the traffic will physically happen)."""
+        cfg = self.cfg
+        slow = self._host_slow(hid)
+        log = TaskLog(job, t, hid, now, 0.0, None)
+        # (mb, src_pod, per-flow cap, kind) per remote fetch; local
+        # fetches contribute fixed disk time instead
+        fetches: List[Tuple[float, Optional[int], float, str]] = []
+        disk_t = 0.0
+        for (src, out_bytes, _mi) in self.map_out[job.job_id]:
+            share = out_bytes * fp / r
+            if self.ckpt_on and src in self.departed:
+                if src.pod == hid.pod:
+                    log.bytes_pod += share
+                    self.pod_bytes += share
+                    fetches.append((share, src.pod,
+                                    min(cfg.pod_bw,
+                                        self.dur.cfg.ckpt_read_bw),
+                                    "ckpt_read"))
+                else:
+                    log.bytes_offpod += share
+                    self.int_bytes += share
+                    fetches.append((share, src.pod,
+                                    min(cfg.dcn_bw,
+                                        self.dur.cfg.ckpt_read_bw),
+                                    "ckpt_read"))
+            elif src == hid:
+                log.bytes_local += share
+                disk_t += share / cfg.disk_bw
+            elif src.pod == hid.pod:
+                log.bytes_pod += share
+                self.pod_bytes += share
+                fetches.append((share, src.pod, cfg.pod_bw, "shuffle"))
+            else:
+                log.bytes_offpod += share
+                self.int_bytes += share
+                fetches.append((share, src.pod, cfg.dcn_bw, "shuffle"))
+        total_in = (log.bytes_local + log.bytes_pod + log.bytes_offpod)
+        comp_t = total_in / cfg.reduce_rate * job.cost_scale * slow
+        t.state = TaskState.RUNNING
+        t.host = hid
+        self.running[t.tid] = log
+        self.reds_unassigned[t.job_id] -= 1
+        left = self.red_free[hid] - 1
+        self.red_free[hid] = left
+        if left == 0:
+            self.free_red_hosts.discard(hid)
+        self.algo.task_started(t)
+        for h in self._hooks_task_start:
+            h(log, now)
+
+        k = self.kernel
+        tid = t.tid
+        it = iter(fetches)
+
+        def next_fetch(tn):
+            if tid not in self.running:
+                return
+            nxt = next(it, None)
+            if nxt is None:
+                k.call_at(tn + comp_t, done_stage)
+                return
+            mb, src_pod, cap, kind = nxt
+            self._task_flow(tid, tn, mb, src_pod, hid.pod, cap, kind,
+                            next_fetch)
+
+        def done_stage(tn):
+            if tid in self.running:
+                k.push(tn, "reduce_done", t)
+
+        k.call_at(now + (cfg.task_overhead + disk_t) * slow, next_fetch)
+
+    # ----------------------------------------------------------- dispatch --
+    def _launch_backups(self, now: float):
+        """MapReduce speculative execution: duplicate a map task that
+        exceeds spec_slack x the median duration onto a free host
+        (another pod preferred) — first copy to finish wins. Backups of
+        checkpointed jobs fetch the pod object store (PR 4 satellite)."""
+        cfg = self.cfg
+        map_durations = self.map_durations
+        if len(map_durations) < 5:
+            return
+        threshold = cfg.spec_slack * float(np.median(map_durations))
+        map_free = self.map_free
+        for log in list(self.running.values()):
+            t = log.task
+            if not isinstance(t, MapTask):
+                continue
+            pair = (t.job_id, t.index)
+            if (pair in self.done_pairs or self.backups.get(pair, 0) > 0
+                    or now - log.start <= threshold):
+                continue
+            cands = [h for h in self.all_hosts
+                     if map_free[h] > 0 and h != log.host]
+            if not cands:
+                continue
+            cands.sort(key=lambda h: (h.pod == log.host.pod,
+                                      h.pod, h.index))
+            a = self.m_attempt[pair] = self.m_attempt.get(pair, 0) + 1
+            shadow = MapTask(t.job_id, t.index, t.shard_id,
+                             t.input_bytes, attempt=a)
+            self.backups[pair] = self.backups.get(pair, 0) + 1
+            self.spec_tids.add(shadow.tid)
+            if self.ckpt_on and self.dur.checkpoints_job(
+                    self.job_by_id[t.job_id]):
+                self._store_read_maps.add(shadow.tid)
+            self._start_map(shadow, cands[0], now)
+
+    def _naive_dispatch(self, now: float):
+        # seed dispatcher (kept for old-vs-new benchmarking): shuffle
+        # and poll every host on every event
+        order = list(self.all_hosts)
+        self.rng.shuffle(order)
+        algo = self.algo
+        map_free = self.map_free
+        red_free = self.red_free
+        ready_reduce = self._ready_reduce
+        progress = True
+        while progress:
+            progress = False
+            for hid in order:
+                while map_free[hid] > 0:
+                    t = algo.next_map_task(hid)
+                    if t is None:
+                        break
+                    self._start_map(t, hid, now)
+                    progress = True
+                while red_free[hid] > 0:
+                    t = algo.next_reduce_task(hid, ready_reduce)
+                    if t is None:
+                        break
+                    self._start_reduce(t, hid, now)
+                    progress = True
+        if self.cfg.speculative:
+            self._launch_backups(now)
+
+    def _dispatch(self, now: float):
+        # incremental dispatcher: a no-op unless there is assignable
+        # work AND a host with a free slot to offer; each pass touches
+        # only eligible hosts. Heartbeat order is arbitrary in a real
+        # cluster, so eligible hosts are still offered in shuffled
+        # order (no algorithm benefits from host enumeration order).
+        map_backlog = self.map_backlog
+        red_ready_backlog = self.red_ready_backlog
+        if map_backlog or red_ready_backlog:
             algo = self.algo
+            free_map_hosts = self.free_map_hosts
+            free_red_hosts = self.free_red_hosts
+            map_free = self.map_free
+            red_free = self.red_free
+            all_hosts = self.all_hosts
+            n_hosts = self.n_hosts
+            host_rank = self.host_rank
+            map_pod_ok = self.map_pod_ok
+            red_pod_ok = self.red_pod_ok
+            ready_reduce = self._ready_reduce
+            start_map = self._start_map
+            start_reduce = self._start_reduce
             while map_backlog or red_ready_backlog:
                 elig = free_map_hosts if map_backlog else free_red_hosts
                 if red_ready_backlog and map_backlog:
@@ -460,326 +670,292 @@ class Simulator:
                             progress = True
                 if not progress:
                     break
-            if cfg.speculative:
-                launch_backups(now)
+            self.map_backlog = map_backlog
+            self.red_ready_backlog = red_ready_backlog
+        if self.cfg.speculative:
+            self._launch_backups(now)
 
-        if cfg.poll_all_hosts:
-            dispatch = naive_dispatch
+    # ---------------------------------------------- elastic mechanics --
+    def _remake_map(self, jid: int, midx: int) -> MapTask:
+        orig = self.job_by_id[jid].map_tasks[midx]
+        a = self.m_attempt[(jid, midx)] = self.m_attempt.get((jid, midx),
+                                                             0) + 1
+        return MapTask(jid, midx, orig.shard_id, orig.input_bytes,
+                       attempt=a)
 
-        # ---------------------------------------------- elastic mechanics --
-        def remake_map(jid: int, midx: int) -> MapTask:
-            orig = job_by_id[jid].map_tasks[midx]
-            a = m_attempt[(jid, midx)] = m_attempt.get((jid, midx), 0) + 1
-            return MapTask(jid, midx, orig.shard_id, orig.input_bytes,
-                           attempt=a)
+    def _remake_reduce(self, jid: int, ridx: int) -> ReduceTask:
+        a = self.r_attempt[(jid, ridx)] = self.r_attempt.get((jid, ridx),
+                                                             0) + 1
+        return ReduceTask(jid, ridx, attempt=a)
 
-        def remake_reduce(jid: int, ridx: int) -> ReduceTask:
-            a = r_attempt[(jid, ridx)] = r_attempt.get((jid, ridx), 0) + 1
-            return ReduceTask(jid, ridx, attempt=a)
+    def add_host(self, pod: int, kind: str, now: float) -> HostId:
+        """Lease a fresh VPS into ``pod`` and enter it in every offer
+        structure (called by the elastic subsystem)."""
+        h = self.cluster.add_host(pod)
+        hid = h.hid
+        self.map_free[hid] = h.map_slots
+        self.red_free[hid] = h.reduce_slots
+        self.free_map_hosts.add(hid)
+        self.free_red_hosts.add(hid)
+        self.all_hosts.append(hid)
+        self.host_rank[hid] = len(self.host_rank)  # ranks are never reused
+        self.n_hosts += 1
+        self.n_host_adds += 1
+        hook = getattr(self.algo, "host_added", None)
+        if hook is not None:
+            hook(hid)
+        for h2 in self._hooks_host_added:
+            h2(hid, now)
+        return hid
 
-        def add_host_sim(pod: int, kind: str, now: float) -> HostId:
-            nonlocal n_hosts, n_host_adds
-            h = self.cluster.add_host(pod)
-            hid = h.hid
-            map_free[hid] = h.map_slots
-            red_free[hid] = h.reduce_slots
-            free_map_hosts.add(hid)
-            free_red_hosts.add(hid)
-            all_hosts.append(hid)
-            host_rank[hid] = len(host_rank)   # ranks are never reused
-            n_hosts += 1
-            n_host_adds += 1
-            hook = getattr(self.algo, "host_added", None)
-            if hook is not None:
-                hook(hid)
-            return hid
-
-        def lose_host_sim(hid: HostId, now: float):
-            """Apply one host departure: kill+requeue its running tasks,
-            re-run maps whose outputs died with its disk, re-close shuffle
-            gates, and patch every index/offer structure."""
-            nonlocal n_hosts, n_host_losses, map_backlog, red_ready_backlog
-            nonlocal unfinished, work_lost_mb, n_reexec
-            dead = self.cluster.remove_host(hid)
-            departed.add(hid)
-            map_free.pop(hid, None)
-            red_free.pop(hid, None)
-            free_map_hosts.discard(hid)
-            free_red_hosts.discard(hid)
-            all_hosts.remove(hid)
-            n_hosts -= 1
-            n_host_losses += 1
-            algo = self.algo
-            hook = getattr(algo, "host_lost", None)
-            if hook is not None:
-                hook(hid)   # patches locality indexes; evacuates empty pods
-            notify_undone = getattr(algo, "job_maps_undone", None)
-            requeue_map = getattr(algo, "requeue_map_task", None)
-            requeue_red = getattr(algo, "requeue_reduce_task", None)
-            # (a) completed map outputs on the dead disk are lost; if the
-            # job still has reduce work ahead, those maps must re-run and
-            # the shuffle gate re-closes until they land
-            for jid in sorted(host_outputs.pop(hid, ())):
-                if reds_left[jid] == 0:
-                    continue    # every reduce already consumed its shuffle
-                entries = map_out[jid]
-                lost = [e for e in entries if e[0] == hid]
-                if not lost:    # pragma: no cover - index is add-only
-                    continue
-                if ckpt_on and dur.checkpoints_job(job_by_id[jid]):
-                    # outputs persisted to the pod object store survive the
-                    # disk: no re-run, no gate re-close; reduces started
-                    # from here on read them via the store (``departed``)
-                    dur.note_ckpt_save(
-                        sum(e[1] for e in lost) * job_by_id[jid].true_fp,
-                        len(lost))
-                    continue
-                map_out[jid] = [e for e in entries if e[0] != hid]
-                job = job_by_id[jid]
-                gate_was_open = maps_left[jid] == 0
-                for (_h, out_b, midx) in lost:
-                    done_pairs.discard((jid, midx))
-                    job.map_tasks[midx].state = TaskState.FAILED
-                    maps_left[jid] += 1
-                    unfinished += 1
-                    work_lost_mb += out_b * job.true_fp
-                    # a still-running speculative twin will re-produce the
-                    # output — no fresh attempt needed (same backups-gated
-                    # O(1) guard as the killed-running path below)
-                    if backups.get((jid, midx), 0) and any(
-                            isinstance(l.task, MapTask)
-                            and (l.task.job_id, l.task.index) == (jid, midx)
-                            for l in running.values()):
-                        continue
-                    requeue_map(remake_map(jid, midx))
-                    map_backlog += 1
-                    n_reexec += 1
-                if gate_was_open:
-                    red_ready_backlog -= reds_unassigned[jid]
-                    if notify_undone is not None:
-                        notify_undone(jid)
-            # (b) tasks running on the host are killed and re-executed
-            for tid, log in list(running.items()):
-                if log.host != hid:
-                    continue
-                del running[tid]
-                t = log.task
-                t.state = TaskState.FAILED
-                algo.task_finished(t)   # the attempt ended (killed) — keeps
-                # running_tasks honest for Fair/Capacity ordering
-                jid = t.job_id
-                if isinstance(t, MapTask):
-                    pair = (jid, t.index)
-                    if pair in done_pairs:
-                        continue    # a speculative twin already finished it
-                    # a concurrent attempt can only exist if a backup was
-                    # launched for this pair, so the O(running) twin scan
-                    # is gated on the O(1) backups counter
-                    if backups.get(pair, 0) and any(
-                            isinstance(l.task, MapTask)
-                            and (l.task.job_id, l.task.index) == pair
-                            for l in running.values()):
-                        continue    # a twin is still running elsewhere
-                    requeue_map(remake_map(jid, t.index))
-                    map_backlog += 1
-                    n_reexec += 1
-                else:
-                    requeue_red(remake_reduce(jid, t.index))
-                    reds_unassigned[jid] += 1
-                    n_reexec += 1
-                    if maps_left[jid] == 0:
-                        red_ready_backlog += 1
-                        if notify_maps_done is not None:
-                            notify_maps_done(jid)   # re-mark the new bucket
-            # (c) re-replication (PR 3): schedule a repair copy for every
-            # shard the dead disk held (delay + bandwidth budget live in
-            # the manager; completions fire as "rerep" events)
-            if rerep_on:
-                for rev in dur.host_lost(dead, now, shard_size.get):
-                    push(rev.time, "rerep", rev)
-
-        def make_observation(now: float, full: bool = False):
-            """The O(hosts) idle/busy fleet walk runs only for autoscale
-            ticks (``full=True``) of policies that declared
-            ``needs_idle_hosts`` — churn events (including lease-expiry
-            renewals, which read only backlog/fleet-size/cost, all O(1))
-            never pay it."""
-            idle: Tuple[HostId, ...] = ()
-            busy = 0
-            if full and getattr(elastic.autoscaler, "needs_idle_hosts",
-                                False):
-                cl = self.cluster
-                idle_list = []
-                for hid in all_hosts:
-                    h = cl.host(hid)
-                    if (map_free[hid] == h.map_slots
-                            and red_free[hid] == h.reduce_slots):
-                        idle_list.append(hid)
-                    else:
-                        busy += 1
-                idle = tuple(sorted(idle_list,
-                                    key=lambda h: (h.pod, h.index)))
-            return elastic.observe(
-                now, map_backlog=map_backlog,
-                red_backlog=red_ready_backlog, busy_hosts=busy,
-                idle_hosts=idle)
-
-        def apply_elastic(actions, now: float):
-            for hid, reason in actions.losses:
-                lose_host_sim(hid, now)
-                elastic.applied_loss(hid, now, reason)
-            for pod, kind in actions.adds:
-                hid = add_host_sim(pod, kind, now)
-                for fev in elastic.applied_add(hid, kind, now):
-                    push(fev.time, "churn", fev)
-            for fev in actions.followups:
-                push(fev.time, "churn", fev)
-
-        if elastic is not None:
-            for ev in elastic.startup(0.0):
-                push(ev.time, "churn", ev)
-            tick = getattr(elastic.autoscaler, "interval", None)
-            if tick:
-                push(tick, "scale", None)
-
-        # total outstanding work, to know when the heartbeat chain may stop
-        unfinished = sum(j.m + len(j.reduce_tasks) for j in self.jobs)
-        hb_scheduled = False
-
-        def finish_job(job: Job, now: float):
-            job_finish[job.job_id] = now
-            fp = job.true_fp
-            if cfg.fp_noise:
-                fp *= float(1.0 + cfg.fp_noise
-                            * self.rng.standard_normal())
-            self.algo.record_completion(job, max(fp, 0.0))
-
-        while events:
-            now, _, kind, payload = heapq.heappop(events)
-            if kind == "hb":
-                hb_scheduled = False
-                dispatch(now)
-                if unfinished > 0:
-                    push(now + cfg.heartbeat, "hb", None)
-                    hb_scheduled = True
+    def lose_host(self, hid: HostId, now: float):
+        """Apply one host departure: kill+requeue its running tasks,
+        re-run maps whose outputs died with its disk, re-close shuffle
+        gates, and patch every index/offer structure."""
+        dead = self.cluster.remove_host(hid)
+        self.departed.add(hid)
+        self.map_free.pop(hid, None)
+        self.red_free.pop(hid, None)
+        self.free_map_hosts.discard(hid)
+        self.free_red_hosts.discard(hid)
+        self.all_hosts.remove(hid)
+        self.n_hosts -= 1
+        self.n_host_losses += 1
+        algo = self.algo
+        hook = getattr(algo, "host_lost", None)
+        if hook is not None:
+            hook(hid)   # patches locality indexes; evacuates empty pods
+        notify_undone = getattr(algo, "job_maps_undone", None)
+        requeue_map = getattr(algo, "requeue_map_task", None)
+        requeue_red = getattr(algo, "requeue_reduce_task", None)
+        notify_maps_done = self.notify_maps_done
+        # (a) completed map outputs on the dead disk are lost; if the
+        # job still has reduce work ahead, those maps must re-run and
+        # the shuffle gate re-closes until they land
+        for jid in sorted(self.host_outputs.pop(hid, ())):
+            if self.reds_left[jid] == 0:
+                continue    # every reduce already consumed its shuffle
+            entries = self.map_out[jid]
+            lost = [e for e in entries if e[0] == hid]
+            if not lost:    # pragma: no cover - index is add-only
                 continue
-            if kind == "submit":
-                job = payload
-                job_submit[job.job_id] = now
-                submitted.add(job.job_id)
-                self.algo.submit(job)
-                map_backlog += job.m
-                if maps_left[job.job_id] == 0:  # map-less job: reduces ready
-                    red_ready_backlog += reds_unassigned[job.job_id]
-                    if notify_maps_done is not None:
-                        notify_maps_done(job.job_id)
-                if not hb_scheduled:
-                    push(now + cfg.heartbeat, "hb", None)
-                    hb_scheduled = True
-            elif kind == "map_done":
-                t = payload
-                log = running.pop(t.tid, None)
-                if log is None:
-                    continue    # killed by churn before completion
-                pair = (t.job_id, t.index)
-                if pair in done_pairs:
-                    # a speculative twin already finished this map task
-                    map_free[log.host] += 1
-                    free_map_hosts.add(log.host)
-                    self.algo.task_finished(t)
+            if self.ckpt_on and self.dur.checkpoints_job(self.job_by_id[jid]):
+                # outputs persisted to the pod object store survive the
+                # disk: no re-run, no gate re-close; reduces started
+                # from here on read them via the store (``departed``)
+                self.dur.note_ckpt_save(
+                    sum(e[1] for e in lost) * self.job_by_id[jid].true_fp,
+                    len(lost))
+                continue
+            self.map_out[jid] = [e for e in entries if e[0] != hid]
+            job = self.job_by_id[jid]
+            gate_was_open = self.maps_left[jid] == 0
+            for (_h, out_b, midx) in lost:
+                self.done_pairs.discard((jid, midx))
+                job.map_tasks[midx].state = TaskState.FAILED
+                self.maps_left[jid] += 1
+                self.unfinished += 1
+                self.work_lost_mb += out_b * job.true_fp
+                # a still-running speculative twin will re-produce the
+                # output — no fresh attempt needed (same backups-gated
+                # O(1) guard as the killed-running path below)
+                if self.backups.get((jid, midx), 0) and any(
+                        isinstance(ls.task, MapTask)
+                        and (ls.task.job_id, ls.task.index) == (jid, midx)
+                        for ls in self.running.values()):
                     continue
-                done_pairs.add(pair)
-                t.state = TaskState.DONE
-                log.finish = now
-                log.speculative = t.tid in spec_tids
-                task_logs.append(log)
-                map_durations.append(log.finish - log.start)
-                job = job_by_id[t.job_id]
-                canon = job.map_tasks[t.index]
-                if canon is not t:   # re-execution/twin: sync canonical
-                    canon.state = TaskState.DONE
-                map_out[job.job_id].append(
-                    (log.host, job.shard_bytes[t.index], t.index))
-                if ckpt_on and dur.checkpoints_job(job):
-                    # the synchronous store write this task already paid
-                    # for (start_map) lands with its completion
-                    dur.note_ckpt_write(
-                        job.shard_bytes[t.index] * job.true_fp)
-                outs = host_outputs.get(log.host)
-                if outs is None:
-                    outs = host_outputs[log.host] = set()
-                outs.add(t.job_id)
-                left = maps_left[t.job_id] - 1
-                maps_left[t.job_id] = left
-                unfinished -= 1
-                map_free[log.host] += 1
-                free_map_hosts.add(log.host)
-                self.algo.task_finished(t)
-                if left == 0:
-                    # shuffle gate opens (again, after churn re-runs)
-                    red_ready_backlog += reds_unassigned[t.job_id]
+                requeue_map(self._remake_map(jid, midx))
+                self.map_backlog += 1
+                self.n_reexec += 1
+            if gate_was_open:
+                self.red_ready_backlog -= self.reds_unassigned[jid]
+                if notify_undone is not None:
+                    notify_undone(jid)
+        # (b) tasks running on the host are killed and re-executed
+        for tid, log in list(self.running.items()):
+            if log.host != hid:
+                continue
+            del self.running[tid]
+            if self.fabric is not None:
+                fid = self._task_flows.pop(tid, None)
+                if fid is not None:
+                    self.fabric.cancel(fid, now)
+            t = log.task
+            t.state = TaskState.FAILED
+            algo.task_finished(t)   # the attempt ended (killed) — keeps
+            # running_tasks honest for Fair/Capacity ordering
+            jid = t.job_id
+            if isinstance(t, MapTask):
+                pair = (jid, t.index)
+                if pair in self.done_pairs:
+                    continue    # a speculative twin already finished it
+                # a concurrent attempt can only exist if a backup was
+                # launched for this pair, so the O(running) twin scan
+                # is gated on the O(1) backups counter
+                if self.backups.get(pair, 0) and any(
+                        isinstance(ls.task, MapTask)
+                        and (ls.task.job_id, ls.task.index) == pair
+                        for ls in self.running.values()):
+                    continue    # a twin is still running elsewhere
+                requeue_map(self._remake_map(jid, t.index))
+                self.map_backlog += 1
+                self.n_reexec += 1
+            else:
+                requeue_red(self._remake_reduce(jid, t.index))
+                self.reds_unassigned[jid] += 1
+                self.n_reexec += 1
+                if self.maps_left[jid] == 0:
+                    self.red_ready_backlog += 1
                     if notify_maps_done is not None:
-                        notify_maps_done(t.job_id)
-                    if (reds_left[t.job_id] == 0
-                            and t.job_id not in job_finish):
-                        # churn only: every reduce finished before a lost
-                        # map output was re-run; the re-run completes the job
-                        finish_job(job, now)
-            elif kind == "reduce_done":
-                t = payload
-                log = running.pop(t.tid, None)
-                if log is None:
-                    continue    # killed by churn before completion
-                t.state = TaskState.DONE
-                log.finish = now
-                task_logs.append(log)
-                job = job_by_id[t.job_id]
-                canon = job.reduce_tasks[t.index]
-                if canon is not t:
-                    canon.state = TaskState.DONE
-                reds_left[t.job_id] -= 1
-                unfinished -= 1
-                red_free[log.host] += 1
-                free_red_hosts.add(log.host)
-                self.algo.task_finished(t)
-                if reds_left[t.job_id] == 0 and maps_left[t.job_id] == 0:
-                    finish_job(job, now)
-            elif kind == "churn":
-                apply_elastic(elastic.on_churn(payload,
-                                               make_observation(now)), now)
-            elif kind == "scale":
-                if unfinished > 0:
-                    apply_elastic(
-                        elastic.autoscale(make_observation(now, full=True)),
-                        now)
-                    push(now + elastic.autoscaler.interval, "scale", None)
-            elif kind == "rerep":
-                # a repair copy completed: patch the replica map and give
-                # queued/re-executed maps their locality index entries back
-                restored = dur.apply(payload)
-                if restored is not None:
-                    tgt, pod_covered = restored
-                    hook = getattr(self.algo, "replica_restored", None)
-                    if hook is not None:
-                        hook(payload.shard_id, tgt, pod_covered)
-            dispatch(now)
-            if unfinished == 0:
-                # all work done: the rest of the heap is heartbeats and
-                # churn/autoscale ticks — nothing observable can happen,
-                # and stopping here keeps lease accounting at makespan
-                break
+                        notify_maps_done(jid)   # re-mark the new bucket
+        # (c) subsystem reactions (e.g. durability schedules re-replication
+        # repairs for every shard the dead disk held)
+        for h in self._hooks_host_lost:
+            h(dead, now)
 
-        wtt = (max(job_finish.values()) - min(job_submit.values())
+    def fleet_observation(self, now: float, full: bool = False):
+        """The O(hosts) idle/busy fleet walk runs only for autoscale
+        ticks (``full=True``) of policies that declared
+        ``needs_idle_hosts`` — churn events (including lease-expiry
+        renewals, which read only backlog/fleet-size/cost, all O(1))
+        never pay it."""
+        elastic = self.elastic
+        idle: Tuple[HostId, ...] = ()
+        busy = 0
+        if full and getattr(elastic.autoscaler, "needs_idle_hosts", False):
+            cl = self.cluster
+            idle_list = []
+            for hid in self.all_hosts:
+                h = cl.host(hid)
+                if (self.map_free[hid] == h.map_slots
+                        and self.red_free[hid] == h.reduce_slots):
+                    idle_list.append(hid)
+                else:
+                    busy += 1
+            idle = tuple(sorted(idle_list,
+                                key=lambda h: (h.pod, h.index)))
+        return elastic.observe(
+            now, map_backlog=self.map_backlog,
+            red_backlog=self.red_ready_backlog, busy_hosts=busy,
+            idle_hosts=idle)
+
+    # ----------------------------------------------------- event handlers --
+    def _on_heartbeat(self, now: float, _payload):
+        # self-stepping (post_step=False): dispatch must run before the
+        # heartbeat is re-armed so same-instant completions keep their
+        # historical sequence numbers
+        self.hb_scheduled = False
+        for h in self._hooks_tick:
+            h(now)
+        self._dispatch_fn(now)
+        if self.unfinished > 0:
+            self.kernel.push(now + self.cfg.heartbeat, "hb", None)
+            self.hb_scheduled = True
+
+    def _on_submit(self, now: float, job: Job):
+        self.job_submit[job.job_id] = now
+        self.submitted.add(job.job_id)
+        self.algo.submit(job)
+        self.map_backlog += job.m
+        if self.maps_left[job.job_id] == 0:  # map-less job: reduces ready
+            self.red_ready_backlog += self.reds_unassigned[job.job_id]
+            if self.notify_maps_done is not None:
+                self.notify_maps_done(job.job_id)
+        if not self.hb_scheduled:
+            self.kernel.push(now + self.cfg.heartbeat, "hb", None)
+            self.hb_scheduled = True
+
+    def _on_map_done(self, now: float, t: MapTask):
+        log = self.running.pop(t.tid, None)
+        if log is None:
+            return True     # killed by churn: stale event, no dispatch
+        pair = (t.job_id, t.index)
+        if pair in self.done_pairs:
+            # a speculative twin already finished this map task; the freed
+            # slot waits for the next real event (returning True skips the
+            # post-step, matching the old loop's ``continue``)
+            self.map_free[log.host] += 1
+            self.free_map_hosts.add(log.host)
+            self.algo.task_finished(t)
+            return True
+        self.done_pairs.add(pair)
+        t.state = TaskState.DONE
+        log.finish = now
+        log.speculative = t.tid in self.spec_tids
+        self.task_logs.append(log)
+        self.map_durations.append(log.finish - log.start)
+        job = self.job_by_id[t.job_id]
+        canon = job.map_tasks[t.index]
+        if canon is not t:   # re-execution/twin: sync canonical
+            canon.state = TaskState.DONE
+        self.map_out[job.job_id].append(
+            (log.host, job.shard_bytes[t.index], t.index))
+        outs = self.host_outputs.get(log.host)
+        if outs is None:
+            outs = self.host_outputs[log.host] = set()
+        outs.add(t.job_id)
+        left = self.maps_left[t.job_id] - 1
+        self.maps_left[t.job_id] = left
+        self.unfinished -= 1
+        self.map_free[log.host] += 1
+        self.free_map_hosts.add(log.host)
+        self.algo.task_finished(t)
+        for h in self._hooks_task_finish:
+            h(log, now)
+        if left == 0:
+            # shuffle gate opens (again, after churn re-runs)
+            self.red_ready_backlog += self.reds_unassigned[t.job_id]
+            if self.notify_maps_done is not None:
+                self.notify_maps_done(t.job_id)
+            if (self.reds_left[t.job_id] == 0
+                    and t.job_id not in self.job_finish):
+                # churn only: every reduce finished before a lost
+                # map output was re-run; the re-run completes the job
+                self._finish_job(job, now)
+
+    def _on_reduce_done(self, now: float, t: ReduceTask):
+        log = self.running.pop(t.tid, None)
+        if log is None:
+            return True     # killed by churn: stale event, no dispatch
+        t.state = TaskState.DONE
+        log.finish = now
+        self.task_logs.append(log)
+        job = self.job_by_id[t.job_id]
+        canon = job.reduce_tasks[t.index]
+        if canon is not t:
+            canon.state = TaskState.DONE
+        self.reds_left[t.job_id] -= 1
+        self.unfinished -= 1
+        self.red_free[log.host] += 1
+        self.free_red_hosts.add(log.host)
+        self.algo.task_finished(t)
+        for h in self._hooks_task_finish:
+            h(log, now)
+        if self.reds_left[t.job_id] == 0 and self.maps_left[t.job_id] == 0:
+            self._finish_job(job, now)
+
+    def _finish_job(self, job: Job, now: float):
+        self.job_finish[job.job_id] = now
+        fp = job.true_fp
+        if self.cfg.fp_noise:
+            fp *= float(1.0 + self.cfg.fp_noise
+                        * self.rng.standard_normal())
+        self.algo.record_completion(job, max(fp, 0.0))
+
+    # ------------------------------------------------------------ finalize --
+    def _finalize(self, end: float) -> SimResult:
+        job_finish = self.job_finish
+        wtt = (max(job_finish.values()) - min(self.job_submit.values())
                if job_finish else 0.0)
         res = SimResult(
             algorithm=getattr(self.algo, "name", type(self.algo).__name__),
-            task_logs=task_logs, job_submit=job_submit,
-            job_finish=job_finish, int_bytes=int_bytes, pod_bytes=pod_bytes,
-            wtt=wtt, jobs=self.jobs,
-            work_lost_mb=work_lost_mb, n_reexec=n_reexec,
-            n_host_adds=n_host_adds, n_host_losses=n_host_losses)
-        if elastic is not None:
-            summary = elastic.finalize(now)
+            task_logs=self.task_logs, job_submit=self.job_submit,
+            job_finish=job_finish, int_bytes=self.int_bytes,
+            pod_bytes=self.pod_bytes, wtt=wtt, jobs=self.jobs,
+            work_lost_mb=self.work_lost_mb, n_reexec=self.n_reexec,
+            n_host_adds=self.n_host_adds, n_host_losses=self.n_host_losses)
+        if self.elastic is not None:
+            summary = self.elastic.finalize(end)
             res.elastic = summary
             res.vps_hours = summary.vps_hours
             res.cost_dollars = summary.cost
@@ -790,4 +966,10 @@ class Simulator:
                 res.ckpt_mb_written = ds.ckpt_mb_written
                 res.ckpt_saved_mb = ds.ckpt_saved_mb
                 res.storage_dollars = ds.storage_dollars
+        if self.fabric is not None:
+            fs = self.fabric.finalize(end)
+            res.fabric = fs
+            res.fabric_mb = fs.mb_total
+            res.fabric_stall_s = fs.stall_s
+            res.wan_util = fs.link_util.get("wan", 0.0)
         return res

@@ -51,6 +51,10 @@ class Summary:
     #: twins) — the rate re-replication exists to raise. None when the run
     #: had no re-executed maps.
     reexec_map_locality: Optional[float] = None
+    # -- fabric outputs (PR 4; zero for per-stream runs) ---------------------
+    fabric_mb: float = 0.0        # MB drained through the shared fabric
+    fabric_stall_s: float = 0.0   # transfer time lost to link contention
+    wan_util: float = 0.0         # mean shared-WAN utilization
 
 
 def _bench_of(log) -> str:
@@ -128,7 +132,9 @@ def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
         ckpt_mb_written=res.ckpt_mb_written,
         ckpt_saved_mb=res.ckpt_saved_mb,
         storage_dollars=res.storage_dollars,
-        reexec_map_locality=reexec_loc)
+        reexec_map_locality=reexec_loc,
+        fabric_mb=res.fabric_mb, fabric_stall_s=res.fabric_stall_s,
+        wan_util=res.wan_util)
 
 
 def normalized_jtt(summaries: List[Summary], reference: str = "joss-t"

@@ -1,0 +1,277 @@
+"""Contention-aware network fabric for the cluster simulator (PR 4).
+
+The per-stream timing model (PRs 0-3) charges every transfer a fixed
+rate (``SimConfig.pod_bw``/``dcn_bw``), so saving inter-pod bytes never
+actually makes jobs faster — the paper's central feedback loop (lower
+INT => less WAN queueing => lower JTT/WTT) was missing. This module
+closes the loop: transfers become *flows* draining through shared links
+with **max-min fair-share** bandwidth allocation, so completion times
+respond to load.
+
+Topology (capacities from ``core.topology.LinkCapacities``):
+
+  * one **uplink** and one **downlink** per pod — everything the pod's
+    hosts (and its object store) send into / receive from the fabric;
+  * one shared **WAN** link crossed by every inter-pod byte.
+
+A flow from pod *a* to pod *b* traverses ``up(a) [+ wan if a != b] +
+down(b)``; a flow with no source pod (external durable store) traverses
+``wan + down(b)``. Host-local disk reads never touch the fabric. Every
+flow additionally carries a per-flow rate cap — the per-stream rate the
+old model charged (``pod_bw``/``dcn_bw``/checkpoint/repair bandwidth) —
+so an *uncontended* fabric reproduces per-stream timing and contention
+only ever slows transfers down, never speeds them up.
+
+Flow kinds drained through the fabric: ``map_read`` (off-host map input),
+``shuffle`` (reduce fetches), ``ckpt_write``/``ckpt_read`` (pod object
+store) and ``rerep`` (durability repair copies).
+
+Mechanics: the fabric is a :class:`repro.sim.engine.Subsystem` owning
+the ``flow`` event kind. Whenever the flow set changes, it settles
+elapsed progress at the current rates, recomputes the max-min allocation
+(progressive filling — repeatedly fix the flows of the most-constrained
+link at its fair share; per-flow caps enter as single-user virtual
+links), and schedules the next completion under an epoch counter so
+stale events are ignored. Everything is deterministic: flows are visited
+in creation order and link keys have a total order, so per-seed runs
+produce identical flow completion order (claim-checked in
+``benchmarks/bench_fabric.py`` and ``tests/test_fabric.py``).
+
+Accounting: per-link utilization integrals (MB actually carried vs
+capacity x horizon) and per-flow *stall* — time lost versus the flow's
+uncontended time ``mb / cap`` — aggregated per kind into
+:class:`FabricSummary` and surfaced as ``SimResult.fabric``,
+``fabric_stall_s``, ``fabric_mb`` and ``wan_util``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.topology import LinkCapacities, VirtualCluster
+from repro.sim.engine import EventKernel, Subsystem
+
+#: a flow whose remaining volume drops below this (1 byte) is complete
+EPS_MB = 1e-6
+
+# link-key type tags (tuples compare lexicographically, giving the
+# deterministic total order the progressive filling relies on)
+UP, DOWN, WAN, FCAP = "up", "down", "wan", "~cap"
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Enables the fabric for a run (``SimConfig.fabric``).
+
+    ``links`` overrides the cluster's ``LinkCapacities`` (handy for
+    oversubscription sweeps without rebuilding the cluster/workload).
+    ``completion_log`` records one entry per finished flow for the
+    determinism claim checks — disable it on very large sweeps (millions
+    of flows) where nothing reads it.
+    """
+
+    links: Optional[LinkCapacities] = None
+    completion_log: bool = True
+
+
+@dataclasses.dataclass
+class _Flow:
+    fid: int
+    mb: float
+    rem: float
+    path: Tuple[Tuple[str, int], ...]   # real links only
+    cap: float                          # per-flow rate cap (MB/s)
+    kind: str
+    t0: float
+    done: Callable[[float], None]
+    rate: float = 0.0
+
+
+@dataclasses.dataclass
+class FabricSummary:
+    """Fabric-side accounting for one run (surfaced on ``SimResult``)."""
+
+    n_flows: int = 0                 # completed flows
+    n_cancelled: int = 0             # flows killed mid-transfer (churn)
+    mb_total: float = 0.0            # MB fully drained through the fabric
+    stall_s: float = 0.0             # sum over flows of (actual - mb/cap)
+    #: kind -> [n_flows, mb, stall_s]
+    by_kind: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
+    #: "up0"/"down1"/"wan" -> mean utilization over the run horizon
+    link_util: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: (time, kind, mb) per completion, in completion order — the
+    #: determinism claim checks compare this across repeated runs
+    #: (``FabricConfig.completion_log=False`` leaves it empty).
+    #: Under speculation + checkpointing, ``by_kind["ckpt_write"]`` may
+    #: exceed ``SimResult.ckpt_mb_written``: a losing speculative twin's
+    #: store write physically drains through the fabric, but the store
+    #: bills the winning attempt only (PR 3 semantics, bit-locked).
+    completion_log: List[Tuple[float, str, float]] = dataclasses.field(
+        default_factory=list)
+
+
+class NetworkFabric(Subsystem):
+    """Max-min fair-share flow accounting over the cluster's links."""
+
+    def __init__(self, cluster: VirtualCluster,
+                 cfg: Optional[FabricConfig] = None):
+        self.cluster = cluster
+        self.cfg = cfg or FabricConfig()
+        self.links: LinkCapacities = self.cfg.links or cluster.links
+        self._flows: Dict[int, _Flow] = {}
+        self._fids = itertools.count()
+        self._epoch = 0
+        self._last = 0.0
+        self._caps: Dict[Tuple[str, int], float] = {}
+        self._carried: Dict[Tuple[str, int], float] = {}  # MB integral
+        self._load: Dict[Tuple[str, int], float] = {}     # current sum rate
+        self.summary = FabricSummary()
+
+    # -- subsystem protocol ----------------------------------------------------
+    def attach(self, sim, kernel: EventKernel) -> None:
+        super().attach(sim, kernel)
+        # self-stepping: a flow transition frees no slots and queues no
+        # work (task-visible transitions arrive as map_done/reduce_done/
+        # rerep events, which do run the post-step), so dispatching here
+        # would only drift the offer-shuffle RNG vs per-stream mode
+        kernel.register("flow", self._on_flow, post_step=False)
+        for p in self.cluster.pods:
+            self._caps[(UP, p.index)] = self.links.pod_up
+            self._caps[(DOWN, p.index)] = self.links.pod_down
+        self._caps[(WAN, 0)] = self.links.wan
+        for k in self._caps:
+            self._carried[k] = 0.0
+            self._load[k] = 0.0
+
+    # -- flow API ----------------------------------------------------------------
+    def path(self, src_pod: Optional[int],
+             dst_pod: int) -> Tuple[Tuple[str, int], ...]:
+        """Link path of a transfer into ``dst_pod``. ``src_pod=None``
+        means the bytes enter from outside the cluster (external durable
+        store): they cross the WAN but no pod uplink."""
+        if src_pod is None:
+            return ((WAN, 0), (DOWN, dst_pod))
+        if src_pod == dst_pod:
+            return ((UP, src_pod), (DOWN, dst_pod))
+        return ((UP, src_pod), (WAN, 0), (DOWN, dst_pod))
+
+    def start_flow(self, now: float, mb: float, src_pod: Optional[int],
+                   dst_pod: int, cap: float, kind: str,
+                   done: Callable[[float], None]) -> int:
+        """Begin draining ``mb`` from ``src_pod`` to ``dst_pod``; ``done``
+        fires (via the kernel, deterministic order) on completion.
+        Returns the flow id (pass to :meth:`cancel` to kill it)."""
+        if mb <= EPS_MB:   # nothing to move: complete "immediately"
+            self.kernel.call_at(now, done)
+            return -1
+        self._settle(now)
+        fid = next(self._fids)
+        self._flows[fid] = _Flow(fid, mb, mb, self.path(src_pod, dst_pod),
+                                 cap, kind, now, done)
+        self._reschedule(now)
+        return fid
+
+    def cancel(self, fid: int, now: float) -> None:
+        """Kill an in-flight flow (its task died with a host). Bytes
+        already moved stay carried; the callback never fires."""
+        if fid not in self._flows:
+            return
+        self._settle(now)
+        del self._flows[fid]
+        self.summary.n_cancelled += 1
+        self._reschedule(now)
+
+    # -- mechanics ----------------------------------------------------------------
+    def _settle(self, now: float) -> None:
+        """Advance every flow by the elapsed interval at the rates fixed
+        by the last recompute, and accrue the link-carried integrals."""
+        dt = now - self._last
+        if dt > 0.0:
+            for f in self._flows.values():
+                f.rem -= f.rate * dt
+            for k, load in self._load.items():
+                if load:
+                    self._carried[k] += load * dt
+            self._last = now
+
+    def _recompute(self) -> None:
+        """Max-min fair allocation by progressive filling. Per-flow caps
+        are single-user virtual links, so one uniform loop handles both;
+        link keys and creation-ordered flows keep it deterministic."""
+        flows = self._flows
+        rem_cap: Dict[Tuple[str, int], float] = dict(self._caps)
+        users: Dict[Tuple[str, int], List[int]] = {k: [] for k in rem_cap}
+        for fid, f in flows.items():
+            rem_cap[(FCAP, fid)] = f.cap
+            users[(FCAP, fid)] = [fid]
+            for link in f.path:
+                users[link].append(fid)
+        unfixed = dict.fromkeys(flows)
+        while unfixed:
+            best_share, best_link = None, None
+            for link, members in users.items():
+                n = sum(1 for fid in members if fid in unfixed)
+                if n == 0:
+                    continue
+                share = rem_cap[link] / n
+                if best_share is None or share < best_share:
+                    best_share, best_link = share, link
+            for fid in users[best_link]:
+                if fid not in unfixed:
+                    continue
+                f = flows[fid]
+                f.rate = best_share
+                del unfixed[fid]
+                rem_cap[(FCAP, fid)] -= best_share
+                for link in f.path:
+                    rem_cap[link] = max(0.0, rem_cap[link] - best_share)
+        for k in self._load:
+            self._load[k] = 0.0
+        for f in flows.values():
+            for link in f.path:
+                self._load[link] += f.rate
+
+    def _reschedule(self, now: float) -> None:
+        """Recompute rates and (re)arm the next completion event. The
+        epoch counter invalidates any previously armed event."""
+        self._epoch += 1
+        if not self._flows:
+            return
+        self._recompute()
+        t_next = min(now + f.rem / f.rate for f in self._flows.values())
+        self.kernel.push(t_next, "flow", self._epoch)
+
+    def _on_flow(self, now: float, epoch: int) -> None:
+        if epoch != self._epoch:
+            return   # superseded by a later flow-set change
+        self._settle(now)
+        finished = [f for f in self._flows.values() if f.rem <= EPS_MB]
+        for f in finished:
+            del self._flows[f.fid]
+            s = self.summary
+            s.n_flows += 1
+            s.mb_total += f.mb
+            stall = max(0.0, (now - f.t0) - f.mb / f.cap)
+            s.stall_s += stall
+            agg = s.by_kind.setdefault(f.kind, [0, 0.0, 0.0])
+            agg[0] += 1
+            agg[1] += f.mb
+            agg[2] += stall
+            if self.cfg.completion_log:
+                s.completion_log.append((now, f.kind, f.mb))
+        self._reschedule(now)
+        # callbacks fire after the surviving flow set is re-armed; they
+        # may start new flows (each re-settles at dt=0 and re-arms)
+        for f in finished:
+            f.done(now)
+
+    # -- accounting ----------------------------------------------------------------
+    def finalize(self, horizon: float) -> FabricSummary:
+        self._settle(max(horizon, self._last))
+        for (tag, idx), mb in sorted(self._carried.items()):
+            name = WAN if tag == WAN else f"{tag}{idx}"
+            cap = self._caps[(tag, idx)]
+            self.summary.link_util[name] = (
+                mb / (cap * horizon) if horizon > 0 else 0.0)
+        return self.summary

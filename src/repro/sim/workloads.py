@@ -15,7 +15,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.job import Job
-from repro.core.topology import HostId, VirtualCluster
+from repro.core.topology import HostId, LinkCapacities, VirtualCluster
 
 MB = 1.0  # all byte quantities in the sim are in MB
 BLOCK_MB = 128.0
@@ -39,10 +39,47 @@ PAPER_BENCHMARKS: Dict[str, Benchmark] = {
 
 
 def make_cluster(hosts_per_pod: Sequence[int] = (15, 15), *,
-                 map_slots: int = 1, reduce_slots: int = 1) -> VirtualCluster:
-    """Paper testbed: 2 datacenters (Dallas/Atlanta) x 15 VPS, 1+1 slots."""
+                 map_slots: int = 1, reduce_slots: int = 1,
+                 links: Optional[LinkCapacities] = None) -> VirtualCluster:
+    """Paper testbed: 2 datacenters (Dallas/Atlanta) x 15 VPS, 1+1 slots.
+    ``links`` sets the fabric capacities for contention-aware runs."""
     return VirtualCluster(hosts_per_pod, map_slots=map_slots,
-                          reduce_slots=reduce_slots)
+                          reduce_slots=reduce_slots, links=links)
+
+
+def fabric_links(hosts_per_pod: Sequence[int], *, wan_oversub: float = 1.0,
+                 pod_bw: float = 110.0, dcn_bw: float = 35.0
+                 ) -> LinkCapacities:
+    """Fabric capacities for an oversubscription sweep (PR 4).
+
+    Pod uplinks/downlinks are provisioned for every host of the largest
+    pod running a map read AND a shuffle fetch at the intra-pod rate
+    simultaneously (2 streams/host — the 1+1 slot shape — so pod links
+    are never the experiment's bottleneck), while the shared WAN carries
+    the fleet's peak inter-pod demand divided by ``wan_oversub``:
+
+      * ``wan_oversub=1`` — congestion-free: every concurrent off-pod
+        stream can run at ``dcn_bw``, reproducing per-stream timing;
+      * ``wan_oversub=k`` — the WAN serves only 1/k of peak inter-pod
+        demand, the classic oversubscribed-core datacenter shape. The
+        more INT bytes an algorithm pushes, the more its transfers queue.
+    """
+    n = max(hosts_per_pod)
+    total = sum(hosts_per_pod)
+    return LinkCapacities(pod_up=2 * n * pod_bw, pod_down=2 * n * pod_bw,
+                          wan=2 * total * dcn_bw / wan_oversub)
+
+
+def fabric_scenarios(hosts_per_pod: Sequence[int]
+                     ) -> Dict[str, LinkCapacities]:
+    """Named WAN-oversubscription levels for fabric runs: the sweep the
+    ``bench_fabric`` claim checks run over (JoSS's WTT margin over the
+    baselines must *widen* as the shared WAN gets scarcer)."""
+    return {
+        "uncontended": fabric_links(hosts_per_pod, wan_oversub=1.0),
+        "oversub8": fabric_links(hosts_per_pod, wan_oversub=8.0),
+        "oversub24": fabric_links(hosts_per_pod, wan_oversub=24.0),
+    }
 
 
 def _place_blocks(cluster: VirtualCluster, job_tag: str, n_blocks: int,
@@ -171,6 +208,16 @@ def durability_scenarios() -> Dict[str, Optional[dict]]:
         "ckpt": dict(ckpt),
         "full": dict(**rerep, **ckpt),
     }
+
+
+def replication_scenarios() -> Dict[str, int]:
+    """Replication factors for the durability-vs-storage sweep (PR 4
+    satellite). The paper runs 1 replica per block; HDFS defaults to 3.
+    More replicas mean fewer shards orphaned per departing disk (less
+    repair traffic on the fabric, better retry locality) at the price of
+    replicated storage — ``bench_elastic`` sweeps these against the PR 3
+    re-replication pipeline."""
+    return {"r1": 1, "r2": 2, "r3": 3}
 
 
 def profiling_prelude(cluster: VirtualCluster, seed: int = 3) -> List[Job]:

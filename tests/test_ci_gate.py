@@ -69,18 +69,75 @@ def test_compare_fails_on_2x_slowdown(gate, stored):
     assert all("regression" in f for f in failures)
 
 
-def test_main_trips_on_injected_slowdown(gate, stored, monkeypatch):
-    """End-to-end through main(): stubbed measurements echo the stored
-    trajectory, so --slowdown 1 passes and --slowdown 2 must exit 1."""
+def _stub_measurements(gate, monkeypatch):
+    """Echo the stored trajectories instead of measuring (the test
+    shouldn't pay wall-clock; ``scripts/ci.sh`` runs the real thing)."""
     monkeypatch.setattr(
         gate, "_fresh_assign_us",
         lambda entry: 1e6 / entry["new_tasks_per_s"])
     monkeypatch.setattr(
         gate, "_fresh_events_per_s",
         lambda entry, reps=2: entry["new_events_per_s"])
+    monkeypatch.setattr(gate, "_fresh_wtt", lambda point: point["wtt"])
+
+
+def test_main_trips_on_injected_slowdown(gate, stored, monkeypatch):
+    """End-to-end through main(): stubbed measurements echo the stored
+    trajectory, so --slowdown 1 passes and --slowdown 2 must exit 1."""
+    _stub_measurements(gate, monkeypatch)
     assert gate.main([]) == 0
     assert gate.main(["--slowdown", "2.0"]) == 1
 
 
 def test_main_fails_cleanly_without_trajectory(gate, tmp_path):
     assert gate.main(["--json", str(tmp_path / "missing.json")]) == 1
+
+
+# ------------------------------------------- elastic-WTT gate (PR 4) --
+@pytest.fixture(scope="module")
+def stored_elastic():
+    with open(os.path.join(_ROOT, "BENCH_elastic.json")) as f:
+        return json.load(f)
+
+
+def test_elastic_trajectory_covers_two_scenario_points(stored_elastic):
+    """ROADMAP item: gate elastic-scenario WTT at two (scenario, fleet)
+    points once BENCH history exists."""
+    keys = {(p["scenario"], tuple(p["fleet"]))
+            for p in stored_elastic["points"]}
+    assert len(keys) >= 2
+    assert all(p["wtt"] > 0 for p in stored_elastic["points"])
+
+
+def test_compare_elastic_passes_on_identical_wtt(gate, stored_elastic):
+    fresh = {(p["scenario"], p["algo"]): p["wtt"]
+             for p in stored_elastic["points"]}
+    assert gate.compare_elastic(stored_elastic, fresh, 0.001) == []
+
+
+def test_compare_elastic_fails_on_behaviour_drift(gate, stored_elastic):
+    fresh = {(p["scenario"], p["algo"]): p["wtt"] * 1.01
+             for p in stored_elastic["points"]}
+    failures = gate.compare_elastic(stored_elastic, fresh, 0.001)
+    assert len(failures) == len(stored_elastic["points"])
+    assert all("behaviour changed" in f for f in failures)
+
+
+def test_main_trips_on_wtt_perturbation(gate, monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--wtt-perturb", "1.01"]) == 1
+
+
+def test_main_fails_cleanly_without_elastic_trajectory(gate, tmp_path,
+                                                       monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--elastic-json",
+                      str(tmp_path / "missing.json")]) == 1
+
+
+def test_elastic_gate_reproduces_stored_wtt_live(gate, stored_elastic):
+    """One real re-simulation (not stubbed): the committed WTT must be
+    exactly reproducible — the simulation is deterministic per seed."""
+    point = stored_elastic["points"][0]
+    assert gate._fresh_wtt(point) == pytest.approx(point["wtt"],
+                                                   rel=1e-12)
