@@ -1,4 +1,5 @@
-"""Beyond-paper: the contention-aware network fabric (PR 4 tentpole).
+"""Beyond-paper: the contention-aware network fabric (PR 4 tentpole,
+PR 5 fast path).
 
 The paper's headline claim is lower *network overhead* (INT bytes), but
 a fixed per-stream timing model never lets that saving buy anything —
@@ -11,21 +12,30 @@ the longer its transfers queue. This bench shows the paper's story
 FIFO/Fair/Capacity by a **widening** WTT margin, precisely because their
 INT is a fraction of the baselines'.
 
-Sweep: burst-submitted small workload on 2x8 hosts under the
-``repro.sim.workloads.fabric_scenarios`` oversubscription levels
-(pod links provisioned for every host streaming at once, WAN carrying
-1/k of peak inter-pod demand), all five algorithms.
+Two sweeps:
+
+  * **contention** — burst-submitted small workload on 2x8 hosts under
+    the ``repro.sim.workloads.fabric_scenarios`` oversubscription levels
+    (pod links provisioned for every host streaming at once, WAN
+    carrying 1/k of peak inter-pod demand), all five algorithms;
+  * **scale** (PR 5) — contended 4x256- and 4x1024-host end-to-end
+    points (all five algorithms, class-aggregated allocator) plus a
+    flows/s microbench, fast vs the retained per-flow reference
+    (``repro.sim.network_reference``) under the same driver. Full runs
+    write the trajectory to ``BENCH_fabric.json`` for the CI gate
+    (``scripts/check_bench_regression.py``).
 
 Claim checks:
-  * **bit-identity** — fabric-disabled runs of the refactored engine
-    reproduce the committed PR 3 golden trajectories
-    (``tests/golden/sim_trajectories.json``) hash-for-hash: all five
-    algorithms, churn and durability both off and on, speculation
-    included (25 cases);
+  * **bit-identity (engine)** — fabric-disabled runs of the refactored
+    engine reproduce the committed PR 3 golden trajectories
+    (``tests/golden/sim_trajectories.json``) hash-for-hash (25 cases);
+  * **bit-identity (allocator)** — the class-aggregated fast path and
+    the per-flow reference produce *bit-identical* flow completion logs
+    (order, times, kinds) and identical WTT/INT on every cell of the
+    contention sweep and at the largest scale point;
   * **per-stream parity** — on the congestion-free fabric
     (``wan_oversub=1``), every algorithm's WTT is within 2% of its
-    per-stream WTT (the flow model's per-flow caps reproduce per-stream
-    timing when links are plentiful);
+    per-stream WTT;
   * **INT ordering** — at every contention level both JoSS variants
     move strictly fewer inter-pod bytes than every baseline (the
     paper's Fig. 12 ranking);
@@ -33,28 +43,51 @@ Claim checks:
     positive at every level and strictly increases with
     oversubscription, checked across >= 3 levels (>= 2 oversubscribed);
   * **determinism** — repeating a contended run reproduces the fabric's
-    flow completion log (order, times, kinds) exactly.
+    flow completion log (order, times, kinds) exactly;
+  * **the fast path is fast** — contended events/s with the
+    class-aggregated allocator beat the reference by >= 5x at the
+    largest scale point (>= 1.5x at the ~16x-smaller quick point,
+    where the reference's O(flows) scans hurt far less).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
 
 from benchmarks.common import table
 from repro.core.joss import make_algorithm
 from repro.sim import golden
 from repro.sim.cluster_sim import SimConfig, Simulator
-from repro.sim.network import FabricConfig
-from repro.sim.workloads import (fabric_scenarios, make_cluster,
-                                 profiling_prelude, small_workload)
+from repro.sim.engine import EventKernel
+from repro.sim.network import FabricConfig, make_fabric
+from repro.sim.workloads import (fabric_links, fabric_scenarios,
+                                 make_cluster, profiling_prelude,
+                                 small_workload)
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_fabric.json")
 
 ALGOS = ("joss-t", "joss-j", "fifo", "fair", "capacity")
 JOSS = ("joss-t", "joss-j")
 BASELINES = ("fifo", "fair", "capacity")
 HOSTS_PER_POD = (8, 8)
 
+#: the acceptance envelope for the class-aggregated allocator: contended
+#: events/s at the largest scale point must beat the per-flow reference
+#: by this factor (the CI gate re-checks the committed trajectory)
+MIN_SCALE_SPEEDUP = 5.0
+#: the CI-sized quick point is ~16x smaller, so the reference's O(flows)
+#: scans hurt it far less there — the quick claim is a smoke bound
+MIN_QUICK_SPEEDUP = 1.5
+
+#: WAN oversubscription of the scale sweep (the contended regime)
+SCALE_OVERSUB = 8.0
+
 
 def _run(name: str, links=None, *, n_jobs: int = 16, seed: int = 11,
-         burst: bool = True):
+         burst: bool = True, allocator: str = "fast"):
     """Small workload on an (8, 8) fleet. ``burst`` submits every job at
     t=0 so the fleet saturates and transfer queueing — not arrival
     slack — decides WTT (the contention sweep); ``burst=False`` keeps
@@ -70,11 +103,72 @@ def _run(name: str, links=None, *, n_jobs: int = 16, seed: int = 11,
     if hasattr(algo, "registry"):
         for j in profiling_prelude(cluster):
             algo.registry.record(j, j.true_fp)
-    cfg = SimConfig(fabric=FabricConfig() if links is not None else None)
+    cfg = SimConfig(fabric=(FabricConfig(allocator=allocator)
+                            if links is not None else None))
     res = Simulator(cluster, algo, jobs, config=cfg, seed=seed).run()
     assert len(res.job_finish) == n_jobs, \
         f"{name}: {len(res.job_finish)}/{n_jobs} jobs finished"
     return res
+
+
+def _scale_run(name: str, hosts_per_pod: Tuple[int, ...], n_jobs: int,
+               *, allocator: str = "fast", seed: int = 11,
+               wan_oversub: float = SCALE_OVERSUB, map_slots: int = 2,
+               log_limit: Optional[int] = 0):
+    """One contended end-to-end point: burst small workload on a big
+    dual-slot fleet (two concurrent streams per host — the shape the
+    ``fabric_links`` pod capacities are provisioned for, and the
+    dispatch sweep's 4096x2-slot precedent) with an oversubscribed WAN.
+    Returns ``(result, events/s)`` where events counts the
+    workload-determined part (submits + task completions), as in
+    ``bench_dispatch`` — both allocators simulate the identical
+    trajectory, so the ratio is pure allocator cost. ``log_limit=0``
+    keeps the sweep from holding hundreds of thousands of completion
+    tuples (``FabricConfig.log_limit``)."""
+    cluster = make_cluster(hosts_per_pod,
+                           links=fabric_links(hosts_per_pod,
+                                              wan_oversub=wan_oversub),
+                           map_slots=map_slots, reduce_slots=map_slots)
+    jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
+    for j in jobs:
+        j.submit_time = 0.0
+    algo = make_algorithm(name, cluster)
+    if hasattr(algo, "registry"):
+        for j in profiling_prelude(cluster):
+            algo.registry.record(j, j.true_fp)
+    cfg = SimConfig(fabric=FabricConfig(allocator=allocator,
+                                        log_limit=log_limit))
+    n_events = n_jobs + sum(j.m + len(j.reduce_tasks) for j in jobs)
+    t0 = time.perf_counter()
+    res = Simulator(cluster, algo, jobs, config=cfg, seed=seed).run()
+    dt = time.perf_counter() - t0
+    assert len(res.job_finish) == n_jobs, \
+        f"{name}@{sum(hosts_per_pod)}: {len(res.job_finish)}/{n_jobs}"
+    return res, n_events / dt
+
+
+def _micro_rate(n_flows: int, allocator: str) -> float:
+    """Bare-allocator flows/s: start ``n_flows`` flows across a 4-pod
+    topology at t=0 (every start recomputes the allocation) and drain
+    them through the kernel (every completion recomputes again)."""
+    class _Sim:
+        pass
+    hpp = (2, 2, 2, 2)
+    cluster = make_cluster(hpp, links=fabric_links(hpp, wan_oversub=8.0))
+    fab = make_fabric(cluster, FabricConfig(allocator=allocator,
+                                            log_limit=0))
+    k = EventKernel()
+    fab.attach(_Sim(), k)
+    caps = (35.0, 110.0)
+    t0 = time.perf_counter()
+    for i in range(n_flows):
+        src = None if i % 11 == 0 else i % 4
+        fab.start_flow(0.0, 1.0 + (i % 97) * 0.37, src, (i * 7 + 1) % 4,
+                       caps[(i // 4) % 2], "micro", lambda now: None)
+    k.run()
+    dt = time.perf_counter() - t0
+    assert fab.summary.n_flows == n_flows
+    return n_flows / dt
 
 
 def run(quick: bool = False) -> str:
@@ -84,9 +178,11 @@ def run(quick: bool = False) -> str:
     rows: List[List] = []
     wtt: Dict[Tuple[str, str], float] = {}
     int_mb: Dict[Tuple[str, str], float] = {}
+    results: Dict[Tuple[str, str], object] = {}
     for scen, links in scenarios.items():
         for name in ALGOS:
             res = _run(name, links, n_jobs=n_jobs)
+            results[(scen, name)] = res
             wtt[(scen, name)] = res.wtt
             int_mb[(scen, name)] = res.int_bytes
             rows.append([scen, name, res.wtt, res.int_bytes,
@@ -112,6 +208,19 @@ def run(quick: bool = False) -> str:
     out += ("\n\n[claim check: fabric-disabled runs bit-identical to the "
             f"PR 3 golden trajectories ({len(want)} cases: 5 algorithms "
             "x static/churn/durability/churn+durability/speculative)]")
+
+    # claim check (PR 5): the class-aggregated allocator is bit-identical
+    # to the per-flow reference on every cell of the contention sweep
+    for (scen, name), res in results.items():
+        ref = _run(name, scenarios[scen], n_jobs=n_jobs,
+                   allocator="reference")
+        assert res.fabric.completion_log == ref.fabric.completion_log, \
+            f"allocator completion logs diverged: {scen}/{name}"
+        assert (res.wtt, res.int_bytes) == (ref.wtt, ref.int_bytes), \
+            f"allocator trajectories diverged: {scen}/{name}"
+    out += ("\n[claim check: class-aggregated allocator bit-identical to "
+            f"the per-flow reference on all {len(results)} contention "
+            "cells (flow logs, WTT, INT)]")
 
     # claim check: congestion-free fabric reproduces per-stream timing
     # (spread arrivals: burst ties pop in legitimately different order)
@@ -165,6 +274,83 @@ def run(quick: bool = False) -> str:
     assert a.wtt == b.wtt
     out += ("\n[claim check: fabric flow completion order deterministic "
             f"per seed ({len(a.fabric.completion_log)} flows)]")
+
+    # ---------------------------------------------------- scale sweep --
+    payload: Dict[str, object] = {"e2e": [], "micro": []}
+
+    scale_points = ([((64,) * 4, 256)] if quick
+                    else [((256,) * 4, 1024), ((1024,) * 4, 1536)])
+    rows = []
+    for hpp, jobs_n in scale_points:
+        for name in ALGOS:
+            res, ev = _scale_run(name, hpp, jobs_n)
+            rows.append([f"{len(hpp)}x{hpp[0]}", name, res.wtt,
+                         res.int_bytes, res.fabric_stall_s,
+                         f"{res.wan_util:.2f}", f"{ev:.0f}"])
+            payload["e2e"].append(
+                {"hosts": sum(hpp), "pods": len(hpp), "algo": name,
+                 "n_jobs": jobs_n, "map_slots": 2,
+                 "wan_oversub": SCALE_OVERSUB, "wtt": res.wtt,
+                 "int_mb": res.int_bytes, "events_per_s": ev})
+    out += "\n\n" + table(
+        "Fabric at scale — contended end-to-end points (burst small "
+        f"workload, WAN oversub {SCALE_OVERSUB:.0f}x, class-aggregated "
+        "allocator)",
+        ["fleet", "algo", "wtt s", "INT MB", "stall s", "wan util",
+         "events/s"], rows)
+
+    # fast vs reference at the largest point, same driver: bit-identity
+    # plus the PR 5 acceptance speedup
+    gate_hpp, gate_jobs = scale_points[-1]
+    gate_algo = "joss-t"
+    fast_res, fast_ev = _scale_run(gate_algo, gate_hpp, gate_jobs,
+                                   log_limit=None)
+    ref_res, ref_ev = _scale_run(gate_algo, gate_hpp, gate_jobs,
+                                 allocator="reference", log_limit=None)
+    assert fast_res.fabric.completion_log == ref_res.fabric.completion_log, \
+        "allocator completion logs diverged at the scale point"
+    assert fast_res.wtt == ref_res.wtt \
+        and fast_res.int_bytes == ref_res.int_bytes
+    speedup = fast_ev / ref_ev
+    floor = MIN_QUICK_SPEEDUP if quick else MIN_SCALE_SPEEDUP
+    assert speedup >= floor, \
+        f"class-aggregated allocator only {speedup:.1f}x the reference " \
+        f"at {sum(gate_hpp)} hosts (need >= {floor}x)"
+    payload["gate"] = {
+        "hosts": sum(gate_hpp), "hosts_per_pod": list(gate_hpp),
+        "n_jobs": gate_jobs, "map_slots": 2, "seed": 11,
+        "algo": gate_algo, "wan_oversub": SCALE_OVERSUB,
+        "fast_events_per_s": fast_ev, "ref_events_per_s": ref_ev,
+        "speedup": speedup, "n_flows": fast_res.fabric.n_flows}
+    out += (f"\n[claim check: class-aggregated allocator bit-identical "
+            f"to the reference at {len(gate_hpp)}x{gate_hpp[0]} hosts "
+            f"({fast_res.fabric.n_flows} flows) and {speedup:.1f}x its "
+            f"events/s ({fast_ev:.0f} vs {ref_ev:.0f}, floor {floor}x)]")
+
+    # flows/s microbench: bare allocators, no simulator around them
+    micro_points = (256, 1024) if quick else (512, 2048, 8192)
+    rows = []
+    for n in micro_points:
+        fast = _micro_rate(n, "fast")
+        # the reference's O(F^2) start+drain makes the largest point
+        # minutes of wall clock; cap it and report the cheaper points
+        ref = _micro_rate(n, "reference") if n <= 2048 else None
+        rows.append([n, f"{fast:.0f}",
+                     f"{ref:.0f}" if ref else "(skipped)",
+                     f"{fast / ref:.1f}x" if ref else "-"])
+        payload["micro"].append(
+            {"flows": n, "fast_flows_per_s": fast,
+             "ref_flows_per_s": ref})
+    out += "\n\n" + table(
+        "Fabric allocator microbench — concurrent flows/s "
+        "(start + drain through the kernel, 4-pod topology)",
+        ["flows", "fast /s", "reference /s", "speedup"], rows)
+
+    payload["quick"] = quick
+    if not quick:
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=1)
+        out += f"\n\n[trajectory written to {os.path.basename(JSON_PATH)}]"
     return out
 
 

@@ -28,6 +28,14 @@ machine was slow. After an intentional behaviour change, refresh the
 file with a full elastic sweep and say so in the commit.
 ``--wtt-perturb`` scales the fresh WTT for the gate's self-test.
 
+PR 5 adds the **fabric gate** on ``BENCH_fabric.json`` (written by full
+``--only fabric`` sweeps): the committed gate point must show the
+class-aggregated allocator >= 5x the per-flow reference (the acceptance
+envelope — a static check on the stored trajectory), and the fast
+allocator's contended events/s at that point are re-measured and must
+not regress more than ``--threshold`` against the stored value.
+``--fabric-perturb`` divides the fresh rate for the gate's self-test.
+
 Exit code: 0 = within budget, 1 = regression (or missing trajectory).
 """
 from __future__ import annotations
@@ -44,10 +52,16 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
 
 JSON_PATH = os.path.join(_ROOT, "BENCH_dispatch.json")
 ELASTIC_JSON_PATH = os.path.join(_ROOT, "BENCH_elastic.json")
+FABRIC_JSON_PATH = os.path.join(_ROOT, "BENCH_fabric.json")
 
 #: assign entries are gated at and above this many total map slots — the
 #: scale points PR 1's O(1) envelope was accepted at
 MIN_GATED_SLOTS = 4096
+
+#: the PR 5 acceptance envelope: contended fabric events/s at the
+#: committed gate point (4x1024 hosts) must beat the per-flow reference
+#: allocator by this factor
+MIN_FABRIC_SPEEDUP = 5.0
 
 
 def _hpp(entry: dict) -> list:
@@ -96,6 +110,46 @@ def _fresh_wtt(point: dict) -> float:
     res = _run(point["algo"], tuple(point["fleet"]), point["scenario"],
                cfg_kw, point["n_jobs"], seed=point.get("seed", 11))
     return res.wtt
+
+
+def _fresh_fabric_events_per_s(gate_point: dict, reps: int = 2) -> float:
+    """Fresh best-of-N contended fabric events/s (fast allocator) at the
+    stored gate point. ``log_limit=None`` matches the configuration the
+    stored rate was recorded under (the bench's bit-identity run retains
+    the full completion log); best-of-N is the same anti-flake policy as
+    the dispatch gates."""
+    from benchmarks.bench_fabric import _scale_run
+    best = 0.0
+    for _ in range(reps):
+        _, ev = _scale_run(
+            gate_point["algo"], tuple(gate_point["hosts_per_pod"]),
+            gate_point["n_jobs"], seed=gate_point.get("seed", 11),
+            wan_oversub=gate_point.get("wan_oversub", 8.0),
+            map_slots=gate_point.get("map_slots", 2), log_limit=None)
+        best = max(best, ev)
+    return best
+
+
+def compare_fabric(stored: dict, fresh_events: float,
+                   threshold: float) -> list:
+    """Pure comparison for the fabric gate: the committed gate point
+    must hold the PR 5 acceptance speedup (fast >= 5x the reference
+    allocator), and the fresh fast-allocator measurement must not
+    regress more than ``threshold`` against the stored rate."""
+    failures = []
+    g = stored["gate"]
+    if g["speedup"] < MIN_FABRIC_SPEEDUP:
+        failures.append(
+            f"committed fabric speedup at {g['hosts']} hosts is "
+            f"{g['speedup']:.2f}x the reference allocator "
+            f"(acceptance envelope is >= {MIN_FABRIC_SPEEDUP:.0f}x — "
+            f"refresh BENCH_fabric.json with a full --only fabric sweep)")
+    stored_ev = g["fast_events_per_s"]
+    if fresh_events < stored_ev / (1.0 + threshold):
+        failures.append(
+            f"fabric events/s at {g['hosts']} hosts: {fresh_events:.0f} "
+            f"vs stored {stored_ev:.0f} (> {threshold:.0%} regression)")
+    return failures
 
 
 def compare_elastic(stored: dict, fresh_wtt: dict,
@@ -166,6 +220,12 @@ def main(argv=None) -> int:
                          "change)")
     ap.add_argument("--wtt-perturb", type=float, default=1.0,
                     help="scale the fresh elastic WTTs (gate self-test)")
+    ap.add_argument("--fabric-json", default=FABRIC_JSON_PATH,
+                    help="stored fabric trajectory "
+                         "(default: BENCH_fabric.json)")
+    ap.add_argument("--fabric-perturb", type=float, default=1.0,
+                    help="divide the fresh fabric events/s (gate "
+                         "self-test)")
     args = ap.parse_args(argv)
 
     try:
@@ -179,6 +239,12 @@ def main(argv=None) -> int:
             stored_elastic = json.load(f)
     except OSError as e:
         print(f"[bench-regression] cannot read elastic trajectory: {e}")
+        return 1
+    try:
+        with open(args.fabric_json) as f:
+            stored_fabric = json.load(f)
+    except OSError as e:
+        print(f"[bench-regression] cannot read fabric trajectory: {e}")
         return 1
 
     fresh_assign: dict = {}
@@ -201,15 +267,26 @@ def main(argv=None) -> int:
         print(f"[bench-regression] elastic {key[0]}/{key[1]}: "
               f"{fresh_wtt[key]:.2f}s wtt (stored {point['wtt']:.2f})")
 
+    gate_point = stored_fabric["gate"]
+    fresh_fabric = (_fresh_fabric_events_per_s(gate_point)
+                    / args.fabric_perturb)
+    print(f"[bench-regression] fabric {gate_point['hosts']} hosts: "
+          f"{fresh_fabric:.0f} events/s "
+          f"(stored {gate_point['fast_events_per_s']:.0f}, committed "
+          f"speedup {gate_point['speedup']:.1f}x over reference)")
+
     failures = compare(stored, fresh_assign, fresh_events, args.threshold)
     failures += compare_elastic(stored_elastic, fresh_wtt,
                                 args.wtt_threshold)
+    failures += compare_fabric(stored_fabric, fresh_fabric,
+                               args.threshold)
     for f in failures:
         print(f"[bench-regression] FAIL: {f}")
     if not failures:
         print(f"[bench-regression] OK: trajectory held within "
-              f"{args.threshold:.0%} at every gated perf point and "
-              f"{args.wtt_threshold:.2%} at every elastic WTT point")
+              f"{args.threshold:.0%} at every gated perf point "
+              f"(dispatch + fabric) and {args.wtt_threshold:.2%} at "
+              f"every elastic WTT point")
     return 1 if failures else 0
 
 

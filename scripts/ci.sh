@@ -16,16 +16,22 @@
 #                      replication-factor trade-off — all asserted
 #                      inside bench_elastic
 #   fabric-claims    — fabric-disabled bit-identity with the committed
-#                      PR 3 golden trajectories (25 cases), per-stream
-#                      parity on an uncontended fabric, INT ordering,
-#                      the contention-widens-JoSS-margin probe, and
-#                      flow-completion determinism — all asserted
-#                      inside bench_fabric
+#                      PR 3 golden trajectories (25 cases), bit-identity
+#                      of the class-aggregated allocator with the
+#                      per-flow reference (every contention cell + the
+#                      scale point), per-stream parity on an uncontended
+#                      fabric, INT ordering, the contention-widens-JoSS-
+#                      margin probe, flow-completion determinism, and
+#                      the allocator speedup floor — all asserted inside
+#                      bench_fabric
 #   bench-regression — fresh dispatch sweep vs the committed
 #                      BENCH_dispatch.json trajectory (>25% regression at
 #                      the 4096/8192-host points fails) + re-simulated
 #                      elastic WTT vs BENCH_elastic.json (any drift is a
-#                      behaviour change, tolerance 0.1%)
+#                      behaviour change, tolerance 0.1%) + fresh
+#                      contended fabric events/s vs the BENCH_fabric.json
+#                      gate point (which must also hold the 5x
+#                      fast-vs-reference acceptance envelope)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

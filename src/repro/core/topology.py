@@ -65,11 +65,52 @@ class LinkCapacities:
 
 
 @dataclasses.dataclass(frozen=True)
+class ElasticLinks:
+    """Per-host NIC contributions for *elastic* fabric capacities (PR 5).
+
+    ``LinkCapacities`` is a fixed provisioning; on an elastic fleet every
+    leased VPS physically brings its own NIC, so pod aggregate capacity
+    should track the live host count. With ``FabricConfig.elastic`` set,
+    the fabric derives ``pod_up/pod_down = host_up/host_down x live
+    hosts`` at attach time and re-derives them in its ``on_host_added``/
+    ``on_host_lost`` hooks, so scale-in/scale-out reshapes the fabric.
+    ``wan_per_host > 0`` additionally scales the shared WAN with the
+    *total* fleet size (tenant egress commitments often do); the default
+    0 keeps ``LinkCapacities.wan`` fixed.
+
+    Defaults match ``workloads.fabric_links``'s provisioning of two
+    concurrent intra-pod streams per host (the 1+1 slot shape). A pod
+    that loses its last host has capacity 0.0 — flows into it starve
+    (rate 0, no completion armed) until a host joins again.
+    """
+
+    host_up: float = 220.0    # MB/s each live VPS adds to its pod uplink
+    host_down: float = 220.0  # MB/s each live VPS adds to its pod downlink
+    wan_per_host: float = 0.0  # 0 = keep LinkCapacities.wan fixed
+
+    def __post_init__(self):
+        if min(self.host_up, self.host_down) <= 0:
+            raise ValueError("per-host link capacities must be positive")
+        if self.wan_per_host < 0:
+            raise ValueError("wan_per_host must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class HostId:
     """Identifies one executor (paper: VPS_{c,l})."""
 
     pod: int    # datacenter index c
     index: int  # VPS index l within the datacenter
+
+    def __post_init__(self):
+        # HostIds key every hot dict/set in the dispatcher; the cached
+        # value equals the generated dataclass hash (hash of the field
+        # tuple), so set/dict behaviour is unchanged — it only skips
+        # re-hashing a fresh tuple on each of the millions of lookups
+        object.__setattr__(self, "_hash", hash((self.pod, self.index)))
+
+    def __hash__(self) -> int:
+        return self._hash
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return f"host[{self.pod},{self.index}]"

@@ -7,7 +7,8 @@ JAX data pipeline is exercised here.
 """
 from repro.sim.cluster_sim import SimConfig, SimResult, Simulator
 from repro.sim.engine import EventKernel, Subsystem
-from repro.sim.network import FabricConfig, FabricSummary, NetworkFabric
+from repro.sim.network import (FabricConfig, FabricSummary, NetworkFabric,
+                               make_fabric)
 from repro.sim.workloads import (PAPER_BENCHMARKS, fabric_links,
                                  fabric_scenarios, make_cluster,
                                  mixed_workload, replication_scenarios,
@@ -16,6 +17,6 @@ from repro.sim.metrics import summarize
 
 __all__ = ["SimConfig", "SimResult", "Simulator", "EventKernel",
            "Subsystem", "FabricConfig", "FabricSummary", "NetworkFabric",
-           "PAPER_BENCHMARKS", "fabric_links", "fabric_scenarios",
-           "make_cluster", "mixed_workload", "replication_scenarios",
-           "small_workload", "summarize"]
+           "make_fabric", "PAPER_BENCHMARKS", "fabric_links",
+           "fabric_scenarios", "make_cluster", "mixed_workload",
+           "replication_scenarios", "small_workload", "summarize"]

@@ -40,7 +40,7 @@ import numpy as np
 from repro.core.job import Job, MapTask, ReduceTask, TaskState
 from repro.core.topology import HostId, Locality, VirtualCluster
 from repro.sim.engine import EventKernel, Subsystem
-from repro.sim.network import FabricConfig, NetworkFabric
+from repro.sim.network import FabricConfig, make_fabric
 
 
 @dataclasses.dataclass
@@ -247,9 +247,10 @@ class Simulator:
             subs.append(ElasticSubsystem(self.elastic))
             if self.dur is not None:
                 subs.append(DurabilitySubsystem(self.dur))
-        self.fabric: Optional[NetworkFabric] = None
+        # fast (class-aggregated) or reference allocator, per the config
+        self.fabric = None
         if cfg.fabric is not None:
-            self.fabric = NetworkFabric(self.cluster, cfg.fabric)
+            self.fabric = make_fabric(self.cluster, cfg.fabric)
             subs.append(self.fabric)
         return subs
 

@@ -1,14 +1,19 @@
-"""Contention-aware network fabric for the cluster simulator (PR 4).
+"""Contention-aware network fabric: class-aggregated max-min allocator.
 
 The per-stream timing model (PRs 0-3) charges every transfer a fixed
 rate (``SimConfig.pod_bw``/``dcn_bw``), so saving inter-pod bytes never
 actually makes jobs faster — the paper's central feedback loop (lower
-INT => less WAN queueing => lower JTT/WTT) was missing. This module
-closes the loop: transfers become *flows* draining through shared links
-with **max-min fair-share** bandwidth allocation, so completion times
-respond to load.
+INT => less WAN queueing => lower JTT/WTT) was missing. PR 4 closed the
+loop with max-min fair-share *flows* over shared links; PR 5 makes that
+allocator scale: the original recomputed an O(flows^2 x links)
+progressive filling and settled/min-scanned every live flow on *every*
+flow start/cancel/completion, capping contended runs at toy fleets while
+the dispatch path already handles 8192 hosts (PR 1). This module is the
+fast path; the PR 4 per-flow structure is retained in
+``repro.sim.network_reference`` and proven bit-identical.
 
-Topology (capacities from ``core.topology.LinkCapacities``):
+Topology (capacities from ``core.topology.LinkCapacities``, or derived
+from the live fleet via ``core.topology.ElasticLinks``):
 
   * one **uplink** and one **downlink** per pod — everything the pod's
     hosts (and its object store) send into / receive from the fabric;
@@ -26,16 +31,42 @@ Flow kinds drained through the fabric: ``map_read`` (off-host map input),
 ``shuffle`` (reduce fetches), ``ckpt_write``/``ckpt_read`` (pod object
 store) and ``rerep`` (durability repair copies).
 
-Mechanics: the fabric is a :class:`repro.sim.engine.Subsystem` owning
-the ``flow`` event kind. Whenever the flow set changes, it settles
-elapsed progress at the current rates, recomputes the max-min allocation
-(progressive filling — repeatedly fix the flows of the most-constrained
-link at its fair share; per-flow caps enter as single-user virtual
-links), and schedules the next completion under an epoch counter so
-stale events are ignored. Everything is deterministic: flows are visited
-in creation order and link keys have a total order, so per-seed runs
-produce identical flow completion order (claim-checked in
-``benchmarks/bench_fabric.py`` and ``tests/test_fabric.py``).
+The fast path — flow equivalence classes
+----------------------------------------
+Max-min fairness cannot tell two flows apart that share the same
+``(path, per-flow cap)`` signature: they cross exactly the same
+constraint set, so progressive filling provably assigns them identical
+rates at all times. With P pods there are only O(P^2) signatures — a few
+dozen — no matter how many thousand flows are live, and the whole
+allocator runs at class granularity:
+
+  * **filling** is over classes: each round picks the most-constrained
+    link by an explicit ``(share, link_key)`` lexicographic minimum
+    (class caps enter as ``("~cap", sig)`` virtual links, which sort
+    after every real link), fixes every class crossing it, and debits
+    each affected link once by ``member_count x share`` — O(C^2 x L)
+    instead of O(F^2 x L);
+  * **progress** is virtual: each class keeps ``vdone``, the MB drained
+    *per member* since the class was born. A flow stores a single
+    ``target = vdone_at_join + mb`` and is done when the counter passes
+    it, so settling elapsed time is one multiply-add per class, not per
+    flow;
+  * **next completion** comes from a per-class sorted front (a heap of
+    ``(target, fid)`` with lazy tombstones for cancelled flows): one
+    O(C) minimum over class fronts per reschedule instead of a
+    min-scan over every live flow. A class whose rate is
+    0.0 (a link legitimately at zero capacity, e.g. an elastic pod with
+    no hosts left) is *starved*: it arms no completion event and simply
+    waits for the next flow-set or capacity change.
+
+Everything is deterministic: classes are visited in sorted-signature
+order, link keys have a total order, and same-instant completions are
+logged in flow-creation order. ``repro.sim.network_reference`` keeps the
+naive per-flow structure (from-scratch class rebuilds, full min-scans)
+over the *same arithmetic spec*, and the equivalence suite
+(``tests/test_fabric_fastpath.py``) plus the ``bench_fabric`` claim
+checks hold the two to **bit-identical completion logs** — order, times
+and kinds — across static/churn/durability/speculative scenarios.
 
 Accounting: per-link utilization integrals (MB actually carried vs
 capacity x horizon) and per-flow *stall* — time lost versus the flow's
@@ -45,19 +76,27 @@ uncontended time ``mb / cap`` — aggregated per kind into
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 import itertools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
-from repro.core.topology import LinkCapacities, VirtualCluster
+from repro.core.topology import ElasticLinks, LinkCapacities, VirtualCluster
 from repro.sim.engine import EventKernel, Subsystem
 
 #: a flow whose remaining volume drops below this (1 byte) is complete
 EPS_MB = 1e-6
 
-# link-key type tags (tuples compare lexicographically, giving the
-# deterministic total order the progressive filling relies on)
+# link-key type tags. Tuples compare lexicographically, giving the
+# explicit total order progressive filling breaks ties with; "~cap"
+# deliberately sorts after "down"/"up"/"wan" so a per-flow cap only wins
+# a tie against a real link when it is strictly tighter.
 UP, DOWN, WAN, FCAP = "up", "down", "wan", "~cap"
+
+LinkKey = Tuple[str, int]
+Path = Tuple[LinkKey, ...]
+Sig = Tuple[Path, float]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,26 +105,23 @@ class FabricConfig:
 
     ``links`` overrides the cluster's ``LinkCapacities`` (handy for
     oversubscription sweeps without rebuilding the cluster/workload).
-    ``completion_log`` records one entry per finished flow for the
-    determinism claim checks — disable it on very large sweeps (millions
-    of flows) where nothing reads it.
+    ``elastic`` derives pod capacities from the *live* host count
+    instead (each VPS brings NIC bandwidth — scale-in/out reshapes the
+    fabric); the fixed ``links`` default keeps golden trajectories
+    untouched. ``completion_log`` records one entry per finished flow
+    for the determinism claim checks; ``log_limit`` bounds how many
+    entries are retained (claim checks use small runs — the 1024-host
+    scale sweeps must not hold millions of tuples; dropped entries are
+    counted in ``FabricSummary.log_dropped``). ``allocator`` selects the
+    class-aggregated fast path (default) or the retained per-flow
+    reference (``"reference"``) for equivalence tests and benchmarks.
     """
 
     links: Optional[LinkCapacities] = None
     completion_log: bool = True
-
-
-@dataclasses.dataclass
-class _Flow:
-    fid: int
-    mb: float
-    rem: float
-    path: Tuple[Tuple[str, int], ...]   # real links only
-    cap: float                          # per-flow rate cap (MB/s)
-    kind: str
-    t0: float
-    done: Callable[[float], None]
-    rate: float = 0.0
+    log_limit: Optional[int] = None
+    elastic: Optional[ElasticLinks] = None
+    allocator: str = "fast"
 
 
 @dataclasses.dataclass
@@ -101,31 +137,40 @@ class FabricSummary:
     #: "up0"/"down1"/"wan" -> mean utilization over the run horizon
     link_util: Dict[str, float] = dataclasses.field(default_factory=dict)
     #: (time, kind, mb) per completion, in completion order — the
-    #: determinism claim checks compare this across repeated runs
-    #: (``FabricConfig.completion_log=False`` leaves it empty).
+    #: determinism and fast-vs-reference equivalence claims compare this
+    #: log bit-for-bit (``FabricConfig.completion_log=False`` leaves it
+    #: empty; ``log_limit`` keeps only the first N entries).
     #: Under speculation + checkpointing, ``by_kind["ckpt_write"]`` may
     #: exceed ``SimResult.ckpt_mb_written``: a losing speculative twin's
     #: store write physically drains through the fabric, but the store
     #: bills the winning attempt only (PR 3 semantics, bit-locked).
     completion_log: List[Tuple[float, str, float]] = dataclasses.field(
         default_factory=list)
+    log_dropped: int = 0             # completions not logged (log_limit)
 
 
-class NetworkFabric(Subsystem):
-    """Max-min fair-share flow accounting over the cluster's links."""
+class _FabricBase(Subsystem):
+    """State and accounting shared by the fast and reference allocators.
+
+    Subclasses own the allocation core (``_settle``/``_recompute``/
+    ``_reschedule``/``_on_flow``/``start_flow``/``cancel``); the base
+    owns link capacities (fixed or elastic), carried-MB integrals, the
+    completion summary and the subsystem wiring. The two allocators must
+    stay *bit-identical* — any arithmetic either one performs on rates,
+    progress counters or capacities is part of the shared spec.
+    """
 
     def __init__(self, cluster: VirtualCluster,
                  cfg: Optional[FabricConfig] = None):
         self.cluster = cluster
         self.cfg = cfg or FabricConfig()
         self.links: LinkCapacities = self.cfg.links or cluster.links
-        self._flows: Dict[int, _Flow] = {}
         self._fids = itertools.count()
         self._epoch = 0
         self._last = 0.0
-        self._caps: Dict[Tuple[str, int], float] = {}
-        self._carried: Dict[Tuple[str, int], float] = {}  # MB integral
-        self._load: Dict[Tuple[str, int], float] = {}     # current sum rate
+        self._caps: Dict[LinkKey, float] = {}
+        self._carried: Dict[LinkKey, float] = {}  # MB integral
+        self._load: Dict[LinkKey, float] = {}     # current sum rate
         self.summary = FabricSummary()
 
     # -- subsystem protocol ----------------------------------------------------
@@ -136,17 +181,47 @@ class NetworkFabric(Subsystem):
         # rerep events, which do run the post-step), so dispatching here
         # would only drift the offer-shuffle RNG vs per-stream mode
         kernel.register("flow", self._on_flow, post_step=False)
+        el = self.cfg.elastic
         for p in self.cluster.pods:
-            self._caps[(UP, p.index)] = self.links.pod_up
-            self._caps[(DOWN, p.index)] = self.links.pod_down
-        self._caps[(WAN, 0)] = self.links.wan
+            if el is not None:
+                self._caps[(UP, p.index)] = el.host_up * p.n_hosts
+                self._caps[(DOWN, p.index)] = el.host_down * p.n_hosts
+            else:
+                self._caps[(UP, p.index)] = self.links.pod_up
+                self._caps[(DOWN, p.index)] = self.links.pod_down
+        self._caps[(WAN, 0)] = (el.wan_per_host * self.cluster.n_hosts
+                                if el is not None and el.wan_per_host > 0.0
+                                else self.links.wan)
         for k in self._caps:
             self._carried[k] = 0.0
             self._load[k] = 0.0
 
-    # -- flow API ----------------------------------------------------------------
-    def path(self, src_pod: Optional[int],
-             dst_pod: int) -> Tuple[Tuple[str, int], ...]:
+    # -- elastic link capacities (PR 5 satellite) --------------------------------
+    def on_host_added(self, hid, now: float) -> None:
+        if self.cfg.elastic is not None:
+            self._refresh_caps(hid.pod, now)
+
+    def on_host_lost(self, host, now: float) -> None:
+        if self.cfg.elastic is not None:
+            self._refresh_caps(host.hid.pod, now)
+
+    def _refresh_caps(self, pod: int, now: float) -> None:
+        """A VPS joined/left ``pod``: re-derive its aggregate link
+        capacities from the live host count (and the WAN from the fleet
+        size, when per-host WAN scaling is on). Settles elapsed progress
+        at the old rates first, so the capacity change takes effect at
+        exactly ``now``."""
+        self._settle(now)
+        el = self.cfg.elastic
+        n = self.cluster.pods[pod].n_hosts
+        self._caps[(UP, pod)] = el.host_up * n
+        self._caps[(DOWN, pod)] = el.host_down * n
+        if el.wan_per_host > 0.0:
+            self._caps[(WAN, 0)] = el.wan_per_host * self.cluster.n_hosts
+        self._reschedule(now)
+
+    # -- shared helpers ----------------------------------------------------------
+    def path(self, src_pod: Optional[int], dst_pod: int) -> Path:
         """Link path of a transfer into ``dst_pod``. ``src_pod=None``
         means the bytes enter from outside the cluster (external durable
         store): they cross the WAN but no pod uplink."""
@@ -156,6 +231,138 @@ class NetworkFabric(Subsystem):
             return ((UP, src_pod), (DOWN, dst_pod))
         return ((UP, src_pod), (WAN, 0), (DOWN, dst_pod))
 
+    def _accrue(self, dt: float) -> None:
+        """Advance the link-carried integrals by ``dt`` at the rates
+        fixed by the last recompute (called from ``_settle``)."""
+        for k, load in self._load.items():
+            if load:
+                self._carried[k] += load * dt
+
+    def _complete_one(self, f, now: float) -> None:
+        s = self.summary
+        s.n_flows += 1
+        s.mb_total += f.mb
+        stall = max(0.0, (now - f.t0) - f.mb / f.cap)
+        s.stall_s += stall
+        agg = s.by_kind.setdefault(f.kind, [0, 0.0, 0.0])
+        agg[0] += 1
+        agg[1] += f.mb
+        agg[2] += stall
+        if self.cfg.completion_log:
+            limit = self.cfg.log_limit
+            if limit is None or len(s.completion_log) < limit:
+                s.completion_log.append((now, f.kind, f.mb))
+            else:
+                s.log_dropped += 1
+
+    # -- accounting ----------------------------------------------------------------
+    def finalize(self, horizon: float) -> FabricSummary:
+        self._settle(max(horizon, self._last))
+        for (tag, idx), mb in sorted(self._carried.items()):
+            name = WAN if tag == WAN else f"{tag}{idx}"
+            cap = self._caps[(tag, idx)]
+            # elastic capacities move during the run; utilization is
+            # reported against the final values (exact for fixed links)
+            self.summary.link_util[name] = (
+                mb / (cap * horizon) if cap > 0.0 and horizon > 0 else 0.0)
+        return self.summary
+
+
+class _Class:
+    """One flow equivalence class: every live flow sharing ``sig =
+    (path, cap)``. Max-min assigns all members the same rate, so the
+    class carries the rate, the virtual-progress counter, and a sorted
+    front of member targets; members hold only their target."""
+
+    __slots__ = ("sig", "path", "cap", "n", "rate", "vdone", "front",
+                 "dead", "fill_key")
+
+    def __init__(self, sig: Sig):
+        self.sig = sig
+        self.path, self.cap = sig
+        self.n = 0            # live members
+        self.rate = 0.0       # per-member rate from the last recompute
+        self.vdone = 0.0      # MB drained per member since class birth
+        self.front: List[Tuple[float, int]] = []   # (target, fid) heap
+        self.dead: Set[int] = set()   # cancelled fids still in `front`
+        # the class-cap candidate key of progressive filling, built once
+        self.fill_key = (self.cap, (FCAP, sig))
+
+
+class _Flow:
+    """One transfer. Progress lives on the class: the flow is done when
+    ``cls.vdone`` reaches ``target`` (= the counter at join + volume)."""
+
+    __slots__ = ("fid", "mb", "kind", "t0", "done", "cls", "target")
+
+    def __init__(self, fid: int, mb: float, kind: str, t0: float,
+                 done: Callable[[float], None], cls: _Class,
+                 target: float):
+        self.fid = fid
+        self.mb = mb
+        self.kind = kind
+        self.t0 = t0
+        self.done = done
+        self.cls = cls
+        self.target = target
+
+    @property
+    def cap(self) -> float:
+        return self.cls.cap
+
+    @property
+    def rate(self) -> float:
+        return self.cls.rate
+
+
+class NetworkFabric(_FabricBase):
+    """Class-aggregated max-min fair-share flow accounting (fast path)."""
+
+    def __init__(self, cluster: VirtualCluster,
+                 cfg: Optional[FabricConfig] = None):
+        super().__init__(cluster, cfg)
+        self._flows: Dict[int, _Flow] = {}
+        self._classes: Dict[Sig, _Class] = {}
+        # persistent recompute indexes, maintained at class birth/death
+        # and flow admit/evict so each recompute starts from O(C) state:
+        self._order: List[_Class] = []      # classes in sorted-sig order
+        self._order_sigs: List[Sig] = []    # parallel bisect keys
+        self._cap_order: List[_Class] = []  # classes by fill_key
+        self._cap_keys: List[tuple] = []    # parallel bisect keys
+        self._users: Dict[LinkKey, List[_Class]] = {}  # link -> classes
+        self._nuse: Dict[LinkKey, int] = {}  # link -> live member count
+
+    def attach(self, sim, kernel: EventKernel) -> None:
+        super().attach(sim, kernel)
+        self._users = {k: [] for k in self._caps}
+        self._nuse = dict.fromkeys(self._caps, 0)
+
+    # -- class bookkeeping -------------------------------------------------------
+    def _add_class(self, sig: Sig) -> _Class:
+        cls = _Class(sig)
+        self._classes[sig] = cls
+        i = bisect.bisect_left(self._order_sigs, sig)
+        self._order_sigs.insert(i, sig)
+        self._order.insert(i, cls)
+        j = bisect.bisect_left(self._cap_keys, cls.fill_key)
+        self._cap_keys.insert(j, cls.fill_key)
+        self._cap_order.insert(j, cls)
+        for link in cls.path:
+            self._users[link].append(cls)
+        return cls
+
+    def _drop_class(self, cls: _Class) -> None:
+        del self._classes[cls.sig]
+        i = bisect.bisect_left(self._order_sigs, cls.sig)
+        del self._order_sigs[i]
+        del self._order[i]
+        j = bisect.bisect_left(self._cap_keys, cls.fill_key)
+        del self._cap_keys[j]
+        del self._cap_order[j]
+        for link in cls.path:
+            self._users[link].remove(cls)
+
+    # -- flow API ----------------------------------------------------------------
     def start_flow(self, now: float, mb: float, src_pod: Optional[int],
                    dst_pod: int, cap: float, kind: str,
                    done: Callable[[float], None]) -> int:
@@ -167,8 +374,17 @@ class NetworkFabric(Subsystem):
             return -1
         self._settle(now)
         fid = next(self._fids)
-        self._flows[fid] = _Flow(fid, mb, mb, self.path(src_pod, dst_pod),
-                                 cap, kind, now, done)
+        sig = (self.path(src_pod, dst_pod), cap)
+        cls = self._classes.get(sig)
+        if cls is None:
+            cls = self._add_class(sig)
+        target = cls.vdone + mb
+        self._flows[fid] = _Flow(fid, mb, kind, now, done, cls, target)
+        cls.n += 1
+        nuse = self._nuse
+        for link in cls.path:
+            nuse[link] += 1
+        heapq.heappush(cls.front, (target, fid))
         self._reschedule(now)
         return fid
 
@@ -178,100 +394,179 @@ class NetworkFabric(Subsystem):
         if fid not in self._flows:
             return
         self._settle(now)
-        del self._flows[fid]
+        f = self._flows.pop(fid)
+        cls = f.cls
+        cls.n -= 1
+        nuse = self._nuse
+        for link in cls.path:
+            nuse[link] -= 1
+        if cls.n == 0:
+            # last member gone: the class (and its progress counter)
+            # dies with it — a later same-signature flow starts fresh
+            self._drop_class(cls)
+        else:
+            cls.dead.add(fid)   # lazily dropped from the front heap
         self.summary.n_cancelled += 1
         self._reschedule(now)
 
     # -- mechanics ----------------------------------------------------------------
     def _settle(self, now: float) -> None:
-        """Advance every flow by the elapsed interval at the rates fixed
-        by the last recompute, and accrue the link-carried integrals."""
+        """Advance every *class* counter by the elapsed interval at the
+        rates fixed by the last recompute — O(classes), not O(flows) —
+        and accrue the link-carried integrals."""
         dt = now - self._last
         if dt > 0.0:
-            for f in self._flows.values():
-                f.rem -= f.rate * dt
-            for k, load in self._load.items():
-                if load:
-                    self._carried[k] += load * dt
+            for cls in self._classes.values():
+                if cls.rate:
+                    cls.vdone += cls.rate * dt
+            self._accrue(dt)
             self._last = now
 
     def _recompute(self) -> None:
-        """Max-min fair allocation by progressive filling. Per-flow caps
-        are single-user virtual links, so one uniform loop handles both;
-        link keys and creation-ordered flows keep it deterministic."""
-        flows = self._flows
-        rem_cap: Dict[Tuple[str, int], float] = dict(self._caps)
-        users: Dict[Tuple[str, int], List[int]] = {k: [] for k in rem_cap}
-        for fid, f in flows.items():
-            rem_cap[(FCAP, fid)] = f.cap
-            users[(FCAP, fid)] = [fid]
-            for link in f.path:
-                users[link].append(fid)
-        unfixed = dict.fromkeys(flows)
+        """Max-min fair allocation by progressive filling over classes.
+
+        Each round takes the lexicographic minimum ``(share, link_key)``
+        over real links (``share = remaining capacity / unfixed member
+        count``) and class caps (share = the cap, key ``("~cap", sig)``
+        so real links win exact ties), fixes every unfixed class on the
+        winner, and debits each touched link once by ``members x share``.
+        Classes are visited in sorted-signature order; the reference
+        allocator performs the identical arithmetic from per-flow state,
+        which is what makes the two bit-comparable.
+        """
+        rem_cap = dict(self._caps)
+        # working copy of the persistent per-link live member counts;
+        # integers — exact, so the shares match the reference's
+        # from-scratch rescan bit for bit
+        nuse = dict(self._nuse)
+        users = self._users
+        cap_order = self._cap_order
+        unfixed: Set[Sig] = {c.sig for c in self._order}
+        ci = 0
+        n_caps = len(cap_order)
         while unfixed:
-            best_share, best_link = None, None
-            for link, members in users.items():
-                n = sum(1 for fid in members if fid in unfixed)
+            best_key = None
+            best_link = None
+            for link, n in nuse.items():
                 if n == 0:
                     continue
-                share = rem_cap[link] / n
-                if best_share is None or share < best_share:
-                    best_share, best_link = share, link
-            for fid in users[best_link]:
-                if fid not in unfixed:
-                    continue
-                f = flows[fid]
-                f.rate = best_share
-                del unfixed[fid]
-                rem_cap[(FCAP, fid)] -= best_share
-                for link in f.path:
-                    rem_cap[link] = max(0.0, rem_cap[link] - best_share)
+                key = (rem_cap[link] / n, link)
+                if best_key is None or key < best_key:
+                    best_key, best_link = key, link
+            # the tightest unfixed class cap is the next live entry of
+            # the fill_key-sorted class list (pointer advances lazily
+            # past classes fixed through real links)
+            while ci < n_caps and cap_order[ci].sig not in unfixed:
+                ci += 1
+            best_cls = None
+            if ci < n_caps:
+                c = cap_order[ci]
+                if best_key is None or c.fill_key < best_key:
+                    best_key, best_link, best_cls = c.fill_key, None, c
+            rate = best_key[0]
+            fixed = ([best_cls] if best_cls is not None else
+                     [c for c in users[best_link] if c.sig in unfixed])
+            dec: Dict[LinkKey, int] = {}
+            for c in fixed:
+                c.rate = rate
+                unfixed.discard(c.sig)
+                for link in c.path:
+                    dec[link] = dec.get(link, 0) + c.n
+            for link, k in dec.items():
+                nuse[link] -= k
+                rem_cap[link] = max(0.0, rem_cap[link] - k * rate)
         for k in self._load:
             self._load[k] = 0.0
-        for f in flows.values():
-            for link in f.path:
-                self._load[link] += f.rate
+        for c in self._order:
+            r = c.rate * c.n
+            for link in c.path:
+                self._load[link] += r
+
+    def _front_target(self, cls: _Class) -> Optional[float]:
+        """Earliest live target of ``cls`` (drops cancelled tombstones)."""
+        front = cls.front
+        while front and front[0][1] in cls.dead:
+            cls.dead.discard(front[0][1])
+            heapq.heappop(front)
+        return front[0][0] if front else None
 
     def _reschedule(self, now: float) -> None:
-        """Recompute rates and (re)arm the next completion event. The
-        epoch counter invalidates any previously armed event."""
+        """Recompute rates and (re)arm the next completion event.
+
+        Candidates come from each class's sorted front — one O(classes)
+        minimum instead of a min-scan over every live flow. Starved
+        classes (rate 0.0 — a zero-capacity elastic link) arm nothing:
+        their flows simply wait for the next flow-set or capacity
+        change. The epoch counter invalidates any previously armed
+        event."""
         self._epoch += 1
         if not self._flows:
+            # the last flow just drained: rates are all zero now, and
+            # the carried-MB integrals must stop accruing across the
+            # idle gap until the next flow starts
+            for k in self._load:
+                self._load[k] = 0.0
             return
         self._recompute()
-        t_next = min(now + f.rem / f.rate for f in self._flows.values())
-        self.kernel.push(t_next, "flow", self._epoch)
+        t_next = None
+        for cls in self._classes.values():
+            if cls.rate <= 0.0:
+                continue
+            target = self._front_target(cls)
+            if target is not None:
+                t = now + (target - cls.vdone) / cls.rate
+                if t_next is None or t < t_next:
+                    t_next = t
+        if t_next is not None:
+            self.kernel.push(t_next, "flow", self._epoch)
 
     def _on_flow(self, now: float, epoch: int) -> None:
         if epoch != self._epoch:
             return   # superseded by a later flow-set change
         self._settle(now)
-        finished = [f for f in self._flows.values() if f.rem <= EPS_MB]
+        finished: List[_Flow] = []
+        empty: List[_Class] = []
+        nuse = self._nuse
+        for cls in self._classes.values():
+            front, dead, vdone = cls.front, cls.dead, cls.vdone
+            while front:
+                target, fid = front[0]
+                if fid in dead:
+                    dead.discard(fid)
+                    heapq.heappop(front)
+                    continue
+                if target - vdone <= EPS_MB:
+                    heapq.heappop(front)
+                    finished.append(self._flows.pop(fid))
+                    cls.n -= 1
+                    for link in cls.path:
+                        nuse[link] -= 1
+                    continue
+                break
+            if cls.n == 0:
+                empty.append(cls)
+        for cls in empty:
+            self._drop_class(cls)
+        # summary/log in flow-creation order (the reference completes in
+        # dict order, which is fid order — the logs must compare equal)
+        finished.sort(key=lambda f: f.fid)
         for f in finished:
-            del self._flows[f.fid]
-            s = self.summary
-            s.n_flows += 1
-            s.mb_total += f.mb
-            stall = max(0.0, (now - f.t0) - f.mb / f.cap)
-            s.stall_s += stall
-            agg = s.by_kind.setdefault(f.kind, [0, 0.0, 0.0])
-            agg[0] += 1
-            agg[1] += f.mb
-            agg[2] += stall
-            if self.cfg.completion_log:
-                s.completion_log.append((now, f.kind, f.mb))
+            self._complete_one(f, now)
         self._reschedule(now)
         # callbacks fire after the surviving flow set is re-armed; they
         # may start new flows (each re-settles at dt=0 and re-arms)
         for f in finished:
             f.done(now)
 
-    # -- accounting ----------------------------------------------------------------
-    def finalize(self, horizon: float) -> FabricSummary:
-        self._settle(max(horizon, self._last))
-        for (tag, idx), mb in sorted(self._carried.items()):
-            name = WAN if tag == WAN else f"{tag}{idx}"
-            cap = self._caps[(tag, idx)]
-            self.summary.link_util[name] = (
-                mb / (cap * horizon) if horizon > 0 else 0.0)
-        return self.summary
+
+def make_fabric(cluster: VirtualCluster,
+                cfg: Optional[FabricConfig] = None) -> _FabricBase:
+    """Build the fabric ``cfg`` asks for: the class-aggregated fast path
+    (default) or the retained per-flow reference allocator."""
+    cfg = cfg or FabricConfig()
+    if cfg.allocator == "reference":
+        from repro.sim.network_reference import ReferenceNetworkFabric
+        return ReferenceNetworkFabric(cluster, cfg)
+    if cfg.allocator != "fast":
+        raise ValueError(f"unknown fabric allocator {cfg.allocator!r}")
+    return NetworkFabric(cluster, cfg)

@@ -79,6 +79,9 @@ def _stub_measurements(gate, monkeypatch):
         gate, "_fresh_events_per_s",
         lambda entry, reps=2: entry["new_events_per_s"])
     monkeypatch.setattr(gate, "_fresh_wtt", lambda point: point["wtt"])
+    monkeypatch.setattr(
+        gate, "_fresh_fabric_events_per_s",
+        lambda point, reps=2: point["fast_events_per_s"])
 
 
 def test_main_trips_on_injected_slowdown(gate, stored, monkeypatch):
@@ -141,3 +144,50 @@ def test_elastic_gate_reproduces_stored_wtt_live(gate, stored_elastic):
     point = stored_elastic["points"][0]
     assert gate._fresh_wtt(point) == pytest.approx(point["wtt"],
                                                    rel=1e-12)
+
+
+# ------------------------------------------------ fabric gate (PR 5) --
+@pytest.fixture(scope="module")
+def stored_fabric():
+    with open(os.path.join(_ROOT, "BENCH_fabric.json")) as f:
+        return json.load(f)
+
+
+def test_fabric_trajectory_covers_the_gate_point(stored_fabric):
+    g = stored_fabric["gate"]
+    assert g["hosts"] == 4096 and g["fast_events_per_s"] > 0
+    assert g["speedup"] >= 5.0, \
+        "committed fabric gate point below the 5x acceptance envelope"
+    assert {e["hosts"] for e in stored_fabric["e2e"]} >= {1024, 4096}
+
+
+def test_compare_fabric_passes_on_identical_measurement(gate,
+                                                        stored_fabric):
+    fresh = stored_fabric["gate"]["fast_events_per_s"]
+    assert gate.compare_fabric(stored_fabric, fresh, 0.25) == []
+
+
+def test_compare_fabric_fails_on_2x_slowdown(gate, stored_fabric):
+    fresh = stored_fabric["gate"]["fast_events_per_s"] / 2.0
+    failures = gate.compare_fabric(stored_fabric, fresh, 0.25)
+    assert len(failures) == 1 and "regression" in failures[0]
+
+
+def test_compare_fabric_fails_on_sub_envelope_speedup(gate,
+                                                      stored_fabric):
+    doctored = {"gate": dict(stored_fabric["gate"], speedup=4.2)}
+    failures = gate.compare_fabric(
+        doctored, doctored["gate"]["fast_events_per_s"], 0.25)
+    assert len(failures) == 1 and "acceptance envelope" in failures[0]
+
+
+def test_main_trips_on_fabric_perturbation(gate, monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--fabric-perturb", "2.0"]) == 1
+
+
+def test_main_fails_cleanly_without_fabric_trajectory(gate, tmp_path,
+                                                      monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--fabric-json",
+                      str(tmp_path / "missing.json")]) == 1

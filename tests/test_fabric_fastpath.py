@@ -1,0 +1,386 @@
+"""PR 5 tentpole: the class-aggregated fabric allocator vs the retained
+per-flow reference (``repro.sim.network_reference``).
+
+Covers bit-identical completion logs and full simulation signatures
+across static/churn/durability/speculative scenarios, allocator-level
+equivalence under choreographed start/cancel sequences, same-timestamp
+epoch races (cancel-then-complete, complete-then-start), the explicit
+``(share, link_key)`` tie-break total order, the starved-flow guard
+(zero-capacity elastic links must not divide by zero), elastic link
+capacities, and the bounded completion log.
+"""
+import heapq
+
+import pytest
+
+from repro.core.joss import make_algorithm
+from repro.core.topology import ElasticLinks, HostId, LinkCapacities
+from repro.sim import golden
+from repro.sim.cluster_sim import SimConfig, Simulator
+from repro.sim.engine import EventKernel
+from repro.sim.network import (DOWN, FCAP, UP, WAN, FabricConfig,
+                               NetworkFabric, make_fabric)
+from repro.sim.network_reference import ReferenceNetworkFabric
+from repro.sim.workloads import (fabric_links, make_cluster,
+                                 profiling_prelude, small_workload)
+
+ALLOCATORS = ("fast", "reference")
+
+
+class _Sim:
+    pass
+
+
+def _bare(links=None, pods=2, *, cfg=None, allocator="fast"):
+    cluster = make_cluster((2,) * pods, links=links)
+    cfg = cfg or FabricConfig(allocator=allocator)
+    fab = make_fabric(cluster, cfg)
+    k = EventKernel()
+    fab.attach(_Sim(), k)
+    return fab, k, cluster
+
+
+def _bare_pair(links=None, pods=2, **cfg_kw):
+    out = []
+    for allocator in ALLOCATORS:
+        cfg = FabricConfig(allocator=allocator, **cfg_kw)
+        out.append(_bare(links, pods, cfg=cfg))
+    return out
+
+
+def _summary_state(fab):
+    s = fab.summary
+    return (s.n_flows, s.n_cancelled, s.mb_total, s.stall_s, s.by_kind,
+            s.completion_log, s.log_dropped)
+
+
+def test_make_fabric_selects_allocator():
+    cluster = make_cluster((2, 2))
+    assert isinstance(make_fabric(cluster, FabricConfig()), NetworkFabric)
+    assert isinstance(
+        make_fabric(cluster, FabricConfig(allocator="reference")),
+        ReferenceNetworkFabric)
+    with pytest.raises(ValueError):
+        make_fabric(cluster, FabricConfig(allocator="bogus"))
+
+
+# ------------------------------------------------- allocator equivalence --
+def _choreograph(fab, k):
+    """A deterministic start/cancel script exercising shared classes,
+    rebalances, cancels and restarts; returns the completion trace."""
+    trace = []
+
+    def done(tag):
+        return lambda now: trace.append((tag, now))
+
+    fids = {}
+    # three classes: intra-pod 0, cross-pod, external ingress; several
+    # members each, mixed caps
+    for i in range(6):
+        fids[f"a{i}"] = fab.start_flow(0.0, 40.0 + 3.0 * i, 0, 0, 110.0,
+                                       "intra", done(f"a{i}"))
+    for i in range(5):
+        fids[f"b{i}"] = fab.start_flow(0.0, 60.0 + 5.0 * i, 0, 1, 35.0,
+                                       "inter", done(f"b{i}"))
+    for i in range(3):
+        fids[f"c{i}"] = fab.start_flow(0.0, 25.0 + 7.0 * i, None, 1, 35.0,
+                                       "ext", done(f"c{i}"))
+    # mid-run churn: cancels at staggered instants, a late joiner
+    k.call_at(0.4, lambda now: fab.cancel(fids["b3"], now))
+    k.call_at(0.9, lambda now: fab.cancel(fids["a5"], now))
+    k.call_at(1.3, lambda now: fab.start_flow(now, 80.0, 1, 0, 110.0,
+                                              "late", done("late")))
+    k.call_at(1.3, lambda now: fab.cancel(fids["c2"], now))
+    k.run()
+    return trace
+
+
+def test_choreographed_equivalence_is_bitwise():
+    links = LinkCapacities(pod_up=260.0, pod_down=260.0, wan=95.0)
+    (fa, ka, _), (fr, kr, _) = _bare_pair(links)
+    ta = _choreograph(fa, ka)
+    tr = _choreograph(fr, kr)
+    assert ta == tr and len(ta) == 12   # 15 started, 3 cancelled
+    assert fa.summary.completion_log == fr.summary.completion_log
+    assert _summary_state(fa) == _summary_state(fr)
+    assert fa.finalize(2.0).link_util == fr.finalize(2.0).link_util
+
+
+def test_rates_equivalent_after_each_start():
+    """After every single start the per-flow rates of the two allocators
+    match bitwise (same fid sequence, same rate)."""
+    links = LinkCapacities(pod_up=300.0, pod_down=300.0, wan=70.0)
+    (fa, _ka, _), (fr, _kr, _) = _bare_pair(links)
+    script = [(0, 1, 35.0), (0, 1, 35.0), (0, 0, 110.0), (None, 1, 35.0),
+              (1, 0, 35.0), (0, 1, 20.0), (0, 0, 110.0), (1, 1, 110.0)]
+    for i, (src, dst, cap) in enumerate(script):
+        fa.start_flow(0.0, 50.0 + i, src, dst, cap, "t", lambda n: None)
+        fr.start_flow(0.0, 50.0 + i, src, dst, cap, "t", lambda n: None)
+        ra = {fid: f.rate for fid, f in fa._flows.items()}
+        rr = {fid: f.rate for fid, f in fr._flows.items()}
+        assert ra == rr
+
+
+# --------------------------------------------------- end-to-end bitwise --
+def _e2e(allocator, variant, algo_name="joss-t", elastic_links=None):
+    from repro.elastic import (ChurnConfig, DurabilityConfig, ElasticEngine,
+                               FixedFleet)
+    cluster = make_cluster((4, 4), links=fabric_links((4, 4),
+                                                      wan_oversub=8.0))
+    jobs = small_workload(cluster, seed=11, n_jobs=12)
+    algo = make_algorithm(algo_name, cluster)
+    if hasattr(algo, "registry"):
+        for j in profiling_prelude(cluster):
+            algo.registry.record(j, j.true_fp)
+    cfg_kw = {}
+    elastic = None
+    if variant in ("churn", "churn+durability"):
+        dur = (DurabilityConfig(rereplicate=True, rerep_delay=5.0,
+                                checkpoint=True)
+               if variant == "churn+durability" else None)
+        elastic = ElasticEngine(
+            cluster, churn=ChurnConfig(seed=12, fail_rate=4.0,
+                                       rejoin_delay=60.0),
+            autoscaler=FixedFleet(), durability=dur)
+    elif variant == "speculative":
+        cfg_kw = dict(speculative=True, slow_hosts={HostId(0, 0): 4.0})
+    cfg = SimConfig(fabric=FabricConfig(allocator=allocator,
+                                        elastic=elastic_links), **cfg_kw)
+    res = Simulator(cluster, algo, jobs, config=cfg, seed=11,
+                    elastic=elastic).run()
+    assert len(res.job_finish) == 12
+    return res
+
+
+@pytest.mark.parametrize("variant", ["static", "churn", "churn+durability",
+                                     "speculative"])
+def test_end_to_end_bit_identity(variant):
+    a = _e2e("fast", variant)
+    b = _e2e("reference", variant)
+    assert a.fabric.completion_log, "scenario produced no flows"
+    assert a.fabric.completion_log == b.fabric.completion_log
+    assert golden.full_signature(a) == golden.full_signature(b)
+    assert a.fabric.link_util == b.fabric.link_util
+    assert a.fabric.n_cancelled == b.fabric.n_cancelled
+
+
+def test_end_to_end_bit_identity_with_elastic_links():
+    el = ElasticLinks(host_up=220.0, host_down=220.0, wan_per_host=35.0)
+    a = _e2e("fast", "churn+durability", elastic_links=el)
+    b = _e2e("reference", "churn+durability", elastic_links=el)
+    assert a.fabric.completion_log == b.fabric.completion_log
+    assert golden.full_signature(a) == golden.full_signature(b)
+
+
+# ------------------------------------------- same-timestamp epoch races --
+def test_cancel_then_complete_at_same_instant():
+    """A cancel processed at exactly a completion's armed time must kill
+    the cancelled flow, still complete the finished one, and leave both
+    allocators in an identical state (the stale-epoch path)."""
+    for allocator in ALLOCATORS:
+        fab, k, _ = _bare(LinkCapacities(pod_up=1e6, pod_down=1e6,
+                                         wan=100.0), allocator=allocator)
+        times = {}
+        # the cancel is pushed first so it pops before the flow event
+        # armed for the same instant (seq order)
+        k.call_at(1.0, lambda now: fab.cancel(fids["b"], now))
+        fids = {
+            "a": fab.start_flow(0.0, 50.0, 0, 1, 1e6, "t",
+                                lambda now: times.setdefault("a", now)),
+            "b": fab.start_flow(0.0, 200.0, 0, 1, 1e6, "t",
+                                lambda now: times.setdefault("b", now)),
+        }
+        k.run()
+        # both ran at 50 MB/s; a finished exactly when b was cancelled
+        assert times == {"a": 1.0}
+        assert fab.summary.n_flows == 1 and fab.summary.n_cancelled == 1
+        assert fab.summary.completion_log == [(1.0, "t", 50.0)]
+        assert not fab._flows
+
+
+def test_complete_then_start_at_same_instant():
+    """A done-callback starting a new flow at the completion instant
+    must join/extend classes identically in both allocators."""
+    logs = []
+    for allocator in ALLOCATORS:
+        fab, k, _ = _bare(LinkCapacities(pod_up=1e6, pod_down=1e6,
+                                         wan=120.0), allocator=allocator)
+        times = {}
+
+        def chain(now, fab=fab, times=times):
+            times["first"] = now
+            fab.start_flow(now, 30.0, 0, 1, 1e6, "t2",
+                           lambda tn: times.setdefault("second", tn))
+
+        fab.start_flow(0.0, 60.0, 0, 1, 1e6, "t1", chain)
+        fab.start_flow(0.0, 240.0, 0, 1, 1e6, "t1",
+                       lambda now: times.setdefault("long", now))
+        k.run()
+        # 60/60 split until t=1; the chained 30 MB joins the long flow's
+        # class and they split 60/60 until t=1.5; the remaining 150 MB
+        # then drain at the full 120
+        assert times["first"] == pytest.approx(1.0)
+        assert times["second"] == pytest.approx(1.5)
+        assert times["long"] == pytest.approx(2.75)
+        logs.append(fab.summary.completion_log)
+    assert logs[0] == logs[1]
+
+
+# ---------------------------------------------- starved flows (no /0) --
+def test_starved_flow_arms_no_completion_and_resumes():
+    """Satellite regression: a flow on a saturated link whose remaining
+    capacity is driven to exactly zero (an elastic pod that lost every
+    host) must get rate 0.0 and arm *no* completion event — the old
+    ``rem / rate`` min-scan raised ZeroDivisionError. When capacity
+    returns, the flow resumes and completes."""
+    el = ElasticLinks(host_up=100.0, host_down=100.0)
+    for allocator in ALLOCATORS:
+        fab, k, cluster = _bare(
+            cfg=FabricConfig(allocator=allocator, elastic=el))
+        done = []
+        fab.start_flow(0.0, 100.0, 0, 1, 1e6, "t", done.append)
+        # pod 1 provides 2 hosts x 100 MB/s of downlink; the wan (525)
+        # and pod-0 uplink (200) leave the flow at 200 MB/s
+        assert next(iter(fab._flows.values())).rate == pytest.approx(200.0)
+        # half the volume drains by t=0.25, then pod 1 empties: its
+        # derived downlink capacity is 0.0 and the flow starves
+        for hid in [h.hid for h in cluster.pods[1].hosts]:
+            fab.on_host_lost(cluster.remove_host(hid), 0.25)
+        assert next(iter(fab._flows.values())).rate == 0.0
+        k.run()   # no completion event is armed: nothing fires, no /0
+        assert done == [] and len(fab._flows) == 1
+        # a host joins pod 1 at t=10: 100 MB/s of downlink comes back
+        # and the remaining 50 MB drains in 0.5 s
+        fab.on_host_added(cluster.add_host(1).hid, 10.0)
+        k.run()
+        assert done == [pytest.approx(10.5)]
+        assert fab.summary.completion_log[0][0] == pytest.approx(10.5)
+
+
+def test_idle_gap_accrues_no_phantom_utilization():
+    """Regression (latent since PR 4): when the last flow drains, the
+    per-link load must zero — an idle gap before the next flow must not
+    keep accruing carried MB at the dead flows' rates."""
+    links = LinkCapacities(pod_up=1e6, pod_down=1e6, wan=525.0)
+    for allocator in ALLOCATORS:
+        fab, k, _ = _bare(links, allocator=allocator)
+        fab.start_flow(0.0, 100.0, 0, 1, 1e6, "t", lambda n: None)
+        k.run()   # drains at t ~= 0.19; the fabric then sits idle
+        fab.start_flow(50.0, 100.0, 0, 1, 1e6, "t", lambda n: None)
+        k.run()
+        s = fab.finalize(51.0)
+        assert s.mb_total == pytest.approx(200.0)
+        # exactly the 200 MB that physically crossed the WAN
+        assert s.link_util["wan"] == pytest.approx(
+            200.0 / (525.0 * 51.0))
+
+
+# -------------------------------------------------- elastic capacities --
+def test_elastic_links_track_live_host_count():
+    el = ElasticLinks(host_up=50.0, host_down=60.0, wan_per_host=10.0)
+    fab, _k, cluster = _bare(cfg=FabricConfig(elastic=el))
+    assert fab._caps[(UP, 0)] == pytest.approx(100.0)    # 2 hosts x 50
+    assert fab._caps[(DOWN, 1)] == pytest.approx(120.0)
+    assert fab._caps[(WAN, 0)] == pytest.approx(40.0)    # 4 hosts x 10
+    hid = cluster.add_host(0).hid
+    fab.on_host_added(hid, 1.0)
+    assert fab._caps[(UP, 0)] == pytest.approx(150.0)
+    assert fab._caps[(WAN, 0)] == pytest.approx(50.0)
+    fab.on_host_lost(cluster.remove_host(hid), 2.0)
+    assert fab._caps[(UP, 0)] == pytest.approx(100.0)
+    assert fab._caps[(WAN, 0)] == pytest.approx(40.0)
+
+
+def test_fixed_links_ignore_churn():
+    links = LinkCapacities(pod_up=111.0, pod_down=222.0, wan=333.0)
+    fab, _k, cluster = _bare(links)
+    before = dict(fab._caps)
+    fab.on_host_added(cluster.add_host(0).hid, 1.0)
+    assert fab._caps == before
+
+
+def test_elastic_links_validation():
+    with pytest.raises(ValueError):
+        ElasticLinks(host_up=0.0)
+    with pytest.raises(ValueError):
+        ElasticLinks(wan_per_host=-1.0)
+
+
+# ------------------------------------------------ explicit tie-breaks --
+def test_link_key_total_order():
+    """Satellite: progressive filling breaks share ties by an explicit
+    lexicographic ``(share, link_key)`` minimum. The key space must be
+    totally ordered: downlinks < uplinks < the WAN < per-class caps, and
+    cap sentinels order among themselves by signature."""
+    sig_a = ((("up", 0), ("down", 0)), 35.0)
+    sig_b = ((("up", 0), ("down", 0)), 110.0)
+    sig_c = ((("up", 0), ("wan", 0), ("down", 1)), 35.0)
+    keys = [(FCAP, sig_c), ("wan", 0), ("up", 1), (FCAP, sig_a),
+            ("down", 1), ("up", 0), ("down", 0), (FCAP, sig_b)]
+    assert sorted(keys) == [
+        ("down", 0), ("down", 1), ("up", 0), ("up", 1), ("wan", 0),
+        (FCAP, sig_a), (FCAP, sig_b), (FCAP, sig_c)]
+    # heap-compatible: every pair is strictly comparable
+    heap = list(keys)
+    heapq.heapify(heap)
+    assert heapq.heappop(heap) == ("down", 0)
+
+
+def test_share_tie_resolves_to_real_link_and_exact_rate():
+    """An exact share tie between a real link and a per-flow cap fixes
+    through the real link (caps sort last), and an exactly tied pair of
+    real links resolves lexicographically — either way the rate is the
+    tied share, bit-exact."""
+    fab, _k, _ = _bare(LinkCapacities(pod_up=100.0, pod_down=100.0,
+                                      wan=525.0))
+    fab.start_flow(0.0, 10.0, 0, 0, 100.0, "t", lambda n: None)
+    (f,) = fab._flows.values()
+    assert f.rate == 100.0          # up0 == down0 == cap == 100.0
+    fab2, _k2, _ = _bare(LinkCapacities(pod_up=100.0, pod_down=100.0,
+                                        wan=525.0))
+    fab2.start_flow(0.0, 10.0, 0, 0, 99.0, "t", lambda n: None)
+    (f2,) = fab2._flows.values()
+    assert f2.rate == 99.0          # strictly tighter cap wins the tie
+
+
+def test_insertion_order_does_not_change_rates():
+    """Classes are visited in sorted-signature order, so the allocation
+    cannot depend on the order flows happened to be created in."""
+    links = LinkCapacities(pod_up=300.0, pod_down=300.0, wan=80.0)
+    script = [(0, 1, 35.0, "x"), (0, 0, 110.0, "y"), (None, 1, 35.0, "z"),
+              (1, 0, 35.0, "w"), (0, 1, 20.0, "v")]
+    rates = []
+    for order in (script, list(reversed(script))):
+        fab, _k, _ = _bare(links)
+        for src, dst, cap, kind in order:
+            fab.start_flow(0.0, 50.0, src, dst, cap, kind, lambda n: None)
+        rates.append(sorted((f.kind, f.rate)
+                            for f in fab._flows.values()))
+    assert rates[0] == rates[1]
+
+
+# ------------------------------------------------- bounded completion log --
+def test_log_limit_bounds_memory_and_counts_drops():
+    for allocator in ALLOCATORS:
+        fab, k, _ = _bare(cfg=FabricConfig(allocator=allocator,
+                                           log_limit=3))
+        for i in range(8):
+            fab.start_flow(0.0, 10.0 + i, 0, 1, 35.0, "t", lambda n: None)
+        k.run()
+        s = fab.summary
+        assert s.n_flows == 8
+        assert len(s.completion_log) == 3
+        assert s.log_dropped == 5
+        assert s.by_kind["t"][0] == 8   # aggregates are never truncated
+
+
+def test_log_limit_in_simulation():
+    cluster = make_cluster((4, 4), links=fabric_links((4, 4),
+                                                      wan_oversub=8.0))
+    jobs = small_workload(cluster, seed=11, n_jobs=6)
+    algo = make_algorithm("fifo", cluster)
+    cfg = SimConfig(fabric=FabricConfig(log_limit=10))
+    res = Simulator(cluster, algo, jobs, config=cfg, seed=11).run()
+    assert res.fabric.n_flows > 10
+    assert len(res.fabric.completion_log) == 10
+    assert res.fabric.log_dropped == res.fabric.n_flows - 10
