@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_dispatch, bench_elastic, bench_engine,
-                            bench_fabric, bench_filtering,
+                            bench_fabric, bench_filtering, bench_migration,
                             bench_mixed_workload, bench_overhead,
                             bench_small_workload, bench_threshold)
 
@@ -34,6 +34,7 @@ def main(argv=None) -> int:
         "dispatch": lambda: bench_dispatch.run(quick=args.quick),
         "elastic": lambda: bench_elastic.run(quick=args.quick),
         "fabric": lambda: bench_fabric.run(quick=args.quick),
+        "migration": lambda: bench_migration.run(quick=args.quick),
         "engine": lambda: bench_engine.run(),
     }
     picked = (args.only.split(",") if args.only else list(sections))

@@ -36,6 +36,20 @@ allocator's contended events/s at that point are re-measured and must
 not regress more than ``--threshold`` against the stored value.
 ``--fabric-perturb`` divides the fresh rate for the gate's self-test.
 
+PR 6 adds the **migration gate** on the ``migration`` row of
+``BENCH_elastic.json`` (written by full ``--only migration`` sweeps):
+the committed claims-probe scenario is re-simulated for every stored
+algorithm, with and without migration, and must re-establish the
+acceptance envelope — kill+requeue loses work, migration holds the
+loss to <= 5% of it and strictly cuts re-executions, and the restore
+path runs at least once across the probe. Like the elastic-WTT gate
+the simulation is deterministic per seed, so the fresh loss / re-exec
+/ migration counters and the migration decision-log signature must
+match the stored row *exactly*: any drift is a behaviour change, to be
+acknowledged by refreshing the row with a full ``--only migration``
+sweep. ``--migration-perturb`` adds MB to the fresh work-lost numbers
+(and poisons the fresh signature) for the gate's self-test.
+
 Exit code: 0 = within budget, 1 = regression (or missing trajectory).
 """
 from __future__ import annotations
@@ -128,6 +142,69 @@ def _fresh_fabric_events_per_s(gate_point: dict, reps: int = 2) -> float:
             map_slots=gate_point.get("map_slots", 2), log_limit=None)
         best = max(best, ev)
     return best
+
+
+def _fresh_migration(stored_mig: dict, perturb: float = 0.0) -> dict:
+    """Re-simulate the committed migration-claims probe for every stored
+    algorithm (deterministic per seed). Returns the same shape as the
+    stored ``algos`` mapping plus a ``signature`` key — the fresh
+    decision-log signature of the scenario's joss-t run. ``perturb``
+    injects artificial work loss (and poisons the signature) for the
+    gate's self-test."""
+    from benchmarks.bench_migration import migration_probe
+    point = dict(stored_mig["probe"])
+    point["hosts_per_pod"] = tuple(point["hosts_per_pod"])
+    fresh: dict = {}
+    for algo in sorted(stored_mig["algos"]):
+        base = migration_probe(algo, migrate=False, point=point)
+        mig = migration_probe(algo, migrate=True, point=point)
+        fresh[algo] = dict(
+            base_lost=base.work_lost_mb + perturb,
+            base_reexec=base.n_reexec,
+            lost=mig.work_lost_mb + perturb,
+            reexec=mig.n_reexec, n_migrated=mig.n_migrated)
+        if algo == "joss-t":
+            sig = mig.migration.signature()
+            fresh["signature"] = sig + "!" if perturb else sig
+    return fresh
+
+
+def compare_migration(stored_mig: dict, fresh: dict) -> list:
+    """Pure comparison for the migration gate: the fresh re-simulation
+    must hold the acceptance envelope AND match the stored row exactly
+    (the probe is deterministic — drift means behaviour changed)."""
+    failures = []
+    total_migrated = 0
+    for algo, s in sorted(stored_mig["algos"].items()):
+        f = fresh[algo]
+        total_migrated += f["n_migrated"]
+        if f["base_lost"] <= 0.0:
+            failures.append(
+                f"migration probe baseline lost nothing for {algo} — "
+                "the committed scenario no longer exercises the gate")
+        if f["lost"] > 0.05 * f["base_lost"]:
+            failures.append(
+                f"migration left {f['lost']:.1f} MB lost for {algo} "
+                f"(> 5% of the {f['base_lost']:.1f} MB baseline)")
+        if f["reexec"] >= f["base_reexec"]:
+            failures.append(
+                f"migration did not cut re-executions for {algo} "
+                f"({f['reexec']} vs baseline {f['base_reexec']})")
+        for k in ("lost", "reexec", "n_migrated"):
+            if f[k] != s[k]:
+                failures.append(
+                    f"migration {k} drifted for {algo}: {f[k]} vs "
+                    f"stored {s[k]} (behaviour change — refresh the "
+                    "row with a full --only migration sweep)")
+    if total_migrated <= 0:
+        failures.append("migration probe never exercised the restore "
+                        "path (n_migrated == 0 across all algorithms)")
+    if fresh["signature"] != stored_mig["signature"]:
+        failures.append(
+            "migration decision-log signature drifted "
+            f"({fresh['signature'][:12]}... vs stored "
+            f"{stored_mig['signature'][:12]}...)")
+    return failures
 
 
 def compare_fabric(stored: dict, fresh_events: float,
@@ -226,6 +303,9 @@ def main(argv=None) -> int:
     ap.add_argument("--fabric-perturb", type=float, default=1.0,
                     help="divide the fresh fabric events/s (gate "
                          "self-test)")
+    ap.add_argument("--migration-perturb", type=float, default=0.0,
+                    help="MB of artificial work loss added to the fresh "
+                         "migration probe (gate self-test)")
     args = ap.parse_args(argv)
 
     try:
@@ -280,13 +360,27 @@ def main(argv=None) -> int:
                                 args.wtt_threshold)
     failures += compare_fabric(stored_fabric, fresh_fabric,
                                args.threshold)
+
+    stored_mig = stored_elastic.get("migration")
+    if stored_mig is None:
+        failures.append("BENCH_elastic.json has no migration row — run a "
+                        "full --only migration sweep to commit the gate")
+    else:
+        fresh_mig = _fresh_migration(stored_mig, args.migration_perturb)
+        for algo in sorted(stored_mig["algos"]):
+            f = fresh_mig[algo]
+            print(f"[bench-regression] migration {algo}: "
+                  f"{f['lost']:.1f} MB lost / {f['reexec']} re-exec / "
+                  f"{f['n_migrated']} migrated (baseline "
+                  f"{f['base_lost']:.1f} MB / {f['base_reexec']})")
+        failures += compare_migration(stored_mig, fresh_mig)
     for f in failures:
         print(f"[bench-regression] FAIL: {f}")
     if not failures:
         print(f"[bench-regression] OK: trajectory held within "
               f"{args.threshold:.0%} at every gated perf point "
-              f"(dispatch + fabric) and {args.wtt_threshold:.2%} at "
-              f"every elastic WTT point")
+              f"(dispatch + fabric), {args.wtt_threshold:.2%} at every "
+              f"elastic WTT point, and bit-exact at the migration probe")
     return 1 if failures else 0
 
 

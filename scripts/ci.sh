@@ -24,6 +24,17 @@
 #                      margin probe, flow-completion determinism, and
 #                      the allocator speedup floor — all asserted inside
 #                      bench_fabric
+#   migration-claims — graceful-preemption claims, all asserted inside
+#                      bench_migration: the notice-window sweep is
+#                      monotone (more warning, less work lost), the
+#                      claims probe holds losses to <= 5% of the
+#                      kill+requeue baseline with strictly fewer
+#                      re-executions for all five algorithms, the
+#                      restore path runs, migration traffic is bounded,
+#                      zero-notice runs are bit-identical to
+#                      no-migration runs, decisions are deterministic
+#                      per seed, and fleet compaction cuts VPS-hours
+#                      and WTT on the straggler tail without losing work
 #   bench-regression — fresh dispatch sweep vs the committed
 #                      BENCH_dispatch.json trajectory (>25% regression at
 #                      the 4096/8192-host points fails) + re-simulated
@@ -31,7 +42,11 @@
 #                      behaviour change, tolerance 0.1%) + fresh
 #                      contended fabric events/s vs the BENCH_fabric.json
 #                      gate point (which must also hold the 5x
-#                      fast-vs-reference acceptance envelope)
+#                      fast-vs-reference acceptance envelope) + the
+#                      migration row of BENCH_elastic.json re-simulated
+#                      bit-exactly (loss/re-exec/restore counters and
+#                      the decision-log signature must match, and the
+#                      <= 5% loss envelope must hold)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -59,5 +74,6 @@ stage tier-1 python -m pytest -x -q
 stage claim-checks python -m benchmarks.run --quick --only overhead,dispatch,small
 stage elastic-claims python -m benchmarks.run --quick --only elastic
 stage fabric-claims python -m benchmarks.run --quick --only fabric
+stage migration-claims python -m benchmarks.run --quick --only migration
 stage bench-regression python scripts/check_bench_regression.py
 echo "== CI green: $((SECONDS))s total =="

@@ -23,8 +23,14 @@ class Joss:
 
     def __init__(self, cluster: VirtualCluster,
                  registry: Optional[FpRegistry] = None,
-                 td: Optional[float] = None):
+                 td: Optional[float] = None,
+                 replan_on_scaleout: bool = False):
         self.cluster = cluster
+        #: PR 6 satellite: opt-in scale-out re-planning — pull queued maps
+        #: toward a freshly-joined host's pod so new capacity attracts
+        #: work. Off by default: rejoin joins fire ``host_added`` in the
+        #: golden churn variants, whose trajectories must stay unchanged.
+        self.replan_on_scaleout = replan_on_scaleout
         self.scheduler = JossScheduler(cluster, registry=registry, td=td)
         self.assigner: BaseAssigner = self.assigner_cls(
             cluster, self.scheduler.queues)
@@ -66,7 +72,18 @@ class Joss:
     # -- elastic-cluster interface (PR 2) ----------------------------------------
     def host_added(self, hid: HostId) -> None:
         """A fresh VPS joined. It starts with an empty local disk (no shard
-        replicas), so no locality index needs patching."""
+        replicas), so no locality index needs patching. With
+        ``replan_on_scaleout`` the join also pulls queued maps from the
+        most-backlogged other pod into this pod's queue when this pod has
+        none — otherwise the new host idles until a new job happens to be
+        scheduled here."""
+        if not self.replan_on_scaleout:
+            return
+        queues = self.scheduler.queues
+        if queues.pods[hid.pod].map_load.n > 0:
+            return      # the pod already has work for the newcomer
+        host = self.cluster.host(hid)
+        queues.rebalance_to_pod(hid.pod, 2 * host.map_slots)
 
     def host_lost(self, hid: HostId) -> None:
         """A VPS departed: patch the locality indexes incrementally and, if

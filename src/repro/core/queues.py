@@ -531,6 +531,37 @@ class ClusterQueues:
         p.gc()
         return n_maps, n_reds
 
+    def rebalance_to_pod(self, dst: int, n: int) -> int:
+        """Scale-out re-planning (PR 6 satellite): pull up to ``n`` queued
+        map tasks from the most-backlogged *other* pod into ``dst``'s
+        permanent map queue, so a freshly-leased host in a previously
+        empty pod attracts work before new jobs arrive. Tasks move from
+        the donor's queue tails (its own hosts keep draining the heads,
+        so FIFO fairness at the donor is preserved); appending re-indexes
+        them against the current replica map, restoring whatever locality
+        ``dst`` offers. Returns the number of maps moved."""
+        if n <= 0:
+            return 0
+        donors = [c for c, p in self.pods.items()
+                  if c != dst and p.map_load.n > 0]
+        if not donors:
+            return 0
+        donor = self.pods[max(donors,
+                              key=lambda c: (self.pods[c].map_load.n, -c))]
+        dq = self.pods[dst].mq0
+        moved = 0
+        for q in reversed(donor.map_queues):
+            if moved >= n:
+                break
+            tasks = list(q)
+            take = tasks[max(0, len(tasks) - (n - moved)):]
+            for t in take:
+                q.remove(t)
+                dq.append(t)
+                moved += 1
+        donor.gc()
+        return moved
+
     def least_loaded_pod(self) -> int:
         """cen_w: least unprocessed tasks (Fig. 4 line 9); ties -> lowest id.
 

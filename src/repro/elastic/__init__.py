@@ -11,6 +11,7 @@ them to the discrete-event simulator (``engine``).
 this package is the scheduling/simulation side.)
 """
 from repro.elastic.autoscaler import (Autoscaler, BacklogThresholdScaler,
+                                      CompactingScaler,
                                       CostCappedSpotScaler, FixedFleet,
                                       FleetObservation, ScaleDecision)
 from repro.elastic.churn import ChurnConfig, ChurnEvent, ChurnModel
@@ -21,14 +22,18 @@ from repro.elastic.engine import (ElasticActions, ElasticEngine,
                                   ElasticSubsystem, ElasticSummary)
 from repro.elastic.leases import (ON_DEMAND, SPOT, Lease, LeaseBook,
                                   PriceSheet)
+from repro.elastic.migration import (MigrationConfig, MigrationSubsystem,
+                                     MigrationSummary)
 
 __all__ = [
-    "Autoscaler", "BacklogThresholdScaler", "CostCappedSpotScaler",
-    "FixedFleet", "FleetObservation", "ScaleDecision",
+    "Autoscaler", "BacklogThresholdScaler", "CompactingScaler",
+    "CostCappedSpotScaler", "FixedFleet", "FleetObservation",
+    "ScaleDecision",
     "ChurnConfig", "ChurnEvent", "ChurnModel",
     "DurabilityConfig", "DurabilityManager", "DurabilitySubsystem",
     "DurabilitySummary", "RerepEvent",
     "ElasticActions", "ElasticEngine", "ElasticSubsystem",
     "ElasticSummary",
+    "MigrationConfig", "MigrationSubsystem", "MigrationSummary",
     "ON_DEMAND", "SPOT", "Lease", "LeaseBook", "PriceSheet",
 ]

@@ -18,6 +18,11 @@ Shipped policies:
   * ``CostCappedSpotScaler``  — same triggers, but growth uses spot leases
     and stops at a dollar budget; spot leases are never renewed once the
     budget is spent.
+  * ``CompactingScaler``      — backlog scaler that additionally *drains*
+    lightly-loaded hosts once the backlog is gone (PR 6): the migration
+    subsystem moves their remaining work elsewhere, after which they show
+    up idle and are released by the normal scale-in path — leases end
+    early instead of idling out their last task.
 """
 from __future__ import annotations
 
@@ -45,6 +50,10 @@ class FleetObservation:
     vps_hours: float
     idle_hosts: Tuple[HostId, ...] = ()   # fully-idle hosts, newest lease
     #                                       first (engine sorts by the book)
+    #: hosts with exactly one occupied slot (PR 6 compaction candidates),
+    #: newest lease first; populated only for ``needs_light_hosts``
+    #: policies and never includes already-draining hosts
+    light_hosts: Tuple[HostId, ...] = ()
 
     @property
     def backlog(self) -> int:
@@ -53,15 +62,18 @@ class FleetObservation:
 
 @dataclasses.dataclass(frozen=True)
 class ScaleDecision:
-    """add N hosts of `kind`, and/or remove the given (idle) hosts."""
+    """add N hosts of `kind`, remove the given (idle) hosts, and/or drain
+    the given lightly-loaded hosts (PR 6: migrate their work off so the
+    next ticks find them idle and can remove them)."""
 
     add: int = 0
     kind: str = ON_DEMAND
     remove: Tuple[HostId, ...] = ()
+    drain: Tuple[HostId, ...] = ()
 
     @property
     def empty(self) -> bool:
-        return self.add == 0 and not self.remove
+        return self.add == 0 and not self.remove and not self.drain
 
 
 class Autoscaler:
@@ -72,6 +84,8 @@ class Autoscaler:
     interval: Optional[float] = None
     #: whether decide() wants idle_hosts populated (costs O(hosts)/tick)
     needs_idle_hosts = False
+    #: whether decide() wants light_hosts populated (same fleet walk)
+    needs_light_hosts = False
 
     def decide(self, obs: FleetObservation) -> ScaleDecision:
         return ScaleDecision()
@@ -163,3 +177,44 @@ class CostCappedSpotScaler(BacklogThresholdScaler):
         if kind == SPOT and obs.cost >= self.budget:
             return False
         return super().renew_lease(hid, kind, obs)
+
+
+class CompactingScaler(BacklogThresholdScaler):
+    """Backlog scaler + proactive fleet compaction (PR 6).
+
+    Once the backlog drains, hosts running a *single* task are tail
+    capacity: one straggler pins a whole lease. Draining up to
+    ``drain_step`` hosts per tick (idle hosts first — their disks may
+    still hold shuffle inputs — then single-task hosts, newest lease
+    first) asks the migration subsystem to move that work off; scale-in
+    is gated on the drain, releasing only hosts drained on an *earlier*
+    tick, so a lease ends with an evacuated disk instead of destroying
+    finished map output the way the inherited kill-cold scale-in does.
+    Drains are requested at most once per host (the ``_draining`` set),
+    so an undrainable host is not hammered every tick. Requires the
+    migration subsystem; without it a drain request is a no-op (no hook
+    listens) and nothing is ever removed.
+    """
+
+    name = "compact"
+    needs_light_hosts = True
+
+    def __init__(self, *, drain_step: Optional[int] = None, **kw):
+        super().__init__(**kw)
+        # match the scale-in step by default, else the fleet decays at
+        # half the inherited policy's rate (drains gate removals 1:1)
+        self.drain_step = self.step if drain_step is None else drain_step
+        self._draining = set()
+
+    def decide(self, obs: FleetObservation) -> ScaleDecision:
+        dec = super().decide(obs)
+        if obs.backlog == 0 and obs.n_hosts > self.min_hosts:
+            ready = tuple(h for h in dec.remove if h in self._draining)
+            spare = obs.n_hosts - self.min_hosts - len(ready)
+            fresh = [h for h in obs.idle_hosts if h not in self._draining]
+            light = [h for h in obs.light_hosts if h not in self._draining]
+            cands = (fresh + light)[:max(0, min(self.drain_step, spare))]
+            self._draining.update(cands)
+            dec = dataclasses.replace(dec, remove=ready,
+                                      drain=tuple(cands))
+        return dec

@@ -16,6 +16,14 @@ Event kinds (the tenant-visible ways a rented VPS comes and goes):
   * ``expire``  — a lease term ends; the autoscaler decides renewal
     (renewed leases schedule their next expiry, non-renewed hosts depart).
   * ``join``    — a replacement/ordered VPS comes up in a pod.
+  * ``notice``  — advance warning of a coming ``preempt``/``expire``
+    (PR 6): real providers announce spot reclaims 30-120 s ahead.
+    Notices are derived events — ``notice_for`` places one exactly
+    ``preempt_notice``/``expire_notice`` seconds before the kill it
+    announces, consuming **no RNG draws**, so enabling notices moves no
+    kill time and a zero window (the default) emits nothing at all
+    (bit-identity with the pre-notice trace). ``fail`` events are
+    unannounced by definition.
 
 The initial trace is sampled host-by-host in (pod, index) order, so it is
 a pure function of the config and the initial fleet shape.
@@ -37,9 +45,12 @@ class ChurnEvent:
     """One scheduled fleet mutation (times in sim seconds)."""
 
     time: float
-    kind: str              # "fail" | "preempt" | "expire" | "join"
+    kind: str              # "fail" | "preempt" | "expire" | "join" | "notice"
     pod: int
     index: Optional[int]   # host index within the pod; None for "join"
+    # -- notice events only (PR 6) -------------------------------------------
+    target: Optional[str] = None     # the announced kind (preempt/expire)
+    deadline: Optional[float] = None  # when the announced kill lands
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +64,10 @@ class ChurnConfig:
     spot_fraction: float = 0.0     # fraction of the initial fleet on spot
     spot_preempt_rate: float = 0.0  # preemptions / spot-host-hour
     lease_term: Optional[float] = None  # lease length (s); None = open-ended
+    # notice windows (PR 6): seconds of advance warning before a preempt/
+    # expire lands. 0 = no notice events at all (bit-identity default).
+    preempt_notice: float = 0.0
+    expire_notice: float = 0.0
 
     @property
     def enabled(self) -> bool:
@@ -88,6 +103,27 @@ class ChurnModel:
             return None
         t = now + self._exp_delay(self.cfg.spot_preempt_rate)
         return t if t < self.cfg.horizon else None
+
+    def notice_for(self, ev: ChurnEvent, now: float
+                   ) -> Optional[ChurnEvent]:
+        """Advance-warning event for ``ev`` (PR 6), or None.
+
+        Pure arithmetic on the already-drawn kill time — no RNG draw —
+        so adding notices never moves a kill and disabling them (window
+        0, the default) leaves the trace untouched. A window longer
+        than the remaining lead time clamps to ``now`` (the notice
+        arrives immediately; the drain gets whatever time is left)."""
+        if ev.kind == "preempt":
+            window = self.cfg.preempt_notice
+        elif ev.kind == "expire":
+            window = self.cfg.expire_notice
+        else:
+            return None             # failures are unannounced
+        if window <= 0.0 or ev.index is None:
+            return None
+        return ChurnEvent(max(now, ev.time - window), "notice",
+                          ev.pod, ev.index, target=ev.kind,
+                          deadline=ev.time)
 
     def failure_after(self, now: float) -> Optional[float]:
         if self.cfg.fail_rate <= 0:

@@ -262,6 +262,11 @@ class DurabilitySubsystem(Subsystem):
             hook = getattr(self.sim.algo, "replica_restored", None)
             if hook is not None:
                 hook(ev.shard_id, tgt, pod_covered)
+            # locality repair (PR 6): a fresh copy may make a running
+            # off-pod map worth migrating toward it
+            mig = getattr(self.sim, "migration", None)
+            if mig is not None:
+                mig.replica_landed(ev.shard_id, tgt, now)
 
     # -- fabric-mode repair pipeline ----------------------------------------------
     def _pump(self, now: float) -> None:

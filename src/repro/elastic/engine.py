@@ -43,6 +43,12 @@ class ElasticActions:
     losses: List[Tuple[HostId, str]] = dataclasses.field(default_factory=list)
     adds: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
     followups: List[ChurnEvent] = dataclasses.field(default_factory=list)
+    #: (host, announced kill time, announced kind) per notice to deliver
+    #: to the migration seam (PR 6)
+    notices: List[Tuple[HostId, float, str]] = dataclasses.field(
+        default_factory=list)
+    #: hosts the autoscaler wants proactively drained (fleet compaction)
+    drains: List[HostId] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -55,6 +61,9 @@ class ElasticSummary:
     n_host_adds: int = 0
     n_host_losses: int = 0
     n_vetoed: int = 0
+    #: scale-in victims dropped at *apply* time because they were no
+    #: longer idle (the observation race fix, PR 6 satellite)
+    n_stale_victims: int = 0
     peak_hosts: int = 0
     #: DurabilitySummary when the run had a durability manager (PR 3)
     durability: object = None
@@ -72,9 +81,14 @@ class ElasticEngine:
                  churn: Optional[ChurnConfig] = None,
                  autoscaler: Optional[Autoscaler] = None,
                  prices: Optional[PriceSheet] = None,
-                 durability: Optional[DurabilityConfig] = None):
+                 durability: Optional[DurabilityConfig] = None,
+                 migration=None):
         self.cluster = cluster
         self.churn_cfg = churn
+        # PR 6: MigrationConfig (or None). The simulator attaches the
+        # MigrationSubsystem when this is set and enabled; the engine
+        # itself never touches it (migration is simulator mechanics).
+        self.migration_cfg = migration
         self.model = ChurnModel(churn) if churn is not None else None
         self.autoscaler = autoscaler or Autoscaler()
         # policies carry run-scoped state (cooldown clocks in absolute sim
@@ -135,6 +149,13 @@ class ElasticEngine:
         self.summary.peak_hosts = self._live_hosts()
         return events
 
+    def notice_for(self, ev: ChurnEvent, now: float
+                   ) -> Optional[ChurnEvent]:
+        """Advance-warning event for a scheduled kill (PR 6), or None."""
+        if self.model is None:
+            return None
+        return self.model.notice_for(ev, now)
+
     def on_churn(self, ev: ChurnEvent, obs: FleetObservation
                  ) -> ElasticActions:
         out = ElasticActions()
@@ -142,6 +163,19 @@ class ElasticEngine:
             out.adds.append((ev.pod, ON_DEMAND))
             return out
         hid = HostId(ev.pod, ev.index)
+        if ev.kind == "notice":
+            if not self.cluster.has_host(hid):
+                return out          # announced host already departed
+            if ev.target == "expire":
+                # pre-run the renewal decision: a lease the policy will
+                # renew anyway should not trigger a drain. renew_lease is
+                # pure for every shipped policy, so asking here and again
+                # at the actual expiry is safe.
+                kind = self.book.kind_of(hid) or ON_DEMAND
+                if self.autoscaler.renew_lease(hid, kind, obs):
+                    return out
+            out.notices.append((hid, ev.deadline, ev.target))
+            return out
         if ev.kind in ("fail", "preempt"):
             if not self._veto_loss(hid):
                 out.losses.append((hid, ev.kind))
@@ -181,6 +215,11 @@ class ElasticEngine:
             pod = self._pick_pod(pending_adds)
             pending_adds[pod] = pending_adds.get(pod, 0) + 1
             out.adds.append((pod, dec.kind))
+        for hid in dec.drain:
+            # proactive compaction (PR 6): drain lightly-loaded hosts so
+            # their leases can be released early once migrated off
+            if self.cluster.has_host(hid):
+                out.drains.append(hid)
         return out
 
     def applied_add(self, hid: HostId, kind: str, now: float
@@ -219,21 +258,24 @@ class ElasticEngine:
 
     def observe(self, now: float, *, map_backlog: int, red_backlog: int,
                 busy_hosts: int,
-                idle_hosts: Tuple[HostId, ...] = ()) -> FleetObservation:
+                idle_hosts: Tuple[HostId, ...] = (),
+                light_hosts: Tuple[HostId, ...] = ()) -> FleetObservation:
+        # newest lease first (the book knows true lease starts; a raw
+        # host index is only recency-ordered within one pod), so
+        # scale-in/compaction policies can return surge capacity before
+        # base hosts just by taking a prefix
+        leases = self.book.open_leases
+        recency = lambda h: (-leases[h].start, h.pod, h.index)
         if idle_hosts:
-            # newest lease first (the book knows true lease starts; a raw
-            # host index is only recency-ordered within one pod), so
-            # scale-in policies can return surge capacity before base
-            # hosts just by taking a prefix
-            leases = self.book.open_leases
-            idle_hosts = tuple(sorted(
-                idle_hosts,
-                key=lambda h: (-leases[h].start, h.pod, h.index)))
+            idle_hosts = tuple(sorted(idle_hosts, key=recency))
+        if light_hosts:
+            light_hosts = tuple(sorted(light_hosts, key=recency))
         return FleetObservation(
             now=now, n_hosts=self._live_hosts(),
             map_backlog=map_backlog, red_backlog=red_backlog,
             busy_hosts=busy_hosts, cost=self.book.cost(now),
-            vps_hours=self.book.vps_hours(now), idle_hosts=idle_hosts)
+            vps_hours=self.book.vps_hours(now), idle_hosts=idle_hosts,
+            light_hosts=light_hosts)
 
     def finalize(self, now: float) -> ElasticSummary:
         self.book.close_all(now)
@@ -265,14 +307,32 @@ class ElasticSubsystem(Subsystem):
 
     def start(self, now: float) -> None:
         for ev in self.engine.startup(now):
-            self.kernel.push(ev.time, "churn", ev)
+            self._push_churn(ev, now)
         tick = getattr(self.engine.autoscaler, "interval", None)
         if tick:
             self.kernel.push(now + tick, "scale", None)
 
+    def _push_churn(self, ev: ChurnEvent, now: float) -> None:
+        """Schedule a churn event plus its advance notice (PR 6), if the
+        configured notice window produces one. Zero windows (the default)
+        produce none, keeping the pre-notice event stream bit-identical."""
+        self.kernel.push(ev.time, "churn", ev)
+        notice = self.engine.notice_for(ev, now)
+        if notice is not None:
+            self.kernel.push(notice.time, "churn", notice)
+
     def _on_churn(self, now: float, ev: ChurnEvent) -> None:
         self._apply(self.engine.on_churn(
             ev, self.sim.fleet_observation(now)), now)
+        if (self.sim._hooks_host_survived
+                and ev.kind in ("preempt", "expire")
+                and ev.index is not None):
+            # the announced kill did not remove the host (veto or lease
+            # renewal): tell the migration seam to undrain it
+            hid = HostId(ev.pod, ev.index)
+            if self.sim.cluster.has_host(hid):
+                for h in self.sim._hooks_host_survived:
+                    h(hid, now)
 
     def _on_scale(self, now: float, _payload) -> None:
         if self.sim.unfinished > 0:
@@ -284,11 +344,23 @@ class ElasticSubsystem(Subsystem):
     def _apply(self, actions: ElasticActions, now: float) -> None:
         engine = self.engine
         for hid, reason in actions.losses:
+            if reason == "scale_in" and not self.sim.host_is_idle(hid):
+                # observation race (PR 6 satellite): the victim picked up
+                # work between the autoscale observation and now — veto at
+                # apply time rather than killing fresh tasks
+                engine.summary.n_stale_victims += 1
+                continue
             self.sim.lose_host(hid, now)
             engine.applied_loss(hid, now, reason)
         for pod, kind in actions.adds:
             hid = self.sim.add_host(pod, kind, now)
             for fev in engine.applied_add(hid, kind, now):
-                self.kernel.push(fev.time, "churn", fev)
+                self._push_churn(fev, now)
         for fev in actions.followups:
-            self.kernel.push(fev.time, "churn", fev)
+            self._push_churn(fev, now)
+        for hid, deadline, target in actions.notices:
+            for h in self.sim._hooks_host_notice:
+                h(hid, deadline, target, now)
+        for hid in actions.drains:
+            for h in self.sim._hooks_host_notice:
+                h(hid, None, "compact", now)

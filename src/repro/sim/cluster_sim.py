@@ -86,6 +86,9 @@ class TaskLog:
     bytes_pod: float = 0.0
     bytes_offpod: float = 0.0
     speculative: bool = False
+    #: attempt restored from migrated state (PR 6) — resumed partway, so
+    #: re-execution stats must not count it as a cold re-run
+    migrated: bool = False
 
 
 @dataclasses.dataclass
@@ -118,6 +121,11 @@ class SimResult:
     fabric_mb: float = 0.0      # MB drained through the fabric
     fabric_stall_s: float = 0.0  # transfer time lost to link contention
     wan_util: float = 0.0       # mean shared-WAN utilization over the run
+    # -- migration outputs (PR 6; all zero/None without the subsystem) -------
+    migration: object = None    # MigrationSummary when run with migration
+    n_migrated: int = 0         # tasks restored from shipped state
+    migrate_mb: float = 0.0     # migration state traffic (MB)
+    n_mig_aborted: int = 0      # migrations abandoned (races, lost hosts)
 
     def jtt(self, job: Job) -> float:
         return self.job_finish[job.job_id] - self.job_submit[job.job_id]
@@ -239,6 +247,10 @@ class Simulator:
         self._store_read_maps: set = set()
         # fabric mode: in-flight flow per task tid (cancelled on kill)
         self._task_flows: Dict[object, int] = {}
+        # migration (PR 6): draining hosts keep their slot counters but
+        # leave the free-offer sets, so dispatch stops feeding them
+        self.draining: set = set()
+        self.migration = None
 
         subs: List[Subsystem] = []
         if self.elastic is not None:
@@ -247,6 +259,11 @@ class Simulator:
             subs.append(ElasticSubsystem(self.elastic))
             if self.dur is not None:
                 subs.append(DurabilitySubsystem(self.dur))
+            mig_cfg = getattr(self.elastic, "migration_cfg", None)
+            if mig_cfg is not None and mig_cfg.enabled:
+                from repro.elastic.migration import MigrationSubsystem
+                self.migration = MigrationSubsystem(mig_cfg)
+                subs.append(self.migration)
         # fast (class-aggregated) or reference allocator, per the config
         self.fabric = None
         if cfg.fabric is not None:
@@ -262,6 +279,8 @@ class Simulator:
                     if getattr(type(s), name) is not getattr(Subsystem, name)]
         self._hooks_host_added = overridden("on_host_added")
         self._hooks_host_lost = overridden("on_host_lost")
+        self._hooks_host_notice = overridden("on_host_notice")
+        self._hooks_host_survived = overridden("on_host_survived")
         self._hooks_task_start = overridden("on_task_start")
         self._hooks_task_finish = overridden("on_task_finish")
         self._hooks_tick = overridden("on_tick")
@@ -275,11 +294,42 @@ class Simulator:
             return self.cfg.slow_hosts.get(hid, 1.0)
         return 1.0
 
+    # ------------------------------------------------ draining (PR 6) --
+    def drain_host(self, hid: HostId) -> None:
+        """Stop offering ``hid`` to dispatch (slot counters stay live, so
+        running tasks finish normally and idleness is still observable)."""
+        self.draining.add(hid)
+        self.free_map_hosts.discard(hid)
+        self.free_red_hosts.discard(hid)
+
+    def undrain_host(self, hid: HostId) -> None:
+        """Reopen a drained host (notice cancelled / nothing to move)."""
+        self.draining.discard(hid)
+        if self.cluster.has_host(hid):
+            if self.map_free.get(hid, 0) > 0:
+                self.free_map_hosts.add(hid)
+            if self.red_free.get(hid, 0) > 0:
+                self.free_red_hosts.add(hid)
+
+    def host_is_idle(self, hid: HostId) -> bool:
+        """True iff the host is alive with every slot free (used to
+        re-validate scale-in victims at apply time)."""
+        if not self.cluster.has_host(hid):
+            return False
+        h = self.cluster.host(hid)
+        return (self.map_free[hid] == h.map_slots
+                and self.red_free[hid] == h.reduce_slots)
+
     # --------------------------------------------------------- task starts --
-    def _start_map(self, t: MapTask, hid: HostId, now: float):
+    def _start_map(self, t: MapTask, hid: HostId, now: float,
+                   resume_frac: Optional[float] = None):
+        """``resume_frac`` (PR 6): the attempt restores migrated state and
+        only the remaining ``1 - resume_frac`` of input is read/computed
+        (and of output persisted); None = a normal cold start."""
         cfg = self.cfg
         job = self.job_by_id[t.job_id]
         size = job.shard_bytes[t.index]
+        rem = size if resume_frac is None else size * (1.0 - resume_frac)
         store_read = t.tid in self._store_read_maps
         src = None
         if store_read:
@@ -293,24 +343,26 @@ class Simulator:
         else:
             loc = Locality.OFF_POD
         if self.fabric is not None:
-            return self._start_map_fabric(t, hid, now, job, size, loc,
-                                          src, store_read)
+            return self._start_map_fabric(t, hid, now, job, rem, loc,
+                                          src, store_read,
+                                          migrated=resume_frac is not None)
         if store_read:
-            read_t = size / min(cfg.pod_bw, self.dur.cfg.ckpt_read_bw)
+            read_t = rem / min(cfg.pod_bw, self.dur.cfg.ckpt_read_bw)
         else:
-            read_t = size / cfg.read_bw(loc)
-        comp_t = size / cfg.map_rate * job.cost_scale
+            read_t = rem / cfg.read_bw(loc)
+        comp_t = rem / cfg.map_rate * job.cost_scale
         write_t = 0.0
         if self.ckpt_on and self.dur.checkpoints_job(job):
             # synchronous persist of the map output to the pod object
             # store before the task reports done (PR 3 checkpointing)
-            write_t = size * job.true_fp / self.dur.cfg.ckpt_write_bw
+            write_t = rem * job.true_fp / self.dur.cfg.ckpt_write_bw
         dur_s = (cfg.task_overhead + read_t + comp_t + write_t) \
             * self._host_slow(hid)
         t.state = TaskState.RUNNING
         t.host, t.locality = hid, loc
-        log = TaskLog(job, t, hid, now, now + dur_s, loc)
-        self._account_map_bytes(log, loc, size)
+        log = TaskLog(job, t, hid, now, now + dur_s, loc,
+                      migrated=resume_frac is not None)
+        self._account_map_bytes(log, loc, rem)
         self.running[t.tid] = log
         left = self.map_free[hid] - 1
         self.map_free[hid] = left
@@ -333,17 +385,20 @@ class Simulator:
 
     def _start_map_fabric(self, t: MapTask, hid: HostId, now: float,
                           job: Job, size: float, loc: Locality,
-                          src: Optional[HostId], store_read: bool):
+                          src: Optional[HostId], store_read: bool,
+                          migrated: bool = False):
         """Fabric-mode map: overhead -> input transfer (flow, unless
         host-local) -> compute -> checkpoint write (flow) -> done. Fixed
         stages ride ``kernel.call_at``; transfers drain through the
         fabric. The host slowdown factor applies to local work (overhead,
-        disk read, compute) — network time is the fabric's to decide."""
+        disk read, compute) — network time is the fabric's to decide.
+        ``size`` is the bytes this attempt still has to process (already
+        discounted for migrated restores)."""
         cfg = self.cfg
         slow = self._host_slow(hid)
         t.state = TaskState.RUNNING
         t.host, t.locality = hid, loc
-        log = TaskLog(job, t, hid, now, 0.0, loc)
+        log = TaskLog(job, t, hid, now, 0.0, loc, migrated=migrated)
         self._account_map_bytes(log, loc, size)
         self.running[t.tid] = log
         left = self.map_free[hid] - 1
@@ -411,17 +466,25 @@ class Simulator:
         if fid >= 0:
             self._task_flows[tid] = fid
 
-    def _start_reduce(self, t: ReduceTask, hid: HostId, now: float):
+    def _start_reduce(self, t: ReduceTask, hid: HostId, now: float,
+                      resume_frac: Optional[float] = None):
+        """``resume_frac`` (PR 6): restore from migrated state — only the
+        remaining fraction of each shuffle fetch and of the compute runs,
+        and the job's unassigned-reduce counter is left alone (the
+        original attempt already claimed the assignment)."""
         cfg = self.cfg
         job = self.job_by_id[t.job_id]
         fp = job.true_fp
         r = len(job.reduce_tasks)
+        scale = 1.0 if resume_frac is None else (1.0 - resume_frac)
         if self.fabric is not None:
-            return self._start_reduce_fabric(t, hid, now, job, fp, r)
-        log = TaskLog(job, t, hid, now, 0.0, None)
+            return self._start_reduce_fabric(t, hid, now, job, fp, r,
+                                             resume_frac=resume_frac)
+        log = TaskLog(job, t, hid, now, 0.0, None,
+                      migrated=resume_frac is not None)
         read_t = 0.0
         for (src, out_bytes, _mi) in self.map_out[job.job_id]:
-            share = out_bytes * fp / r
+            share = out_bytes * fp / r * scale
             if self.ckpt_on and src in self.departed:
                 # the mapper's disk is gone; its output survives only
                 # in src's pod object store (PR 3 checkpointing). A
@@ -455,7 +518,8 @@ class Simulator:
         t.host = hid
         log.finish = now + dur_s
         self.running[t.tid] = log
-        self.reds_unassigned[t.job_id] -= 1
+        if resume_frac is None:
+            self.reds_unassigned[t.job_id] -= 1
         left = self.red_free[hid] - 1
         self.red_free[hid] = left
         if left == 0:
@@ -466,20 +530,23 @@ class Simulator:
             h(log, now)
 
     def _start_reduce_fabric(self, t: ReduceTask, hid: HostId, now: float,
-                             job: Job, fp: float, r: int):
+                             job: Job, fp: float, r: int,
+                             resume_frac: Optional[float] = None):
         """Fabric-mode reduce: overhead -> sequential shuffle fetches
         (each remote source one flow; local sources read the disk) ->
         compute -> done. Byte counters are charged at start, exactly like
         per-stream mode (the traffic will physically happen)."""
         cfg = self.cfg
         slow = self._host_slow(hid)
-        log = TaskLog(job, t, hid, now, 0.0, None)
+        scale = 1.0 if resume_frac is None else (1.0 - resume_frac)
+        log = TaskLog(job, t, hid, now, 0.0, None,
+                      migrated=resume_frac is not None)
         # (mb, src_pod, per-flow cap, kind) per remote fetch; local
         # fetches contribute fixed disk time instead
         fetches: List[Tuple[float, Optional[int], float, str]] = []
         disk_t = 0.0
         for (src, out_bytes, _mi) in self.map_out[job.job_id]:
-            share = out_bytes * fp / r
+            share = out_bytes * fp / r * scale
             if self.ckpt_on and src in self.departed:
                 if src.pod == hid.pod:
                     log.bytes_pod += share
@@ -511,7 +578,8 @@ class Simulator:
         t.state = TaskState.RUNNING
         t.host = hid
         self.running[t.tid] = log
-        self.reds_unassigned[t.job_id] -= 1
+        if resume_frac is None:
+            self.reds_unassigned[t.job_id] -= 1
         left = self.red_free[hid] - 1
         self.red_free[hid] = left
         if left == 0:
@@ -562,7 +630,8 @@ class Simulator:
                     or now - log.start <= threshold):
                 continue
             cands = [h for h in self.all_hosts
-                     if map_free[h] > 0 and h != log.host]
+                     if map_free[h] > 0 and h != log.host
+                     and h not in self.draining]
             if not cands:
                 continue
             cands.sort(key=lambda h: (h.pod == log.host.pod,
@@ -590,6 +659,8 @@ class Simulator:
         while progress:
             progress = False
             for hid in order:
+                if hid in self.draining:
+                    continue
                 while map_free[hid] > 0:
                     t = algo.next_map_task(hid)
                     if t is None:
@@ -715,6 +786,7 @@ class Simulator:
         gates, and patch every index/offer structure."""
         dead = self.cluster.remove_host(hid)
         self.departed.add(hid)
+        self.draining.discard(hid)
         self.map_free.pop(hid, None)
         self.red_free.pop(hid, None)
         self.free_map_hosts.discard(hid)
@@ -822,23 +894,35 @@ class Simulator:
         never pay it."""
         elastic = self.elastic
         idle: Tuple[HostId, ...] = ()
+        light: Tuple[HostId, ...] = ()
         busy = 0
-        if full and getattr(elastic.autoscaler, "needs_idle_hosts", False):
+        scaler = elastic.autoscaler
+        need_light = full and getattr(scaler, "needs_light_hosts", False)
+        if full and (need_light
+                     or getattr(scaler, "needs_idle_hosts", False)):
             cl = self.cluster
             idle_list = []
+            light_list = []
             for hid in self.all_hosts:
                 h = cl.host(hid)
-                if (self.map_free[hid] == h.map_slots
-                        and self.red_free[hid] == h.reduce_slots):
+                occ = ((h.map_slots - self.map_free[hid])
+                       + (h.reduce_slots - self.red_free[hid]))
+                if occ == 0:
                     idle_list.append(hid)
                 else:
                     busy += 1
+                    # compaction candidates (PR 6): one straggling task
+                    # pins the lease; skip hosts already being drained
+                    if need_light and occ == 1 and hid not in self.draining:
+                        light_list.append(hid)
             idle = tuple(sorted(idle_list,
                                 key=lambda h: (h.pod, h.index)))
+            light = tuple(sorted(light_list,
+                                 key=lambda h: (h.pod, h.index)))
         return elastic.observe(
             now, map_backlog=self.map_backlog,
             red_backlog=self.red_ready_backlog, busy_hosts=busy,
-            idle_hosts=idle)
+            idle_hosts=idle, light_hosts=light)
 
     # ----------------------------------------------------- event handlers --
     def _on_heartbeat(self, now: float, _payload):
@@ -876,7 +960,8 @@ class Simulator:
             # slot waits for the next real event (returning True skips the
             # post-step, matching the old loop's ``continue``)
             self.map_free[log.host] += 1
-            self.free_map_hosts.add(log.host)
+            if log.host not in self.draining:
+                self.free_map_hosts.add(log.host)
             self.algo.task_finished(t)
             return True
         self.done_pairs.add(pair)
@@ -899,7 +984,8 @@ class Simulator:
         self.maps_left[t.job_id] = left
         self.unfinished -= 1
         self.map_free[log.host] += 1
-        self.free_map_hosts.add(log.host)
+        if log.host not in self.draining:
+            self.free_map_hosts.add(log.host)
         self.algo.task_finished(t)
         for h in self._hooks_task_finish:
             h(log, now)
@@ -928,7 +1014,8 @@ class Simulator:
         self.reds_left[t.job_id] -= 1
         self.unfinished -= 1
         self.red_free[log.host] += 1
-        self.free_red_hosts.add(log.host)
+        if log.host not in self.draining:
+            self.free_red_hosts.add(log.host)
         self.algo.task_finished(t)
         for h in self._hooks_task_finish:
             h(log, now)
@@ -973,4 +1060,15 @@ class Simulator:
             res.fabric_mb = fs.mb_total
             res.fabric_stall_s = fs.stall_s
             res.wan_util = fs.link_util.get("wan", 0.0)
+        if self.migration is not None:
+            ms = self.migration.finalize()
+            res.migration = ms
+            res.n_migrated = ms.n_migrated
+            res.migrate_mb = ms.state_mb + ms.out_mb
+            res.n_mig_aborted = ms.n_aborted
+            if ms.storage_dollars:
+                # state parked in the object store while in flight; when
+                # the durability manager billed it already this is zero
+                res.cost_dollars += ms.storage_dollars
+                res.storage_dollars += ms.storage_dollars
         return res

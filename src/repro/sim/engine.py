@@ -47,7 +47,9 @@ A :class:`Subsystem` participates through two seams:
   its initial events after the workload's submits are enqueued.
 * **hooks** — the simulator notifies every attached subsystem of the
   cluster-visible transitions: ``on_host_added`` / ``on_host_lost``
-  (fleet mutation, after the simulator's own bookkeeping), ``on_task_start``
+  (fleet mutation, after the simulator's own bookkeeping),
+  ``on_host_notice`` / ``on_host_survived`` (announced departures and
+  their cancellations — the PR 6 migration seam), ``on_task_start``
   / ``on_task_finish`` (successful attempt transitions only — killed
   attempts are not reported), and ``on_tick`` (every heartbeat). All
   hooks default to no-ops, so a subsystem overrides only what it needs
@@ -155,6 +157,20 @@ class Subsystem:
     def on_host_lost(self, host, now: float) -> None:
         """``host`` (the removed ``topology.Host``) just departed; the
         simulator has finished kill/requeue/gate bookkeeping."""
+
+    def on_host_notice(self, hid, deadline, reason: str,
+                       now: float) -> None:
+        """Advance warning that ``hid`` will depart (PR 6). ``deadline``
+        is the announced kill instant (None for proactive compaction
+        drains), ``reason`` the announced churn kind (``"preempt"`` /
+        ``"expire"``) or ``"compact"``. The host is still alive and its
+        tasks still running — the migration subsystem uses this window
+        to drain and move work."""
+
+    def on_host_survived(self, hid, now: float) -> None:
+        """A previously-noticed departure did not happen (lease renewed,
+        loss vetoed): ``hid`` stays in the fleet and should be undrained;
+        in-flight migrations off it may be abandoned."""
 
     def on_task_start(self, log, now: float) -> None:
         """A task attempt started (``log`` is its ``TaskLog``)."""

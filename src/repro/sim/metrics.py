@@ -55,6 +55,10 @@ class Summary:
     fabric_mb: float = 0.0        # MB drained through the shared fabric
     fabric_stall_s: float = 0.0   # transfer time lost to link contention
     wan_util: float = 0.0         # mean shared-WAN utilization
+    # -- migration outputs (PR 6; zero without the subsystem) ----------------
+    n_migrated: int = 0           # tasks restored from shipped state
+    migrate_mb: float = 0.0       # migration state traffic (MB)
+    n_mig_aborted: int = 0        # transfers abandoned (races, lost hosts)
 
 
 def _bench_of(log) -> str:
@@ -66,12 +70,15 @@ def reexec_map_stats(res: SimResult) -> Tuple[int, int]:
 
     Churn retries only: speculative twins share the attempt counter, so
     ``attempt > 0`` alone would overcount — the ``speculative`` log flag
-    excludes them. The single source of truth for this predicate (the
-    elastic bench and ``Summary.reexec_map_locality`` both use it)."""
+    excludes them, and so does ``migrated`` (PR 6: a restored attempt
+    resumed partway, it did not re-execute). The single source of truth
+    for this predicate (the elastic bench and
+    ``Summary.reexec_map_locality`` both use it)."""
     n = loc = 0
     for log in res.task_logs:
         t = log.task
-        if not isinstance(t, MapTask) or t.attempt == 0 or log.speculative:
+        if (not isinstance(t, MapTask) or t.attempt == 0
+                or log.speculative or log.migrated):
             continue
         n += 1
         if log.locality is not Locality.OFF_POD:
@@ -134,7 +141,9 @@ def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
         storage_dollars=res.storage_dollars,
         reexec_map_locality=reexec_loc,
         fabric_mb=res.fabric_mb, fabric_stall_s=res.fabric_stall_s,
-        wan_util=res.wan_util)
+        wan_util=res.wan_util,
+        n_migrated=res.n_migrated, migrate_mb=res.migrate_mb,
+        n_mig_aborted=res.n_mig_aborted)
 
 
 def normalized_jtt(summaries: List[Summary], reference: str = "joss-t"

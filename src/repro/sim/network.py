@@ -29,7 +29,8 @@ only ever slows transfers down, never speeds them up.
 
 Flow kinds drained through the fabric: ``map_read`` (off-host map input),
 ``shuffle`` (reduce fetches), ``ckpt_write``/``ckpt_read`` (pod object
-store) and ``rerep`` (durability repair copies).
+store), ``rerep`` (durability repair copies) and ``migrate`` (live task
+state shipped during notice-window drains, PR 6).
 
 The fast path — flow equivalence classes
 ----------------------------------------

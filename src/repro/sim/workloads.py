@@ -210,6 +210,24 @@ def durability_scenarios() -> Dict[str, Optional[dict]]:
     }
 
 
+def migration_scenarios() -> Dict[str, dict]:
+    """Chaos sweep for the migration subsystem (PR 6): spot-heavy churn
+    kwargs for ``repro.elastic.ChurnConfig``, crossing the provider's
+    notice window (0 s = today's kill-cold behaviour, 30 s = typical
+    spot reclaim warning, 120 s = lease-style advance notice) with the
+    preemption rate (low = occasional reclaim, high = hostile market).
+    The robustness envelope — how much work survives as warning shrinks
+    and pressure grows — is a first-class benchmark axis."""
+    out: Dict[str, dict] = {}
+    for wname, window in (("notice0", 0.0), ("notice30", 30.0),
+                          ("notice120", 120.0)):
+        for rname, rate in (("low", 3.0), ("high", 8.0)):
+            out[f"{wname}_{rname}"] = dict(
+                spot_fraction=0.4, spot_preempt_rate=rate,
+                preempt_notice=window, expire_notice=window)
+    return out
+
+
 def replication_scenarios() -> Dict[str, int]:
     """Replication factors for the durability-vs-storage sweep (PR 4
     satellite). The paper runs 1 replica per block; HDFS defaults to 3.

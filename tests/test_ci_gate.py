@@ -83,6 +83,15 @@ def _stub_measurements(gate, monkeypatch):
         gate, "_fresh_fabric_events_per_s",
         lambda point, reps=2: point["fast_events_per_s"])
 
+    def _echo_migration(stored_mig, perturb=0.0):
+        fresh = {a: dict(v, lost=v["lost"] + perturb,
+                         base_lost=v["base_lost"] + perturb)
+                 for a, v in stored_mig["algos"].items()}
+        sig = stored_mig["signature"]
+        fresh["signature"] = sig + "!" if perturb else sig
+        return fresh
+    monkeypatch.setattr(gate, "_fresh_migration", _echo_migration)
+
 
 def test_main_trips_on_injected_slowdown(gate, stored, monkeypatch):
     """End-to-end through main(): stubbed measurements echo the stored
@@ -191,3 +200,77 @@ def test_main_fails_cleanly_without_fabric_trajectory(gate, tmp_path,
     _stub_measurements(gate, monkeypatch)
     assert gate.main(["--fabric-json",
                       str(tmp_path / "missing.json")]) == 1
+
+
+# --------------------------------------------- migration gate (PR 6) --
+def _fresh_from_stored(m):
+    fresh = {a: dict(v) for a, v in m["algos"].items()}
+    fresh["signature"] = m["signature"]
+    return fresh
+
+
+def test_migration_row_committed(stored_elastic):
+    """The committed gate row must cover all five algorithms with a
+    baseline that actually loses work (else the gate asserts nothing)."""
+    m = stored_elastic["migration"]
+    assert set(m["algos"]) == {"joss-t", "joss-j", "fifo", "fair",
+                               "capacity"}
+    assert all(v["base_lost"] > 0 for v in m["algos"].values())
+    assert sum(v["n_migrated"] for v in m["algos"].values()) > 0
+    assert m["signature"] and m["probe"]["notice"] > 0
+
+
+def test_compare_migration_passes_on_identical_row(gate, stored_elastic):
+    m = stored_elastic["migration"]
+    assert gate.compare_migration(m, _fresh_from_stored(m)) == []
+
+
+def test_compare_migration_fails_on_loss_drift(gate, stored_elastic):
+    m = stored_elastic["migration"]
+    fresh = _fresh_from_stored(m)
+    fresh["joss-t"]["lost"] = 0.5 * fresh["joss-t"]["base_lost"]
+    failures = gate.compare_migration(m, fresh)
+    assert any("> 5%" in f for f in failures)          # envelope broken
+    assert any("drifted" in f for f in failures)       # determinism pin
+
+
+def test_compare_migration_fails_on_signature_drift(gate,
+                                                    stored_elastic):
+    m = stored_elastic["migration"]
+    fresh = _fresh_from_stored(m)
+    fresh["signature"] = "0000decafbad"
+    failures = gate.compare_migration(m, fresh)
+    assert len(failures) == 1 and "signature drifted" in failures[0]
+
+
+def test_compare_migration_fails_on_dead_restore_path(gate,
+                                                      stored_elastic):
+    m = stored_elastic["migration"]
+    fresh = _fresh_from_stored(m)
+    for a in fresh:
+        if a != "signature":
+            fresh[a]["n_migrated"] = 0
+    failures = gate.compare_migration(m, fresh)
+    assert any("restore path" in f for f in failures)
+
+
+def test_main_trips_on_migration_perturbation(gate, monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--migration-perturb", "64.0"]) == 1
+
+
+def test_main_fails_cleanly_without_migration_row(gate, stored_elastic,
+                                                  tmp_path, monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    crippled = {k: v for k, v in stored_elastic.items()
+                if k != "migration"}
+    p = tmp_path / "elastic.json"
+    p.write_text(json.dumps(crippled))
+    assert gate.main(["--elastic-json", str(p)]) == 1
+
+
+def test_migration_gate_matches_stored_row_live(gate, stored_elastic):
+    """One real re-simulation (not stubbed): the committed row must be
+    exactly reproducible — the probe is deterministic per seed."""
+    m = stored_elastic["migration"]
+    assert gate.compare_migration(m, gate._fresh_migration(m)) == []
