@@ -7,6 +7,13 @@ collectives. Two experiments on an 8-device (2-pod x 4) host mesh:
 2. Gradient reduction: flat all-reduce over both axes vs hierarchical
    in-pod reduce-scatter + cross-pod all-reduce + in-pod all-gather
    (sharding/collectives.py), also measured from the lowered HLO.
+
+Plus (PR 7, no devices needed): a per-event-kind timing profile of the
+discrete-event kernel itself — ``ProfilingKernel`` swapped in via the
+``Simulator._make_kernel`` seam times every handler and the dispatch
+post-steps on a contended fabric run, showing where an event's wall
+time actually goes (the denominator behind the telemetry overhead
+envelope in ``bench_obs``).
 """
 from __future__ import annotations
 
@@ -72,11 +79,58 @@ def grad_reduction() -> list:
     return rows
 
 
-def run() -> str:
-    if not _require_devices(8):
-        return ("\n## Engine collective measurements: SKIPPED "
-                "(needs 8 devices; run via benchmarks.run)")
+def kernel_profile(quick: bool = False) -> list:
+    """Per-event-kind handler timing on a contended fabric run (pure
+    CPU — no accelerator involved). Returns table rows sorted by total
+    handler seconds, with the dispatch post-step as the last row."""
+    from repro.core.joss import make_algorithm
+    from repro.sim.cluster_sim import SimConfig, Simulator
+    from repro.sim.engine import ProfilingKernel
+    from repro.sim.network import FabricConfig
+    from repro.sim.workloads import (fabric_links, make_cluster,
+                                     small_workload)
+    hpp = (8, 8) if quick else (32, 32)
+    n_jobs = 24 if quick else 96
+    cluster = make_cluster(hpp, links=fabric_links(hpp, wan_oversub=8.0),
+                           map_slots=2, reduce_slots=2)
+    jobs = small_workload(cluster, seed=11, n_jobs=n_jobs)
+    for j in jobs:
+        j.submit_time = 0.0
+    algo = make_algorithm("joss-t", cluster)
+    sim = Simulator(cluster, algo, jobs,
+                    config=SimConfig(fabric=FabricConfig(log_limit=0)),
+                    seed=11)
+    sim._make_kernel = lambda: ProfilingKernel()
+    res = sim.run()
+    assert len(res.job_finish) == n_jobs
+    k = sim.kernel
+    total = sum(k.kind_s.values()) + k.post_step_s
+    rows = []
+    for kind in sorted(k.kind_s, key=lambda x: -k.kind_s[x]):
+        s, n = k.kind_s[kind], k.kind_n[kind]
+        rows.append([kind, n, f"{s * 1e3:.1f}", f"{s / n * 1e6:.1f}",
+                     f"{s / total:.1%}"])
+    n_steps = sum(n for kind, n in k.kind_n.items()
+                  if kind not in k._self_stepping)
+    rows.append(["(dispatch post-step)", n_steps,
+                 f"{k.post_step_s * 1e3:.1f}",
+                 f"{k.post_step_s / max(n_steps, 1) * 1e6:.1f}",
+                 f"{k.post_step_s / total:.1%}"])
+    return rows
+
+
+def run(quick: bool = False) -> str:
     out = []
+    out.append(table(
+        "Event-kernel handler profile — contended fabric run "
+        f"({'2x8' if quick else '2x32'} hosts, burst workload, "
+        "ProfilingKernel via Simulator._make_kernel)",
+        ["kind", "events", "total ms", "us/event", "share"],
+        kernel_profile(quick)))
+    if not _require_devices(8):
+        return ("\n".join(out)
+                + "\n\n## Engine collective measurements: SKIPPED "
+                "(needs 8 devices; run via benchmarks.run)")
     rows = shuffle_scoping()
     out.append(table("JoSS policy A as collective scoping — shuffle "
                      "wire bytes (KiB, 8 devices)",

@@ -114,7 +114,8 @@ def _run(name: str, links=None, *, n_jobs: int = 16, seed: int = 11,
 def _scale_run(name: str, hosts_per_pod: Tuple[int, ...], n_jobs: int,
                *, allocator: str = "fast", seed: int = 11,
                wan_oversub: float = SCALE_OVERSUB, map_slots: int = 2,
-               log_limit: Optional[int] = 0):
+               log_limit: Optional[int] = 0, telemetry=None,
+               clock=time.perf_counter):
     """One contended end-to-end point: burst small workload on a big
     dual-slot fleet (two concurrent streams per host — the shape the
     ``fabric_links`` pod capacities are provisioned for, and the
@@ -124,7 +125,9 @@ def _scale_run(name: str, hosts_per_pod: Tuple[int, ...], n_jobs: int,
     ``bench_dispatch`` — both allocators simulate the identical
     trajectory, so the ratio is pure allocator cost. ``log_limit=0``
     keeps the sweep from holding hundreds of thousands of completion
-    tuples (``FabricConfig.log_limit``)."""
+    tuples (``FabricConfig.log_limit``). ``clock`` picks the timebase —
+    ``bench_obs`` passes ``time.process_time`` so its on/off overhead
+    ratio is immune to co-tenant CPU steal."""
     cluster = make_cluster(hosts_per_pod,
                            links=fabric_links(hosts_per_pod,
                                               wan_oversub=wan_oversub),
@@ -137,11 +140,12 @@ def _scale_run(name: str, hosts_per_pod: Tuple[int, ...], n_jobs: int,
         for j in profiling_prelude(cluster):
             algo.registry.record(j, j.true_fp)
     cfg = SimConfig(fabric=FabricConfig(allocator=allocator,
-                                        log_limit=log_limit))
+                                        log_limit=log_limit),
+                    telemetry=telemetry)
     n_events = n_jobs + sum(j.m + len(j.reduce_tasks) for j in jobs)
-    t0 = time.perf_counter()
+    t0 = clock()
     res = Simulator(cluster, algo, jobs, config=cfg, seed=seed).run()
-    dt = time.perf_counter() - t0
+    dt = clock() - t0
     assert len(res.job_finish) == n_jobs, \
         f"{name}@{sum(hosts_per_pod)}: {len(res.job_finish)}/{n_jobs}"
     return res, n_events / dt
@@ -195,6 +199,19 @@ def run(quick: bool = False) -> str:
         "queueing on shared links)",
         ["wan", "algo", "wtt s", "INT MB", "fabric MB", "stall s",
          "wan util"], rows)
+
+    # per-traffic-kind breakdown at the most contended level (PR 7:
+    # FabricSummary.by_kind surfaced through metrics.Summary)
+    from repro.sim.metrics import summarize
+    worst = list(scenarios)[-1]
+    rows = []
+    for name in ALGOS:
+        for kind, (n, mb, stall) in sorted(
+                summarize(results[(worst, name)]).fabric_by_kind.items()):
+            rows.append([name, kind, n, f"{mb:.0f}", f"{stall:.1f}"])
+    out += "\n\n" + table(
+        f"Fabric traffic by kind at the most contended level ({worst})",
+        ["algo", "kind", "flows", "MB", "stall s"], rows)
 
     # claim check: fabric-disabled == PR 3 simulator, bit-identical, for
     # the full golden matrix (5 algos x {static, churn, durability,

@@ -20,7 +20,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (bench_dispatch, bench_elastic, bench_engine,
                             bench_fabric, bench_filtering, bench_migration,
-                            bench_mixed_workload, bench_overhead,
+                            bench_mixed_workload, bench_obs, bench_overhead,
                             bench_small_workload, bench_threshold)
 
     sections = {
@@ -35,7 +35,8 @@ def main(argv=None) -> int:
         "elastic": lambda: bench_elastic.run(quick=args.quick),
         "fabric": lambda: bench_fabric.run(quick=args.quick),
         "migration": lambda: bench_migration.run(quick=args.quick),
-        "engine": lambda: bench_engine.run(),
+        "obs": lambda: bench_obs.run(quick=args.quick),
+        "engine": lambda: bench_engine.run(quick=args.quick),
     }
     picked = (args.only.split(",") if args.only else list(sections))
     failures = 0

@@ -50,6 +50,17 @@ acknowledged by refreshing the row with a full ``--only migration``
 sweep. ``--migration-perturb`` adds MB to the fresh work-lost numbers
 (and poisons the fresh signature) for the gate's self-test.
 
+PR 7 adds the **obs gate** on ``BENCH_obs.json`` (written by full
+``--only obs`` sweeps): the committed overhead gate point must show
+telemetry-on events/s >= 90% of telemetry-off (the acceptance envelope
+— a static check on the stored trajectory), and the committed trace
+probe (a churny elastic run with telemetry on) is re-simulated fresh:
+its JSONL sha256 and event count must match the stored row *exactly* —
+the trace is deterministic per seed, so any drift means the telemetry
+subsystem's observable behaviour changed, to be acknowledged by
+refreshing the file with a full ``--only obs`` sweep.
+``--obs-perturb`` poisons the fresh sha for the gate's self-test.
+
 Exit code: 0 = within budget, 1 = regression (or missing trajectory).
 """
 from __future__ import annotations
@@ -67,6 +78,7 @@ for p in (_ROOT, os.path.join(_ROOT, "src")):
 JSON_PATH = os.path.join(_ROOT, "BENCH_dispatch.json")
 ELASTIC_JSON_PATH = os.path.join(_ROOT, "BENCH_elastic.json")
 FABRIC_JSON_PATH = os.path.join(_ROOT, "BENCH_fabric.json")
+OBS_JSON_PATH = os.path.join(_ROOT, "BENCH_obs.json")
 
 #: assign entries are gated at and above this many total map slots — the
 #: scale points PR 1's O(1) envelope was accepted at
@@ -76,6 +88,11 @@ MIN_GATED_SLOTS = 4096
 #: committed gate point (4x1024 hosts) must beat the per-flow reference
 #: allocator by this factor
 MIN_FABRIC_SPEEDUP = 5.0
+
+#: the PR 7 acceptance envelope: at the committed overhead gate point
+#: (4x1024 hosts), telemetry-on events/s must be at least this fraction
+#: of telemetry-off (matches benchmarks.bench_obs.OVERHEAD_FLOOR)
+MIN_OBS_RATIO = 0.90
 
 
 def _hpp(entry: dict) -> list:
@@ -167,6 +184,47 @@ def _fresh_migration(stored_mig: dict, perturb: float = 0.0) -> dict:
             sig = mig.migration.signature()
             fresh["signature"] = sig + "!" if perturb else sig
     return fresh
+
+
+def _fresh_obs_probe(stored_obs: dict, perturb: bool = False) -> dict:
+    """Re-run the committed telemetry trace probe (deterministic per
+    seed). Returns ``{"sha256", "n_events"}``; ``perturb`` poisons the
+    fresh sha for the gate's self-test."""
+    from benchmarks.bench_obs import _elastic_run
+    from repro.obs import TelemetryConfig
+    p = stored_obs["probe"]
+    res = _elastic_run(TelemetryConfig(), n_jobs=p["n_jobs"],
+                       seed=p.get("seed", 7))
+    sha = res.telemetry.trace.sha256()
+    return {"sha256": sha + "!" if perturb else sha,
+            "n_events": len(res.telemetry.trace)}
+
+
+def compare_obs(stored_obs: dict, fresh: dict) -> list:
+    """Pure comparison for the obs gate: the committed overhead gate
+    point must hold the PR 7 acceptance envelope (telemetry-on >= 90%
+    of telemetry-off events/s), and the fresh trace probe must match
+    the stored row exactly (the trace is deterministic — drift means
+    the telemetry subsystem's behaviour changed)."""
+    failures = []
+    g = stored_obs["gate"]
+    if g["ratio"] < MIN_OBS_RATIO:
+        failures.append(
+            f"committed telemetry overhead ratio at {g['hosts']} hosts "
+            f"is {g['ratio']:.1%} (acceptance envelope is >= "
+            f"{MIN_OBS_RATIO:.0%} — refresh BENCH_obs.json with a full "
+            "--only obs sweep)")
+    p = stored_obs["probe"]
+    if fresh["sha256"] != p["sha256"]:
+        failures.append(
+            "telemetry trace sha256 drifted at the committed probe "
+            f"({fresh['sha256'][:12]}... vs stored {p['sha256'][:12]}... "
+            "— behaviour change; refresh with a full --only obs sweep)")
+    if fresh["n_events"] != p["n_events"]:
+        failures.append(
+            f"telemetry trace event count drifted at the committed "
+            f"probe ({fresh['n_events']} vs stored {p['n_events']})")
+    return failures
 
 
 def compare_migration(stored_mig: dict, fresh: dict) -> list:
@@ -306,6 +364,11 @@ def main(argv=None) -> int:
     ap.add_argument("--migration-perturb", type=float, default=0.0,
                     help="MB of artificial work loss added to the fresh "
                          "migration probe (gate self-test)")
+    ap.add_argument("--obs-json", default=OBS_JSON_PATH,
+                    help="stored telemetry trajectory "
+                         "(default: BENCH_obs.json)")
+    ap.add_argument("--obs-perturb", action="store_true",
+                    help="poison the fresh trace sha (gate self-test)")
     args = ap.parse_args(argv)
 
     try:
@@ -325,6 +388,12 @@ def main(argv=None) -> int:
             stored_fabric = json.load(f)
     except OSError as e:
         print(f"[bench-regression] cannot read fabric trajectory: {e}")
+        return 1
+    try:
+        with open(args.obs_json) as f:
+            stored_obs = json.load(f)
+    except OSError as e:
+        print(f"[bench-regression] cannot read obs trajectory: {e}")
         return 1
 
     fresh_assign: dict = {}
@@ -355,11 +424,18 @@ def main(argv=None) -> int:
           f"(stored {gate_point['fast_events_per_s']:.0f}, committed "
           f"speedup {gate_point['speedup']:.1f}x over reference)")
 
+    fresh_obs = _fresh_obs_probe(stored_obs, args.obs_perturb)
+    print(f"[bench-regression] obs probe: "
+          f"{fresh_obs['n_events']} trace events, sha "
+          f"{fresh_obs['sha256'][:12]}... (stored committed overhead "
+          f"ratio {stored_obs['gate']['ratio']:.1%})")
+
     failures = compare(stored, fresh_assign, fresh_events, args.threshold)
     failures += compare_elastic(stored_elastic, fresh_wtt,
                                 args.wtt_threshold)
     failures += compare_fabric(stored_fabric, fresh_fabric,
                                args.threshold)
+    failures += compare_obs(stored_obs, fresh_obs)
 
     stored_mig = stored_elastic.get("migration")
     if stored_mig is None:
@@ -380,7 +456,8 @@ def main(argv=None) -> int:
         print(f"[bench-regression] OK: trajectory held within "
               f"{args.threshold:.0%} at every gated perf point "
               f"(dispatch + fabric), {args.wtt_threshold:.2%} at every "
-              f"elastic WTT point, and bit-exact at the migration probe")
+              f"elastic WTT point, and bit-exact at the migration and "
+              f"telemetry-trace probes")
     return 1 if failures else 0
 
 

@@ -35,6 +35,17 @@
 #                      no-migration runs, decisions are deterministic
 #                      per seed, and fleet compaction cuts VPS-hours
 #                      and WTT on the straggler tail without losing work
+#   obs-claims       — telemetry claims, all asserted inside bench_obs:
+#                      telemetry-on runs are bit-identical to all 25
+#                      committed golden trajectories, events/s stays
+#                      inside the overhead envelope at the contended
+#                      scale point (trajectory itself bit-identical
+#                      on/off), the scoreboard exposes per-window
+#                      utilization for every fabric link, a scoreboard-
+#                      fed BacklogThresholdScaler reproduces the
+#                      observation-fed run's full signature, the trace
+#                      JSONL is byte-stable per seed (sha256), and
+#                      trace_limit caps the buffer while counting drops
 #   bench-regression — fresh dispatch sweep vs the committed
 #                      BENCH_dispatch.json trajectory (>25% regression at
 #                      the 4096/8192-host points fails) + re-simulated
@@ -46,7 +57,11 @@
 #                      migration row of BENCH_elastic.json re-simulated
 #                      bit-exactly (loss/re-exec/restore counters and
 #                      the decision-log signature must match, and the
-#                      <= 5% loss envelope must hold)
+#                      <= 5% loss envelope must hold) + the committed
+#                      BENCH_obs.json telemetry gate (stored overhead
+#                      ratio must hold the 90% envelope; the trace
+#                      probe re-simulated and its sha256/event count
+#                      must match bit-exactly)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -75,5 +90,6 @@ stage claim-checks python -m benchmarks.run --quick --only overhead,dispatch,sma
 stage elastic-claims python -m benchmarks.run --quick --only elastic
 stage fabric-claims python -m benchmarks.run --quick --only fabric
 stage migration-claims python -m benchmarks.run --quick --only migration
+stage obs-claims python -m benchmarks.run --quick --only obs
 stage bench-regression python scripts/check_bench_regression.py
 echo "== CI green: $((SECONDS))s total =="

@@ -125,6 +125,19 @@ class BacklogThresholdScaler(Autoscaler):
         self.max_hosts = max_hosts
         self.cooldown = cooldown
         self._last_change = -1e18
+        self._scoreboard = None
+
+    def attach_scoreboard(self, sb) -> None:
+        """Read backlog from the telemetry ``Scoreboard`` instead of the
+        observation. The simulator calls this when telemetry is enabled;
+        ``fleet_observation`` publishes the observation's own counters to
+        the scoreboard *before* any policy runs, so decisions are
+        bit-identical either way (equivalence-tested)."""
+        self._scoreboard = sb
+
+    def _backlog(self, obs: FleetObservation) -> int:
+        sb = self._scoreboard
+        return obs.backlog if sb is None else sb.backlog()
 
     # hook so the cost-capped subclass can gate growth and pick lease kind
     def _grow(self, obs: FleetObservation, want: int) -> ScaleDecision:
@@ -133,14 +146,15 @@ class BacklogThresholdScaler(Autoscaler):
     def decide(self, obs: FleetObservation) -> ScaleDecision:
         if obs.now - self._last_change < self.cooldown:
             return ScaleDecision()
-        per_host = obs.backlog / max(obs.n_hosts, 1)
+        backlog = self._backlog(obs)
+        per_host = backlog / max(obs.n_hosts, 1)
         if per_host > self.hi and obs.n_hosts < self.max_hosts:
             want = min(self.step, self.max_hosts - obs.n_hosts)
             dec = self._grow(obs, want)
             if not dec.empty:
                 self._last_change = obs.now
             return dec
-        if obs.backlog == 0 and obs.n_hosts > self.min_hosts:
+        if backlog == 0 and obs.n_hosts > self.min_hosts:
             spare = obs.n_hosts - self.min_hosts
             victims = tuple(obs.idle_hosts[:min(self.step, spare)])
             if victims:
@@ -150,7 +164,7 @@ class BacklogThresholdScaler(Autoscaler):
 
     def renew_lease(self, hid: HostId, kind: str,
                     obs: FleetObservation) -> bool:
-        return obs.backlog > 0 or obs.n_hosts <= self.min_hosts
+        return self._backlog(obs) > 0 or obs.n_hosts <= self.min_hosts
 
 
 class CostCappedSpotScaler(BacklogThresholdScaler):
@@ -208,7 +222,7 @@ class CompactingScaler(BacklogThresholdScaler):
 
     def decide(self, obs: FleetObservation) -> ScaleDecision:
         dec = super().decide(obs)
-        if obs.backlog == 0 and obs.n_hosts > self.min_hosts:
+        if self._backlog(obs) == 0 and obs.n_hosts > self.min_hosts:
             ready = tuple(h for h in dec.remove if h in self._draining)
             spare = obs.n_hosts - self.min_hosts - len(ready)
             fresh = [h for h in obs.idle_hosts if h not in self._draining]

@@ -257,6 +257,9 @@ class DurabilitySubsystem(Subsystem):
         # a repair copy completed: patch the replica map and give
         # queued/re-executed maps their locality index entries back
         restored = self.mgr.apply(ev)
+        tel = getattr(self.sim, "telemetry", None)
+        if tel is not None:
+            tel.note_rerep(now, ev)
         if restored is not None:
             tgt, pod_covered = restored
             hook = getattr(self.sim.algo, "replica_restored", None)

@@ -336,8 +336,14 @@ class ElasticSubsystem(Subsystem):
 
     def _on_scale(self, now: float, _payload) -> None:
         if self.sim.unfinished > 0:
-            self._apply(self.engine.autoscale(
-                self.sim.fleet_observation(now, full=True)), now)
+            actions = self.engine.autoscale(
+                self.sim.fleet_observation(now, full=True))
+            tel = getattr(self.sim, "telemetry", None)
+            if tel is not None:
+                tel.note_autoscale(now, (list(actions.losses)
+                                         + list(actions.adds)
+                                         + list(actions.drains)))
+            self._apply(actions, now)
             self.kernel.push(now + self.engine.autoscaler.interval,
                              "scale", None)
 

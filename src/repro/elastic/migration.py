@@ -501,6 +501,10 @@ class MigrationSubsystem(Subsystem):
                                (src.pod, src.index),
                                (dst.pod, dst.index),
                                round(frac, 6), reason))
+        tel = getattr(sim, "telemetry", None)
+        if tel is not None:
+            tel.note_migration(now, "start", tid=tid, mb=mb,
+                               reason=reason)
         return True
 
     def _land(self, tid, now: float) -> None:
@@ -552,11 +556,18 @@ class MigrationSubsystem(Subsystem):
         s.decision_log.append((round(now, 6), "restore", self._tkey(nt.tid),
                                (p.dst.pod, p.dst.index),
                                round(p.frac, 6)))
+        tel = getattr(sim, "telemetry", None)
+        if tel is not None:
+            tel.note_migration(now, "restore", tid=nt.tid,
+                               frac=round(p.frac, 6))
 
     def _abort(self, p: _Pending, now: float, why: str) -> None:
         s = self.summary
         s.n_aborted += 1
         s.decision_log.append((round(now, 6), "abort", self._tkey(p.tid), why))
+        tel = getattr(self.sim, "telemetry", None)
+        if tel is not None:
+            tel.note_migration(now, "abort", tid=p.tid, why=why)
 
     # -- accounting ----------------------------------------------------------
     def finalize(self) -> MigrationSummary:

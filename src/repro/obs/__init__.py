@@ -1,0 +1,15 @@
+"""Observability layer (PR 7): metric registry, structured trace export
+and the scoreboard facade for control loops. See ``docs/ARCHITECTURE.md``
+("Observability") for the contract — in one line: telemetry owns no
+event kinds, consumes no RNG and never touches the heap, so attaching
+it is trajectory-invariant."""
+from repro.obs.registry import Counter, Gauge, MetricRegistry, WindowSeries
+from repro.obs.scoreboard import Scoreboard
+from repro.obs.telemetry import TelemetryConfig, TelemetrySubsystem
+from repro.obs.trace import TraceExporter
+
+__all__ = [
+    "Counter", "Gauge", "MetricRegistry", "WindowSeries",
+    "Scoreboard", "TelemetryConfig", "TelemetrySubsystem",
+    "TraceExporter",
+]

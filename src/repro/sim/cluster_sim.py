@@ -68,6 +68,11 @@ class SimConfig:
     # to the PR 3 simulator); a FabricConfig routes map reads, shuffle
     # fetches, checkpoint and repair traffic through shared links
     fabric: Optional[FabricConfig] = None
+    # observability (PR 7): a TelemetryConfig attaches the hook-only
+    # TelemetrySubsystem (metric registry, trace exporter, scoreboard).
+    # It owns no event kinds and consumes no RNG, so telemetry-on runs
+    # are bit-identical to telemetry-off; None = zero overhead
+    telemetry: Optional["TelemetryConfig"] = None
 
     def read_bw(self, loc: Locality) -> float:
         return {Locality.HOST: self.disk_bw, Locality.POD: self.pod_bw,
@@ -126,6 +131,8 @@ class SimResult:
     n_migrated: int = 0         # tasks restored from shipped state
     migrate_mb: float = 0.0     # migration state traffic (MB)
     n_mig_aborted: int = 0      # migrations abandoned (races, lost hosts)
+    # -- observability outputs (PR 7; None without a telemetry config) -------
+    telemetry: object = None    # TelemetrySubsystem (registry/trace/scoreboard)
 
     def jtt(self, job: Job) -> float:
         return self.job_finish[job.job_id] - self.job_submit[job.job_id]
@@ -137,17 +144,26 @@ class Simulator:
 
     def __init__(self, cluster: VirtualCluster, algorithm, jobs: List[Job],
                  config: Optional[SimConfig] = None, seed: int = 0,
-                 elastic=None):
+                 elastic=None, subsystems=()):
         self.cluster = cluster
         self.algo = algorithm
         self.jobs = jobs
         self.cfg = config or SimConfig()
         self.rng = np.random.RandomState(seed)
         self.elastic = elastic   # Optional[repro.elastic.ElasticEngine]
+        # extra observer subsystems appended after the built-ins (PR 7):
+        # hook-only plug-ins (no event kinds, no RNG) are guaranteed
+        # trajectory-invariant — see tests/test_obs.py
+        self.extra_subsystems = tuple(subsystems)
+
+    def _make_kernel(self) -> EventKernel:
+        """Kernel factory seam: benchmarks swap in ``ProfilingKernel``
+        for per-event-kind timing without touching the run path."""
+        return EventKernel()
 
     # ------------------------------------------------------------------ run --
     def run(self) -> SimResult:
-        kernel = self.kernel = EventKernel()
+        kernel = self.kernel = self._make_kernel()
         subs = self._setup_state()
         kernel.register("submit", self._on_submit)
         kernel.register("hb", self._on_heartbeat, post_step=False)
@@ -269,6 +285,21 @@ class Simulator:
         if cfg.fabric is not None:
             self.fabric = make_fabric(self.cluster, cfg.fabric)
             subs.append(self.fabric)
+        # telemetry (PR 7): attached last so its samples see the fabric;
+        # hook-only (no event kinds, no RNG), so trajectories don't move
+        self.telemetry = None
+        if cfg.telemetry is not None:
+            # local import: repro.obs imports the engine module, so a
+            # top-level import here would be circular
+            from repro.obs.telemetry import TelemetrySubsystem
+            self.telemetry = TelemetrySubsystem(cfg.telemetry)
+            subs.append(self.telemetry)
+            if self.elastic is not None:
+                attach = getattr(self.elastic.autoscaler,
+                                 "attach_scoreboard", None)
+                if attach is not None:
+                    attach(self.telemetry.scoreboard)
+        subs.extend(self.extra_subsystems)
         return subs
 
     def _bind_hooks(self, subs: List[Subsystem]) -> None:
@@ -283,6 +314,8 @@ class Simulator:
         self._hooks_host_survived = overridden("on_host_survived")
         self._hooks_task_start = overridden("on_task_start")
         self._hooks_task_finish = overridden("on_task_finish")
+        self._hooks_job_submit = overridden("on_job_submit")
+        self._hooks_job_finish = overridden("on_job_finish")
         self._hooks_tick = overridden("on_tick")
 
     # ------------------------------------------------------------- helpers --
@@ -919,10 +952,17 @@ class Simulator:
                                 key=lambda h: (h.pod, h.index)))
             light = tuple(sorted(light_list,
                                  key=lambda h: (h.pod, h.index)))
-        return elastic.observe(
+        obs = elastic.observe(
             now, map_backlog=self.map_backlog,
             red_backlog=self.red_ready_backlog, busy_hosts=busy,
             idle_hosts=idle, light_hosts=light)
+        tel = self.telemetry
+        if tel is not None:
+            # the scoreboard's fleet gauges are this observation's own
+            # integers, so scoreboard-fed scaling decisions are
+            # bit-identical to observation-fed ones (PR 7)
+            tel.note_fleet(obs)
+        return obs
 
     # ----------------------------------------------------- event handlers --
     def _on_heartbeat(self, now: float, _payload):
@@ -949,6 +989,8 @@ class Simulator:
         if not self.hb_scheduled:
             self.kernel.push(now + self.cfg.heartbeat, "hb", None)
             self.hb_scheduled = True
+        for h in self._hooks_job_submit:
+            h(job, now)
 
     def _on_map_done(self, now: float, t: MapTask):
         log = self.running.pop(t.tid, None)
@@ -1029,6 +1071,8 @@ class Simulator:
             fp *= float(1.0 + self.cfg.fp_noise
                         * self.rng.standard_normal())
         self.algo.record_completion(job, max(fp, 0.0))
+        for h in self._hooks_job_finish:
+            h(job, now)
 
     # ------------------------------------------------------------ finalize --
     def _finalize(self, end: float) -> SimResult:
@@ -1071,4 +1115,6 @@ class Simulator:
                 # the durability manager billed it already this is zero
                 res.cost_dollars += ms.storage_dollars
                 res.storage_dollars += ms.storage_dollars
+        if self.telemetry is not None:
+            res.telemetry = self.telemetry.finalize(end)
         return res

@@ -179,5 +179,57 @@ class Subsystem:
         """A task attempt completed successfully (killed attempts and
         late speculative twins are not reported)."""
 
+    def on_job_submit(self, job, now: float) -> None:
+        """A job entered the system (its maps just joined the backlog)."""
+
+    def on_job_finish(self, job, now: float) -> None:
+        """The last task of ``job`` completed (PR 7 observability seam)."""
+
     def on_tick(self, now: float) -> None:
         """One heartbeat elapsed (fires before the dispatch pass)."""
+
+
+class ProfilingKernel(EventKernel):
+    """``EventKernel`` with per-kind wall-clock accounting (PR 7).
+
+    The hot ``run()`` loop is duplicated rather than branch-instrumented
+    so the production kernel pays nothing; benchmarks swap this in via
+    ``Simulator._make_kernel`` (``benchmarks/bench_engine.py``). Timing
+    uses the wall clock and is **for measurement only** — never attach
+    this to a run whose trajectory feeds a determinism gate's *timing*
+    claims (event ordering is unchanged; only wall time is observed).
+
+    ``kind_s``/``kind_n`` accumulate handler seconds and event counts
+    per kind; ``post_step_s`` the dispatch passes that follow them.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.kind_s: Dict[str, float] = {}
+        self.kind_n: Dict[str, int] = {}
+        self.post_step_s = 0.0
+
+    def run(self, *, post_step: Optional[Callable[[float], None]] = None,
+            stop: Optional[Callable[[], bool]] = None) -> float:
+        import time
+        perf = time.perf_counter
+        heap = self._heap
+        handlers = self._handlers
+        self_stepping = self._self_stepping
+        kind_s, kind_n = self.kind_s, self.kind_n
+        now = self.now
+        while heap:
+            now, _, kind, payload = heapq.heappop(heap)
+            self.now = now
+            t0 = perf()
+            skip_step = handlers[kind](now, payload)
+            kind_s[kind] = kind_s.get(kind, 0.0) + (perf() - t0)
+            kind_n[kind] = kind_n.get(kind, 0) + 1
+            if (post_step is not None and not skip_step
+                    and kind not in self_stepping):
+                t0 = perf()
+                post_step(now)
+                self.post_step_s += perf() - t0
+            if stop is not None and stop():
+                break
+        return now

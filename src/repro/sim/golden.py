@@ -56,14 +56,21 @@ def golden_cases() -> List[Tuple[str, str]]:
 
 
 def run_case(algo: str, variant: str, *, hosts_per_pod=(4, 4),
-             n_jobs: int = 12, seed: int = 11):
+             n_jobs: int = 12, seed: int = 11, telemetry=None,
+             subsystems=()):
     """One anchored run. Everything here must stay deterministic: the
     fleet, workload, churn seed and config shape are part of the anchor.
 
     Deliberately self-contained (no sharing with the bench harnesses):
     the committed hashes are only meaningful if this function never
     changes behind their back, so it must not inherit refactors of the
-    bench setup code."""
+    bench setup code.
+
+    ``telemetry``/``subsystems`` (PR 7) let observability tests attach a
+    ``TelemetryConfig`` or extra hook-only subsystems to the *same*
+    anchored run; both default off, so the committed hashes are what they
+    always were — and a run with them on must hash identically (that is
+    the claim being tested)."""
     from repro.core.joss import make_algorithm
     from repro.core.topology import HostId
     from repro.elastic import (ChurnConfig, DurabilityConfig, ElasticEngine,
@@ -82,6 +89,8 @@ def run_case(algo: str, variant: str, *, hosts_per_pod=(4, 4),
     cfg_kw = dict(cfg_kw)
     if cfg_kw.get("slow_hosts") == "auto":
         cfg_kw["slow_hosts"] = {HostId(0, 0): 4.0}
+    if telemetry is not None:
+        cfg_kw["telemetry"] = telemetry
     cfg = SimConfig(**cfg_kw)
     elastic = None
     if churn_on or dur_kw is not None:
@@ -93,7 +102,7 @@ def run_case(algo: str, variant: str, *, hosts_per_pod=(4, 4),
             durability=(DurabilityConfig(**dur_kw)
                         if dur_kw is not None else None))
     return Simulator(cluster, a, jobs, config=cfg, seed=seed,
-                     elastic=elastic).run()
+                     elastic=elastic, subsystems=subsystems).run()
 
 
 def full_signature(res) -> tuple:

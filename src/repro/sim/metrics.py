@@ -55,6 +55,11 @@ class Summary:
     fabric_mb: float = 0.0        # MB drained through the shared fabric
     fabric_stall_s: float = 0.0   # transfer time lost to link contention
     wan_util: float = 0.0         # mean shared-WAN utilization
+    #: per-traffic-kind fabric breakdown: kind -> (n_flows, mb, stall_s),
+    #: straight from ``FabricSummary.by_kind`` (PR 7). Empty without a
+    #: fabric.
+    fabric_by_kind: Dict[str, Tuple[int, float, float]] = \
+        dataclasses.field(default_factory=dict)
     # -- migration outputs (PR 6; zero without the subsystem) ----------------
     n_migrated: int = 0           # tasks restored from shipped state
     migrate_mb: float = 0.0       # migration state traffic (MB)
@@ -95,7 +100,12 @@ def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
     map_loc: Dict[str, LocalityRates] = {}
     for b in names:
         ls = [l for l in maps if _bench_of(l) == b]
-        n = max(1, len(ls))
+        if not ls:
+            # no maps ran for this benchmark (zero finished jobs / empty
+            # logs): all-zero rates, not a phantom 100% off-pod share
+            map_loc[b] = LocalityRates(0.0, 0.0, 0.0)
+            continue
+        n = len(ls)
         v = sum(1 for l in ls if l.locality is Locality.HOST) / n
         c = sum(1 for l in ls if l.locality is Locality.POD) / n
         map_loc[b] = LocalityRates(v, c, max(0.0, 1.0 - v - c))
@@ -142,14 +152,26 @@ def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
         reexec_map_locality=reexec_loc,
         fabric_mb=res.fabric_mb, fabric_stall_s=res.fabric_stall_s,
         wan_util=res.wan_util,
+        fabric_by_kind={k: (int(v[0]), float(v[1]), float(v[2]))
+                        for k, v in getattr(res.fabric, "by_kind", {}).items()}
+        if res.fabric is not None else {},
         n_migrated=res.n_migrated, migrate_mb=res.migrate_mb,
         n_mig_aborted=res.n_mig_aborted)
 
 
 def normalized_jtt(summaries: List[Summary], reference: str = "joss-t"
                    ) -> Dict[str, Dict[str, float]]:
-    """Table 8: JTT of each algorithm normalized to the reference."""
-    ref = next(s for s in summaries if s.algorithm == reference)
+    """Table 8: JTT of each algorithm normalized to the reference.
+
+    Degenerate inputs are well-defined rather than fatal (PR 7): an empty
+    summary list returns ``{}``; a missing reference algorithm falls back
+    to the first summary; a reference benchmark whose JTT is zero (no
+    finished jobs under the reference) yields a 0.0 ratio."""
+    ref = next((s for s in summaries if s.algorithm == reference), None)
+    if ref is None:
+        if not summaries:
+            return {}
+        ref = summaries[0]
     out: Dict[str, Dict[str, float]] = {}
     for s in summaries:
         out[s.algorithm] = {

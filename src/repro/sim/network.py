@@ -173,6 +173,7 @@ class _FabricBase(Subsystem):
         self._carried: Dict[LinkKey, float] = {}  # MB integral
         self._load: Dict[LinkKey, float] = {}     # current sum rate
         self.summary = FabricSummary()
+        self._tel = None   # TelemetrySubsystem (PR 7), cached at attach
 
     # -- subsystem protocol ----------------------------------------------------
     def attach(self, sim, kernel: EventKernel) -> None:
@@ -182,6 +183,9 @@ class _FabricBase(Subsystem):
         # rerep events, which do run the post-step), so dispatching here
         # would only drift the offer-shuffle RNG vs per-stream mode
         kernel.register("flow", self._on_flow, post_step=False)
+        # telemetry (PR 7) is created before any subsystem attaches, so
+        # one getattr here keeps the per-completion hot path branch-cheap
+        self._tel = getattr(sim, "telemetry", None)
         el = self.cfg.elastic
         for p in self.cluster.pods:
             if el is not None:
@@ -255,6 +259,8 @@ class _FabricBase(Subsystem):
                 s.completion_log.append((now, f.kind, f.mb))
             else:
                 s.log_dropped += 1
+        if self._tel is not None:
+            self._tel.note_flow(f, now, stall)
 
     # -- accounting ----------------------------------------------------------------
     def finalize(self, horizon: float) -> FabricSummary:

@@ -92,6 +92,12 @@ def _stub_measurements(gate, monkeypatch):
         return fresh
     monkeypatch.setattr(gate, "_fresh_migration", _echo_migration)
 
+    def _echo_obs(stored_obs, perturb=False):
+        p = stored_obs["probe"]
+        return {"sha256": p["sha256"] + "!" if perturb else p["sha256"],
+                "n_events": p["n_events"]}
+    monkeypatch.setattr(gate, "_fresh_obs_probe", _echo_obs)
+
 
 def test_main_trips_on_injected_slowdown(gate, stored, monkeypatch):
     """End-to-end through main(): stubbed measurements echo the stored
@@ -274,3 +280,68 @@ def test_migration_gate_matches_stored_row_live(gate, stored_elastic):
     exactly reproducible — the probe is deterministic per seed."""
     m = stored_elastic["migration"]
     assert gate.compare_migration(m, gate._fresh_migration(m)) == []
+
+
+# --------------------------------------------------- obs gate (PR 7) --
+@pytest.fixture(scope="module")
+def stored_obs():
+    with open(os.path.join(_ROOT, "BENCH_obs.json")) as f:
+        return json.load(f)
+
+
+def _obs_fresh_from_stored(o):
+    return {"sha256": o["probe"]["sha256"],
+            "n_events": o["probe"]["n_events"]}
+
+
+def test_obs_trajectory_covers_the_gate_point(stored_obs):
+    g = stored_obs["gate"]
+    assert g["hosts"] == 4096 and g["off_events_per_s"] > 0
+    assert g["ratio"] >= 0.90, \
+        "committed telemetry gate point below the 90% overhead envelope"
+    p = stored_obs["probe"]
+    assert len(p["sha256"]) == 64 and p["n_events"] > 0
+
+
+def test_compare_obs_passes_on_identical_probe(gate, stored_obs):
+    assert gate.compare_obs(stored_obs,
+                            _obs_fresh_from_stored(stored_obs)) == []
+
+
+def test_compare_obs_fails_on_sha_drift(gate, stored_obs):
+    fresh = _obs_fresh_from_stored(stored_obs)
+    fresh["sha256"] = "0000decafbad"
+    failures = gate.compare_obs(stored_obs, fresh)
+    assert len(failures) == 1 and "sha256 drifted" in failures[0]
+
+
+def test_compare_obs_fails_on_event_count_drift(gate, stored_obs):
+    fresh = _obs_fresh_from_stored(stored_obs)
+    fresh["n_events"] += 1
+    failures = gate.compare_obs(stored_obs, fresh)
+    assert len(failures) == 1 and "event count drifted" in failures[0]
+
+
+def test_compare_obs_fails_on_sub_envelope_ratio(gate, stored_obs):
+    doctored = dict(stored_obs, gate=dict(stored_obs["gate"], ratio=0.7))
+    failures = gate.compare_obs(doctored,
+                                _obs_fresh_from_stored(stored_obs))
+    assert len(failures) == 1 and "acceptance envelope" in failures[0]
+
+
+def test_main_trips_on_obs_perturbation(gate, monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--obs-perturb"]) == 1
+
+
+def test_main_fails_cleanly_without_obs_trajectory(gate, tmp_path,
+                                                   monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--obs-json", str(tmp_path / "missing.json")]) == 1
+
+
+def test_obs_gate_matches_stored_probe_live(gate, stored_obs):
+    """One real re-simulation (not stubbed): the committed trace probe
+    must be exactly reproducible — the trace is deterministic per seed."""
+    assert gate.compare_obs(stored_obs,
+                            gate._fresh_obs_probe(stored_obs)) == []

@@ -1,0 +1,418 @@
+"""PR 7 tentpole: the telemetry subsystem, trace export and scoreboard.
+
+The load-bearing claim is *pure observation*: attaching telemetry (or
+any hook-only subsystem) must leave every trajectory bit-identical —
+held against all 25 committed golden hashes here. Around that: registry
+unit tests (window bucketing, range proration), trace exporter units
+(tracks, size cap, byte-stable JSONL), scoreboard reads, the
+scoreboard-fed autoscaler equivalence, and the PR 7 metrics hardening
+(``normalized_jtt`` guards, ``fabric_by_kind``).
+"""
+import json
+
+import pytest
+
+from repro.obs import (MetricRegistry, TelemetryConfig, TelemetrySubsystem,
+                       TraceExporter, WindowSeries)
+from repro.sim import golden
+from repro.sim.engine import EventKernel, ProfilingKernel, Subsystem
+
+GOLDEN = golden.load_golden()
+
+
+# ------------------------------------------------------- golden identity --
+class _HookRecorder(Subsystem):
+    """Overrides *every* hook (so every dispatch list is non-empty) and
+    does nothing that could perturb the run."""
+
+    def __init__(self):
+        self.counts = {}
+
+    def _n(self, key):
+        self.counts[key] = self.counts.get(key, 0) + 1
+
+    def start(self, now):
+        self._n("start")
+
+    def on_host_added(self, hid, now):
+        self._n("added")
+
+    def on_host_lost(self, host, now):
+        self._n("lost")
+
+    def on_host_notice(self, hid, deadline, reason, now):
+        self._n("notice")
+
+    def on_host_survived(self, hid, now):
+        self._n("survived")
+
+    def on_task_start(self, log, now):
+        self._n("task_start")
+
+    def on_task_finish(self, log, now):
+        self._n("task_finish")
+
+    def on_job_submit(self, job, now):
+        self._n("job_submit")
+
+    def on_job_finish(self, job, now):
+        self._n("job_finish")
+
+    def on_tick(self, now):
+        self._n("tick")
+
+
+@pytest.mark.parametrize("algo,variant", golden.golden_cases(),
+                         ids=[golden.case_key(a, v)
+                              for a, v in golden.golden_cases()])
+def test_observers_leave_golden_trajectories_bit_identical(algo, variant):
+    """Telemetry on + a hook-only recorder attached: every one of the 25
+    anchored runs still hashes to the committed golden — observation
+    owns no event kinds, consumes no RNG, perturbs nothing."""
+    rec = _HookRecorder()
+    res = golden.run_case(algo, variant, telemetry=TelemetryConfig(),
+                          subsystems=(rec,))
+    assert golden.signature_hash(res) == \
+        GOLDEN[golden.case_key(algo, variant)], \
+        f"telemetry-on trajectory diverged from golden: {variant}/{algo}"
+    # and the observers actually observed
+    assert rec.counts["task_finish"] == len(res.task_logs)
+    assert rec.counts["job_submit"] == rec.counts["job_finish"] == 12
+    tel = res.telemetry
+    assert tel.registry.counter("jobs.finished").value == 12
+    assert tel.registry.counter("tasks.started").value > 0
+    assert len(tel.trace) > 0
+
+
+# ---------------------------------------------------------- registry units --
+def test_window_series_point_bucketing():
+    s = WindowSeries("x", 10.0)
+    s.add(0.0, 1.0)
+    s.add(9.999, 2.0)
+    s.add(10.0, 5.0)
+    s.add(35.0, 7.0)
+    assert s.values == [3.0, 5.0, 0.0, 7.0]
+    assert s.at(1) == 5.0 and s.at(2) == 0.0 and s.at(99) == 0.0
+
+
+def test_window_series_range_proration():
+    s = WindowSeries("x", 10.0)
+    # 30 MB uniformly over [5, 35): 5s + 10s + 10s + 5s of a 1 MB/s rate
+    s.add_range(5.0, 35.0, 30.0)
+    assert s.values == pytest.approx([5.0, 10.0, 10.0, 5.0])
+    # inside a single window: the whole amount lands there
+    s2 = WindowSeries("y", 10.0)
+    s2.add_range(12.0, 17.0, 4.0)
+    assert s2.values == pytest.approx([0.0, 4.0])
+    # zero-length range degenerates to a point add
+    s2.add_range(12.0, 12.0, 1.0)
+    assert s2.values[1] == pytest.approx(5.0)
+
+
+def test_window_series_boundary_exact():
+    """A range ending exactly on a window edge must not spill a zero
+    bucket past the edge."""
+    s = WindowSeries("x", 10.0)
+    s.add_range(5.0, 20.0, 15.0)
+    assert s.values == pytest.approx([5.0, 10.0])
+
+
+def test_window_series_closed_reads():
+    s = WindowSeries("x", 10.0)
+    s.add(5.0, 3.0)
+    s.add(15.0, 4.0)
+    # at t=17 the window [10,20) is still accumulating
+    assert s.latest_closed(17.0) == 3.0
+    assert s.closed_values(17.0) == [3.0]
+    assert s.latest_closed(25.0) == 4.0
+    # closed_values pads never-touched windows with zeros
+    assert s.closed_values(45.0) == [3.0, 4.0, 0.0, 0.0]
+    assert s.latest_closed(5.0) == 0.0   # nothing closed yet
+
+
+def test_window_series_rejects_bad_width():
+    with pytest.raises(ValueError):
+        WindowSeries("x", 0.0)
+
+
+def test_registry_get_or_create():
+    reg = MetricRegistry(window=7.0)
+    c = reg.counter("a")
+    c.inc()
+    c.inc(2.5)
+    assert reg.counter("a") is c and c.value == 3.5
+    g = reg.gauge("b")
+    g.set(9)
+    assert reg.gauge("b").value == 9
+    s = reg.get_series("c")
+    assert s.window == 7.0
+    assert reg.get_series("d", window=2.0).window == 2.0
+    snap = reg.snapshot()
+    assert snap["counters"] == {"a": 3.5}
+    assert snap["gauges"] == {"b": 9}
+    assert set(snap["series"]) == {"c", "d"}
+
+
+# ------------------------------------------------------------- trace units --
+def test_trace_tracks_and_chrome_document():
+    t = TraceExporter()
+    t.complete("pod0", "host 0.0", "map:wc", 1.0, 2.5, args={"job": 0})
+    t.complete("pod0", "host 0.1", "map:wc", 1.0, 3.0)
+    t.instant("fleet", "churn", "host_lost", 4.0)
+    doc = t.chrome_trace()
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    # 2 processes + 3 threads named
+    assert len([m for m in meta if m["name"] == "process_name"]) == 2
+    assert len([m for m in meta if m["name"] == "thread_name"]) == 3
+    slices = [e for e in evs if e["ph"] == "X"]
+    assert slices[0]["ts"] == 1_000_000 and slices[0]["dur"] == 1_500_000
+    # same process, distinct threads
+    assert slices[0]["pid"] == slices[1]["pid"]
+    assert slices[0]["tid"] != slices[1]["tid"]
+    json.dumps(doc)   # must be serializable as-is
+
+
+def test_trace_size_cap_counts_drops():
+    t = TraceExporter(limit=2)
+    for i in range(5):
+        t.instant("p", "t", f"e{i}", float(i))
+    assert len(t) == 2 and t.dropped == 3
+    # the JSONL keeps only the retained events
+    assert t.jsonl().count("\n") == 2
+
+
+def test_trace_jsonl_byte_stable():
+    def build():
+        t = TraceExporter()
+        t.complete("pod0", "host 0.0", "map", 0.5, 1.5, args={"mb": 3.0})
+        t.instant("fleet", "jobs", "submit", 0.0, args={"job": 1})
+        return t
+    a, b = build(), build()
+    assert a.jsonl() == b.jsonl()
+    assert a.sha256() == b.sha256()
+    # every line is standalone JSON with sorted keys
+    for line in a.jsonl().splitlines():
+        obj = json.loads(line)
+        assert list(obj) == sorted(obj)
+
+
+# ------------------------------------------------- end-to-end observation --
+def _elastic_run(telemetry, scaler=None, *, n_jobs=24, fabric=True,
+                 seed=7):
+    from repro.core.joss import make_algorithm
+    from repro.elastic import (BacklogThresholdScaler, ChurnConfig,
+                               ElasticEngine)
+    from repro.sim.cluster_sim import FabricConfig, SimConfig, Simulator
+    from repro.sim.workloads import (fabric_links, make_cluster,
+                                     small_workload)
+    hpp = (4, 4)
+    cluster = make_cluster(hpp, map_slots=2)
+    jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
+    algo = make_algorithm("joss-t", cluster)
+    cfg = SimConfig(fabric=(FabricConfig(links=fabric_links(hpp))
+                            if fabric else None),
+                    telemetry=telemetry)
+    eng = ElasticEngine(
+        cluster,
+        churn=ChurnConfig(seed=5, fail_rate=0.5, rejoin_delay=90.0),
+        autoscaler=scaler or BacklogThresholdScaler(min_hosts=4))
+    return Simulator(cluster, algo, jobs, config=cfg, seed=seed,
+                     elastic=eng).run()
+
+
+def test_scoreboard_fed_scaler_decisions_bit_identical():
+    """The equivalence claim: a ``BacklogThresholdScaler`` reading
+    backlog off the scoreboard (telemetry on auto-attaches it) makes the
+    exact decisions of one reading the observation directly."""
+    off = _elastic_run(None)
+    on = _elastic_run(TelemetryConfig())
+    assert golden.full_signature(off) == golden.full_signature(on)
+    assert (off.n_host_adds, off.n_host_losses, off.cost_dollars) == \
+        (on.n_host_adds, on.n_host_losses, on.cost_dollars)
+    # the scoreboard really was attached and consulted
+    tel = on.telemetry
+    assert tel.registry.gauges["fleet.n_hosts"].value > 0
+
+
+def test_link_series_cover_every_link_and_wan():
+    res = _elastic_run(TelemetryConfig(window=20.0))
+    sb = res.telemetry.scoreboard
+    assert sorted(sb.link_names()) == ["down0", "down1", "up0", "up1",
+                                      "wan"]
+    horizon = res.wtt + 100.0
+    for ln in sb.link_names():
+        series = sb.link_util_series(ln, horizon)
+        assert series, f"no utilization windows for {ln}"
+        assert all(v >= 0.0 for v in series)
+    # total windowed MB ~ the fabric's own accounting
+    total = sum(sum(sb.series_values(f"link.{ln}.mb", horizon))
+                for ln in sb.link_names())
+    assert total > 0.0
+    # per-kind stall series exist for the kinds the fabric reported
+    for kind, agg in res.fabric.by_kind.items():
+        if agg[2] > 0.0:
+            assert sum(sb.series_values(f"stall.{kind}", horizon)) > 0.0
+
+
+def test_scoreboard_reads_and_ewma():
+    res = _elastic_run(TelemetryConfig(window=20.0, ewma_alpha=0.5))
+    sb = res.telemetry.scoreboard
+    assert sb.window == 20.0
+    assert sb.counter("jobs.finished") == 24.0
+    assert sb.counter("no.such.counter") == 0.0
+    assert sb.gauge("no.such.gauge", -1) == -1
+    assert sb.latest("no.such.series", 100.0) == 0.0
+    vals = sb.series_values("backlog.map", res.wtt + 100.0)
+    assert vals
+    # EWMA recurrence on the closed values
+    acc = vals[0]
+    for v in vals[1:]:
+        acc = 0.5 * v + 0.5 * acc
+    assert sb.ewma("backlog.map", res.wtt + 100.0) == pytest.approx(acc)
+    mf, rf = sb.job_progress(res.jobs[0].job_id)
+    assert mf == 1.0 and rf == 1.0
+
+
+def test_trace_deterministic_per_seed_across_runs():
+    """Two telemetry-on runs of the same seed — in the *same* process,
+    where the global job counter differs — produce byte-identical
+    JSONL (ids are remapped to submission order)."""
+    a = _elastic_run(TelemetryConfig())
+    b = _elastic_run(TelemetryConfig())
+    assert a.telemetry.trace.jsonl() == b.telemetry.trace.jsonl()
+    assert a.telemetry.trace.sha256() == b.telemetry.trace.sha256()
+
+
+def test_trace_cap_applies_end_to_end():
+    res = _elastic_run(TelemetryConfig(trace_limit=50))
+    tr = res.telemetry.trace
+    assert len(tr) == 50 and tr.dropped > 0
+    # and tracing can be disabled outright while metrics keep flowing
+    res2 = _elastic_run(TelemetryConfig(trace=False))
+    assert res2.telemetry.trace is None
+    assert res2.telemetry.registry.counter("jobs.finished").value == 24.0
+
+
+def test_telemetry_off_is_truly_off():
+    res = _elastic_run(None)
+    assert res.telemetry is None
+
+
+# --------------------------------------------------------- kernel profiling --
+def test_profiling_kernel_counts_every_kind():
+    from repro.core.joss import make_algorithm
+    from repro.sim.cluster_sim import Simulator
+    from repro.sim.workloads import make_cluster, small_workload
+    cluster = make_cluster((2, 2))
+    jobs = small_workload(cluster, seed=3, n_jobs=3)
+    sim = Simulator(cluster, make_algorithm("fifo", cluster), jobs,
+                    seed=3)
+    sim._make_kernel = lambda: ProfilingKernel()
+    res = sim.run()
+    k = sim.kernel
+    assert isinstance(k, ProfilingKernel)
+    assert k.kind_n["submit"] == 3
+    n_tasks = sum(j.m + len(j.reduce_tasks) for j in jobs)
+    assert k.kind_n["map_done"] + k.kind_n["reduce_done"] == n_tasks
+    assert all(s >= 0.0 for s in k.kind_s.values())
+    assert set(k.kind_s) == set(k.kind_n)
+    assert len(res.job_finish) == 3
+
+
+def test_profiling_kernel_matches_plain_kernel_trajectory():
+    from repro.core.joss import make_algorithm
+    from repro.sim.cluster_sim import Simulator
+    from repro.sim.workloads import make_cluster, small_workload
+
+    def run(profiled):
+        cluster = make_cluster((2, 2))
+        jobs = small_workload(cluster, seed=3, n_jobs=3)
+        sim = Simulator(cluster, make_algorithm("fifo", cluster), jobs,
+                        seed=3)
+        if profiled:
+            sim._make_kernel = lambda: ProfilingKernel()
+        return sim.run()
+
+    assert golden.full_signature(run(False)) == \
+        golden.full_signature(run(True))
+
+
+# ------------------------------------------------------- metrics hardening --
+def _empty_result():
+    from repro.sim.cluster_sim import SimResult
+    return SimResult(algorithm="fifo", task_logs=[], job_submit={},
+                     job_finish={}, int_bytes=0.0, pod_bytes=0.0,
+                     wtt=0.0, jobs=[])
+
+
+def test_summarize_empty_run():
+    from repro.sim.metrics import summarize
+    s = summarize(_empty_result())
+    assert s.avg_jtt == {} and s.map_locality == {}
+    assert s.vps_load_mean == 0.0 and s.vps_load_std == 0.0
+    assert s.completion_curve == []
+    assert s.reexec_map_locality is None
+    assert s.fabric_by_kind == {}
+
+
+def test_summarize_zero_finished_jobs_named_benchmark():
+    from repro.sim.metrics import summarize
+    s = summarize(_empty_result(), benchmarks=["wordcount"])
+    assert s.avg_jtt == {"wordcount": 0.0}
+    assert s.reduce_locality == {"wordcount": 1.0}
+    loc = s.map_locality["wordcount"]
+    assert (loc.vps, loc.cen, loc.off_cen) == (0.0, 0.0, 0.0)
+
+
+def test_normalized_jtt_guards():
+    from repro.sim.metrics import normalized_jtt, summarize
+    assert normalized_jtt([]) == {}
+    a = summarize(_empty_result(), benchmarks=["wc"])
+    a.algorithm = "fifo"
+    a.avg_jtt = {"wc": 10.0}
+    b = summarize(_empty_result(), benchmarks=["wc"])
+    b.algorithm = "fair"
+    b.avg_jtt = {"wc": 20.0}
+    # missing reference: falls back to the first summary, no StopIteration
+    out = normalized_jtt([a, b], reference="joss-t")
+    assert out["fifo"]["wc"] == 1.0 and out["fair"]["wc"] == 2.0
+    # zero-JTT reference benchmark yields 0.0, not ZeroDivisionError
+    a.avg_jtt = {"wc": 0.0}
+    out = normalized_jtt([a, b], reference="fifo")
+    assert out["fair"]["wc"] == 0.0
+
+
+def test_fabric_by_kind_surfaced_in_summary():
+    from repro.sim.metrics import summarize
+    res = _elastic_run(None)
+    s = summarize(res)
+    assert s.fabric_by_kind
+    assert set(s.fabric_by_kind) == set(res.fabric.by_kind)
+    for kind, (n, mb, stall) in s.fabric_by_kind.items():
+        ref = res.fabric.by_kind[kind]
+        assert (n, mb, stall) == (ref[0], ref[1], ref[2])
+        assert isinstance(n, int)
+    # flow counts add up
+    assert sum(v[0] for v in s.fabric_by_kind.values()) == \
+        res.fabric.n_flows
+
+
+# ------------------------------------------------------------- misc seams --
+def test_telemetry_subsystem_registers_no_event_kinds():
+    from repro.sim.workloads import make_cluster
+
+    class _Sim:
+        fabric = None
+
+        def __init__(self):
+            self.cluster = make_cluster((2, 2))
+            self.jobs = []
+
+    k = EventKernel()
+    before = set(k._handlers)
+    tel = TelemetrySubsystem()
+    tel.attach(_Sim(), k)
+    tel.start(0.0)
+    assert set(k._handlers) == before
+    assert len(k) == 0          # and pushed nothing onto the heap
