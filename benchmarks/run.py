@@ -14,6 +14,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced job counts (CI mode)")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced-seed statistical sweeps (PR lane; "
+                         "full 32-seed runs rewrite the committed "
+                         "claim rows)")
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
     args = ap.parse_args(argv)
@@ -21,7 +25,8 @@ def main(argv=None) -> int:
     from benchmarks import (bench_dispatch, bench_elastic, bench_engine,
                             bench_fabric, bench_filtering, bench_migration,
                             bench_mixed_workload, bench_obs, bench_overhead,
-                            bench_small_workload, bench_threshold)
+                            bench_small_workload, bench_sweep,
+                            bench_threshold)
 
     sections = {
         "filtering": lambda: bench_filtering.run(),
@@ -36,6 +41,8 @@ def main(argv=None) -> int:
         "fabric": lambda: bench_fabric.run(quick=args.quick),
         "migration": lambda: bench_migration.run(quick=args.quick),
         "obs": lambda: bench_obs.run(quick=args.quick),
+        "sweep": lambda: bench_sweep.run(quick=args.quick,
+                                         fast=args.fast),
         "engine": lambda: bench_engine.run(quick=args.quick),
     }
     picked = (args.only.split(",") if args.only else list(sections))

@@ -61,6 +61,21 @@ subsystem's observable behaviour changed, to be acknowledged by
 refreshing the file with a full ``--only obs`` sweep.
 ``--obs-perturb`` poisons the fresh sha for the gate's self-test.
 
+PR 8 adds the **statistical gates**. ``BENCH_sweep.json`` (written by
+full ``--only sweep`` runs) commits the sweep orchestrator's throughput
+gate: the warm content-addressed store must serve cells >= 20x faster
+than the serial single-process baseline, both in the committed row (an
+acceptance-envelope check) and re-measured fresh. The ``claims`` blocks
+of ``BENCH_fabric.json`` / ``BENCH_elastic.json`` commit
+mean/percentile/bootstrap-CI rows over >= 32 seeds per (scenario,
+algorithm, metric) point; the gate re-runs a reduced-seed sweep
+(``SWEEP_GATE_SEEDS``, default 8 — nearly free when the store is warm)
+and fails only when the fresh CI and the stored CI are **disjoint in
+the bad direction** (higher WTT/INT/cost, or a lower JoSS-vs-baseline
+WTT gap). Overlapping intervals never trip: noise within the CI is not
+a regression. ``--ci-perturb`` scales the fresh per-seed WTT values for
+the gate's self-test.
+
 Exit code: 0 = within budget, 1 = regression (or missing trajectory).
 """
 from __future__ import annotations
@@ -79,6 +94,7 @@ JSON_PATH = os.path.join(_ROOT, "BENCH_dispatch.json")
 ELASTIC_JSON_PATH = os.path.join(_ROOT, "BENCH_elastic.json")
 FABRIC_JSON_PATH = os.path.join(_ROOT, "BENCH_fabric.json")
 OBS_JSON_PATH = os.path.join(_ROOT, "BENCH_obs.json")
+SWEEP_JSON_PATH = os.path.join(_ROOT, "BENCH_sweep.json")
 
 #: assign entries are gated at and above this many total map slots — the
 #: scale points PR 1's O(1) envelope was accepted at
@@ -93,6 +109,21 @@ MIN_FABRIC_SPEEDUP = 5.0
 #: (4x1024 hosts), telemetry-on events/s must be at least this fraction
 #: of telemetry-off (matches benchmarks.bench_obs.OVERHEAD_FLOOR)
 MIN_OBS_RATIO = 0.90
+
+#: the PR 8 acceptance envelope: warm-store sweep cells/s over the
+#: serial baseline (matches benchmarks.bench_sweep.MIN_SWEEP_SPEEDUP)
+MIN_SWEEP_SPEEDUP = 20.0
+
+#: every committed statistical claim row must carry at least this many
+#: replicas (seeds) behind its confidence interval
+MIN_CLAIM_SEEDS = 32
+
+#: bad direction per claim metric: True = a higher fresh mean is the
+#: regression direction; False = lower is (the JoSS-vs-baseline gap).
+#: Metrics absent here carry no direction and are never gated.
+HIGHER_IS_BAD = {"wtt": True, "int_mb": True, "work_lost_mb": True,
+                 "cost_dollars": True, "n_reexec": True,
+                 "wtt_gap": False}
 
 
 def _hpp(entry: dict) -> list:
@@ -198,6 +229,135 @@ def _fresh_obs_probe(stored_obs: dict, perturb: bool = False) -> dict:
     sha = res.telemetry.trace.sha256()
     return {"sha256": sha + "!" if perturb else sha,
             "n_events": len(res.telemetry.trace)}
+
+
+def _gate_seeds() -> int:
+    """Replicas of the fresh reduced-seed sweep (a prefix of the
+    committed 32-seed matrix, so a warm store serves it for free)."""
+    return max(2, int(os.environ.get("SWEEP_GATE_SEEDS", "8")))
+
+
+def _fresh_sweep() -> dict:
+    """Re-measure the orchestrator's warm-store throughput against the
+    serial baseline at a reduced-seed contention matrix. The ratio, not
+    the absolute rate, is gated — it is hardware-independent to first
+    order."""
+    import time
+
+    from benchmarks.bench_sweep import contention_matrix
+    from repro.sweep import ResultStore, SweepEngine, run_serial
+    n = _gate_seeds()
+    specs = contention_matrix(n)
+    engine = SweepEngine(workers=1, store=ResultStore())
+    engine.run(specs)                    # populate / refresh the store
+    _, warm = engine.run(specs)          # timed warm pass
+    sample = [s for s in specs if s.seed == 0]
+    t0 = time.perf_counter()
+    run_serial(sample)
+    serial_cps = len(sample) / (time.perf_counter() - t0)
+    return {"n_seeds": n, "warm_cells_per_s": warm.cells_per_s,
+            "serial_cells_per_s": serial_cps,
+            "speedup": warm.cells_per_s / serial_cps}
+
+
+def _fresh_claims(perturb: float = 0.0) -> dict:
+    """Re-run the fabric and elastic claim matrices at reduced seed
+    count and aggregate fresh CI rows. ``perturb`` scales every fresh
+    per-seed WTT value by ``1 + perturb`` (the bad direction) for the
+    gate's self-test."""
+    from benchmarks.bench_sweep import (contention_matrix,
+                                        elastic_claims, elastic_matrix,
+                                        fabric_claims)
+    from repro.sweep import ResultStore, SweepEngine
+    n = _gate_seeds()
+    engine = SweepEngine(workers=1, store=ResultStore())
+    res, _ = engine.run(contention_matrix(n))
+    e_res, _ = engine.run(elastic_matrix(n))
+    if perturb:
+        res = {k: dict(v, wtt=v["wtt"] * (1.0 + perturb))
+               for k, v in res.items()}
+        e_res = {k: dict(v, wtt=v["wtt"] * (1.0 + perturb))
+                 for k, v in e_res.items()}
+    rows, gaps = fabric_claims(res)
+    return {"fabric": rows + gaps, "elastic": elastic_claims(e_res)}
+
+
+def _claim_key(row: dict) -> tuple:
+    return (row.get("scenario"), row.get("algo"), row["metric"])
+
+
+def compare_sweep(stored_sweep: dict, fresh: dict) -> list:
+    """Pure comparison for the orchestrator gate: the committed row
+    must hold the 20x warm-vs-serial acceptance envelope at >= 32
+    seeds, and the fresh re-measure must hold the same floor."""
+    failures = []
+    g = stored_sweep["gate"]
+    if g["n_seeds"] < MIN_CLAIM_SEEDS:
+        failures.append(
+            f"committed sweep gate measured at n_seeds={g['n_seeds']} "
+            f"(< {MIN_CLAIM_SEEDS} — refresh BENCH_sweep.json with a "
+            "full --only sweep run)")
+    if g["speedup"] < MIN_SWEEP_SPEEDUP:
+        failures.append(
+            f"committed sweep speedup is {g['speedup']:.1f}x the serial "
+            f"baseline (acceptance envelope is >= "
+            f"{MIN_SWEEP_SPEEDUP:.0f}x — refresh BENCH_sweep.json)")
+    if fresh["speedup"] < MIN_SWEEP_SPEEDUP:
+        failures.append(
+            f"fresh warm-store sweep only {fresh['speedup']:.1f}x the "
+            f"serial baseline at n_seeds={fresh['n_seeds']} (floor "
+            f"{MIN_SWEEP_SPEEDUP:.0f}x — the content-addressed cache "
+            "is no longer serving re-runs)")
+    return failures
+
+
+def compare_sweep_claims(stored_claims: dict, fresh_rows: list,
+                         label: str) -> list:
+    """Pure comparison for the statistical claim rows: every committed
+    row must carry >= 32 replicas with a CI, have a fresh counterpart,
+    and the fresh CI must not be disjoint from the stored CI in the bad
+    direction (``HIGHER_IS_BAD``; directionless metrics are skipped).
+    Overlapping intervals pass — noise inside the CI is not a
+    regression."""
+    from repro.sweep.stats import ci_regressed
+    failures = []
+    if stored_claims.get("n_seeds", 0) < MIN_CLAIM_SEEDS:
+        failures.append(
+            f"{label} claims committed at n_seeds="
+            f"{stored_claims.get('n_seeds', 0)} (< {MIN_CLAIM_SEEDS} — "
+            "refresh with a full --only sweep run)")
+    fresh_by = {_claim_key(r): r for r in fresh_rows}
+    rows = list(stored_claims.get("rows", []))
+    rows += stored_claims.get("gaps", [])
+    for row in rows:
+        key = _claim_key(row)
+        name = "/".join(str(k) for k in key if k is not None)
+        if row.get("n", 0) < MIN_CLAIM_SEEDS:
+            failures.append(
+                f"{label} claim row {name} carries only "
+                f"{row.get('n', 0)} replicas (< {MIN_CLAIM_SEEDS})")
+        if not (row.get("ci_lo") is not None
+                and row.get("ci_hi") is not None):
+            failures.append(f"{label} claim row {name} has no CI")
+            continue
+        fresh = fresh_by.get(key)
+        if fresh is None:
+            failures.append(
+                f"{label} claim row {name} has no fresh counterpart "
+                "(the sweep matrix drifted — refresh the claims block)")
+            continue
+        bad = HIGHER_IS_BAD.get(row["metric"])
+        if bad is None:
+            continue
+        if ci_regressed(row, fresh, higher_is_bad=bad):
+            failures.append(
+                f"{label} {name}: fresh CI "
+                f"[{fresh['ci_lo']:.2f}, {fresh['ci_hi']:.2f}] "
+                f"(n={fresh['n']}) disjoint from stored "
+                f"[{row['ci_lo']:.2f}, {row['ci_hi']:.2f}] "
+                f"(n={row['n']}) in the bad direction "
+                f"({'higher' if bad else 'lower'} is worse)")
+    return failures
 
 
 def compare_obs(stored_obs: dict, fresh: dict) -> list:
@@ -369,6 +529,15 @@ def main(argv=None) -> int:
                          "(default: BENCH_obs.json)")
     ap.add_argument("--obs-perturb", action="store_true",
                     help="poison the fresh trace sha (gate self-test)")
+    ap.add_argument("--sweep-json", default=SWEEP_JSON_PATH,
+                    help="stored sweep-orchestrator gate "
+                         "(default: BENCH_sweep.json)")
+    ap.add_argument("--ci-perturb", type=float, default=0.0,
+                    help="fractional shift applied to the fresh "
+                         "per-seed WTT values before aggregation (gate "
+                         "self-test: a shift beyond the CI width must "
+                         "trip the statistical gate; noise within it "
+                         "must pass)")
     args = ap.parse_args(argv)
 
     try:
@@ -394,6 +563,12 @@ def main(argv=None) -> int:
             stored_obs = json.load(f)
     except OSError as e:
         print(f"[bench-regression] cannot read obs trajectory: {e}")
+        return 1
+    try:
+        with open(args.sweep_json) as f:
+            stored_sweep = json.load(f)
+    except OSError as e:
+        print(f"[bench-regression] cannot read sweep trajectory: {e}")
         return 1
 
     fresh_assign: dict = {}
@@ -430,12 +605,39 @@ def main(argv=None) -> int:
           f"{fresh_obs['sha256'][:12]}... (stored committed overhead "
           f"ratio {stored_obs['gate']['ratio']:.1%})")
 
+    fresh_sweep = _fresh_sweep()
+    print(f"[bench-regression] sweep: warm store "
+          f"{fresh_sweep['warm_cells_per_s']:.0f} cells/s vs serial "
+          f"{fresh_sweep['serial_cells_per_s']:.0f} "
+          f"({fresh_sweep['speedup']:.0f}x; committed "
+          f"{stored_sweep['gate']['speedup']:.0f}x at n_seeds="
+          f"{stored_sweep['gate']['n_seeds']})")
+
+    fresh_claims = _fresh_claims(args.ci_perturb)
+    n_rows = sum(len(v) for v in fresh_claims.values())
+    print(f"[bench-regression] claims: {n_rows} fresh CI rows at "
+          f"n_seeds={_gate_seeds()}"
+          + (f" (perturbed {args.ci_perturb:+.0%})"
+             if args.ci_perturb else ""))
+
     failures = compare(stored, fresh_assign, fresh_events, args.threshold)
     failures += compare_elastic(stored_elastic, fresh_wtt,
                                 args.wtt_threshold)
     failures += compare_fabric(stored_fabric, fresh_fabric,
                                args.threshold)
     failures += compare_obs(stored_obs, fresh_obs)
+    failures += compare_sweep(stored_sweep, fresh_sweep)
+    for label, path, stored_c in (
+            ("fabric", args.fabric_json, stored_fabric),
+            ("elastic", args.elastic_json, stored_elastic)):
+        claims = stored_c.get("claims")
+        if claims is None:
+            failures.append(
+                f"{os.path.basename(path)} has no claims block — run a "
+                "full --only sweep to commit the statistical rows")
+        else:
+            failures += compare_sweep_claims(claims,
+                                             fresh_claims[label], label)
 
     stored_mig = stored_elastic.get("migration")
     if stored_mig is None:
@@ -456,8 +658,11 @@ def main(argv=None) -> int:
         print(f"[bench-regression] OK: trajectory held within "
               f"{args.threshold:.0%} at every gated perf point "
               f"(dispatch + fabric), {args.wtt_threshold:.2%} at every "
-              f"elastic WTT point, and bit-exact at the migration and "
-              f"telemetry-trace probes")
+              f"elastic WTT point, bit-exact at the migration and "
+              f"telemetry-trace probes, the sweep orchestrator held "
+              f"the {MIN_SWEEP_SPEEDUP:.0f}x warm-store envelope, and "
+              f"every statistical claim row's fresh CI overlapped the "
+              f"stored one")
     return 1 if failures else 0
 
 

@@ -46,6 +46,20 @@
 #                      observation-fed run's full signature, the trace
 #                      JSONL is byte-stable per seed (sha256), and
 #                      trace_limit caps the buffer while counting drops
+#   sweep-claims     — the run-matrix orchestrator's own claims, all
+#                      asserted inside bench_sweep: per-cell results
+#                      bit-identical across worker counts and shuffled
+#                      submission orders (aggregate JSON byte-identical),
+#                      warm content-addressed re-runs >= 20x the serial
+#                      baseline with zero cells re-executed, the scalar
+#                      fill reference bit-identical to the live
+#                      allocator, the batched vmap kernel bit-close with
+#                      identical completion orderings, and the
+#                      statistical claim rows (paired JoSS WTT gap CI >
+#                      0 at every oversubscribed level, widening with
+#                      contention, INT CIs disjoint). SWEEP_LANE=full
+#                      (main) runs 32 seeds; the default fast lane (PRs)
+#                      runs 8
 #   bench-regression — fresh dispatch sweep vs the committed
 #                      BENCH_dispatch.json trajectory (>25% regression at
 #                      the 4096/8192-host points fails) + re-simulated
@@ -61,18 +75,56 @@
 #                      BENCH_obs.json telemetry gate (stored overhead
 #                      ratio must hold the 90% envelope; the trace
 #                      probe re-simulated and its sha256/event count
-#                      must match bit-exactly)
+#                      must match bit-exactly) + the PR 8 statistical
+#                      gates (committed sweep speedup >= 20x re-measured
+#                      fresh; every committed claim row n >= 32 with a
+#                      CI; fresh reduced-seed CIs must overlap the
+#                      stored ones)
+#
+# Every stage carries a soft time budget; a per-stage table at the end
+# flags overruns as warnings (never failures — budgets catch creep, the
+# assertions catch breakage).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# sweep lane: "full" (main; 32 seeds, rewrites the committed claim rows'
+# working copies) vs the default "fast" PR lane (8 seeds, report only)
+SWEEP_LANE="${SWEEP_LANE:-fast}"
+
+STAGE_NAMES=()
+STAGE_TIMES=()
+STAGE_BUDGETS=()
+
 stage() {
-    local name="$1"; shift
+    local name="$1" budget="$2"; shift 2
     echo "== ${name} =="
     local t0=$SECONDS
     "$@"
-    echo "-- [stage ${name}: $((SECONDS - t0))s]"
+    local dt=$((SECONDS - t0))
+    STAGE_NAMES+=("$name")
+    STAGE_TIMES+=("$dt")
+    STAGE_BUDGETS+=("$budget")
+    echo "-- [stage ${name}: ${dt}s (budget ${budget}s)]"
+}
+
+budget_table() {
+    echo "== stage time budgets =="
+    printf '%-18s %8s %8s  %s\n' stage time budget status
+    local i over=0
+    for i in "${!STAGE_NAMES[@]}"; do
+        local status=ok
+        if (( STAGE_TIMES[i] > STAGE_BUDGETS[i] )); then
+            status="WARN over budget (soft)"
+            over=$((over + 1))
+        fi
+        printf '%-18s %7ss %7ss  %s\n' "${STAGE_NAMES[$i]}" \
+            "${STAGE_TIMES[$i]}" "${STAGE_BUDGETS[$i]}" "$status"
+    done
+    if (( over > 0 )); then
+        echo "-- ${over} stage(s) over budget; soft warning only"
+    fi
 }
 
 lint() {
@@ -84,12 +136,22 @@ lint() {
     fi
 }
 
-stage lint lint
-stage tier-1 python -m pytest -x -q
-stage claim-checks python -m benchmarks.run --quick --only overhead,dispatch,small
-stage elastic-claims python -m benchmarks.run --quick --only elastic
-stage fabric-claims python -m benchmarks.run --quick --only fabric
-stage migration-claims python -m benchmarks.run --quick --only migration
-stage obs-claims python -m benchmarks.run --quick --only obs
-stage bench-regression python scripts/check_bench_regression.py
+sweep_claims() {
+    if [ "$SWEEP_LANE" = "full" ]; then
+        python -m benchmarks.run --only sweep
+    else
+        python -m benchmarks.run --fast --only sweep
+    fi
+}
+
+stage lint 90 lint
+stage tier-1 900 python -m pytest -x -q
+stage claim-checks 900 python -m benchmarks.run --quick --only overhead,dispatch,small
+stage elastic-claims 900 python -m benchmarks.run --quick --only elastic
+stage fabric-claims 900 python -m benchmarks.run --quick --only fabric
+stage migration-claims 600 python -m benchmarks.run --quick --only migration
+stage obs-claims 600 python -m benchmarks.run --quick --only obs
+stage sweep-claims 600 sweep_claims
+stage bench-regression 900 python scripts/check_bench_regression.py
+budget_table
 echo "== CI green: $((SECONDS))s total =="

@@ -123,6 +123,12 @@ class FabricConfig:
     log_limit: Optional[int] = None
     elastic: Optional[ElasticLinks] = None
     allocator: str = "fast"
+    #: record up to N fill problems (capacities + class states at a
+    #: reschedule, plus the computed rates / next completion) into
+    #: ``NetworkFabric.fill_snapshots`` — the ground truth the batched
+    #: ``repro.sweep.vmap_fill`` kernel is equivalence-tested against.
+    #: 0 (default) captures nothing, costing one int compare/reschedule.
+    capture_fills: int = 0
 
 
 @dataclasses.dataclass
@@ -338,6 +344,9 @@ class NetworkFabric(_FabricBase):
         self._cap_keys: List[tuple] = []    # parallel bisect keys
         self._users: Dict[LinkKey, List[_Class]] = {}  # link -> classes
         self._nuse: Dict[LinkKey, int] = {}  # link -> live member count
+        #: fill problems recorded when ``cfg.capture_fills`` > 0 (the
+        #: repro.sweep.vmap_fill equivalence corpus)
+        self.fill_snapshots: List[dict] = []
 
     def attach(self, sim, kernel: EventKernel) -> None:
         super().attach(sim, kernel)
@@ -526,6 +535,29 @@ class NetworkFabric(_FabricBase):
                     t_next = t
         if t_next is not None:
             self.kernel.push(t_next, "flow", self._epoch)
+        if (self.cfg.capture_fills
+                and len(self.fill_snapshots) < self.cfg.capture_fills):
+            self._capture_fill(now, t_next)
+
+    def _capture_fill(self, now: float, t_next: Optional[float]) -> None:
+        """Snapshot the fill problem this reschedule just solved — the
+        inputs (link capacities, class membership/caps/progress/fronts)
+        and the outputs (per-class rates, next completion) — for the
+        batched-kernel equivalence suite. Pure observation: reads the
+        post-recompute state and mutates nothing (``_front_target`` only
+        drops already-cancelled tombstones, which is idempotent)."""
+        classes = []
+        for cls in self._order:
+            classes.append({
+                "path": [list(link) for link in cls.path],
+                "cap": cls.cap, "n": cls.n, "vdone": cls.vdone,
+                "target": self._front_target(cls), "rate": cls.rate})
+        self.fill_snapshots.append({
+            "now": now,
+            "links": [[tag, idx, cap] for (tag, idx), cap
+                      in sorted(self._caps.items())],
+            "classes": classes,
+            "dt_next": None if t_next is None else t_next - now})
 
     def _on_flow(self, now: float, epoch: int) -> None:
         if epoch != self._epoch:

@@ -1,0 +1,32 @@
+"""Vectorized Monte-Carlo sweep engine (PR 8).
+
+A run matrix is a list of :class:`~repro.sweep.cells.CellSpec` cells —
+(algorithm x scenario x seed) simulation points. The
+:class:`~repro.sweep.engine.SweepEngine` executes them across parallel
+worker processes with deterministic per-cell seeding (streams re-derived
+from the cell key, never inherited from the pool), serves unchanged
+cells from a content-addressed store
+(:class:`~repro.sweep.cache.ResultStore`, keyed on code fingerprint +
+cell key), and :func:`~repro.sweep.engine.aggregate_cells` turns the
+per-cell metrics into mean/percentile/bootstrap-CI summary rows — the
+statistical claim rows committed in ``BENCH_*.json`` and gated by
+``scripts/check_bench_regression.py``. The arithmetic-heavy fabric
+inner loops additionally exist as a batched ``jax.vmap`` kernel in
+:mod:`repro.sweep.vmap_fill`, equivalence-tested against the scalar
+allocator.
+"""
+from repro.sweep.cache import (DEFAULT_STORE_DIR, ResultStore,
+                               code_fingerprint)
+from repro.sweep.cells import (CELL_FAMILIES, CellSpec, make_params,
+                               matrix, run_cell, summary_metrics)
+from repro.sweep.engine import (SweepEngine, SweepStats, aggregate_cells,
+                                aggregate_json, run_serial)
+from repro.sweep.stats import aggregate, ci_regressed, stable_hash
+
+__all__ = [
+    "DEFAULT_STORE_DIR", "ResultStore", "code_fingerprint",
+    "CELL_FAMILIES", "CellSpec", "make_params", "matrix", "run_cell",
+    "summary_metrics", "SweepEngine", "SweepStats", "aggregate_cells",
+    "aggregate_json", "run_serial", "aggregate", "ci_regressed",
+    "stable_hash",
+]

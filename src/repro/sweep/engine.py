@@ -1,0 +1,185 @@
+"""Run-matrix orchestrator: (algorithm x scenario x seed) cells across
+parallel worker processes, with content-addressed caching and
+deterministic aggregation.
+
+Guarantees the claim checks and CI gates lean on:
+
+  * **bit-identical cells** — a cell's metrics depend only on its
+    :class:`repro.sweep.cells.CellSpec` (the simulation seed is
+    re-derived from the cell key inside the worker), so the same matrix
+    produces the same per-cell results for any worker count, any cell
+    submission order, and any mix of cached/fresh entries. Workers
+    deliberately *poison* their inherited global RNGs at startup
+    (``_poison_worker_rng``): a cell that accidentally consumed pool
+    state would diverge between pool sizes and fail the determinism
+    claims instead of silently biasing a distribution.
+  * **order-independent aggregates** — results are keyed and iterated
+    by canonical cell key, so the aggregate JSON is byte-identical for
+    a shuffled matrix.
+  * **free re-runs** — cells hit the content-addressed store
+    (``repro.sweep.cache.ResultStore``, keyed on code fingerprint +
+    cell key) before any process is spawned; an unchanged matrix on
+    unchanged code executes zero simulations.
+
+Workers are spawned (not forked): a fresh interpreter per worker keeps
+the pool safe next to jax/XLA thread pools in the parent and makes the
+"nothing inherited" property structural rather than accidental.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import json
+import multiprocessing
+import os
+import random
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sweep.cache import ResultStore
+from repro.sweep.cells import CellSpec, run_cell
+from repro.sweep.stats import aggregate
+
+MetricRow = Dict[str, float]
+
+
+@dataclasses.dataclass
+class SweepStats:
+    """Execution accounting for one ``SweepEngine.run``."""
+
+    n_cells: int = 0
+    n_cached: int = 0     # served from the content-addressed store
+    n_executed: int = 0   # actually simulated this run
+    workers: int = 1
+    wall_s: float = 0.0
+
+    @property
+    def cells_per_s(self) -> float:
+        return self.n_cells / self.wall_s if self.wall_s > 0 else 0.0
+
+
+def _poison_worker_rng() -> None:
+    """Worker initializer: scramble the global RNGs with process-local
+    garbage. Cells must re-derive every stream from their cell key; if
+    one ever reads global state instead, pool-of-1 and pool-of-8 runs
+    diverge and the determinism claims fail loudly."""
+    noise = (os.getpid() * 2654435761 + int(time.time_ns() & 0xFFFF))
+    random.seed(noise)
+    np.random.seed(noise % (2 ** 32 - 1))
+
+
+def _worker_run(key: str) -> Tuple[str, MetricRow]:
+    spec = CellSpec.from_key(key)
+    return key, run_cell(spec)
+
+
+class SweepEngine:
+    """Executes cell matrices; see the module docstring for the
+    determinism and caching contract.
+
+    ``workers=1`` runs cells inline (no pool, no RNG poisoning of the
+    calling process); ``workers>1`` spawns that many fresh worker
+    interpreters. ``store=None`` disables caching entirely.
+    """
+
+    def __init__(self, *, workers: int = 1,
+                 store: Optional[ResultStore] = None):
+        self.workers = max(1, int(workers))
+        self.store = store
+
+    def run(self, specs: Sequence[CellSpec]
+            ) -> Tuple[Dict[str, MetricRow], SweepStats]:
+        """Execute every cell, returning ``{cell key: metrics}`` (keyed
+        and sorted canonically — submission order never leaks out) plus
+        execution stats. Duplicate specs are executed once."""
+        t0 = time.perf_counter()
+        stats = SweepStats(workers=self.workers)
+        keys: List[str] = []
+        seen = set()
+        for spec in specs:
+            k = spec.key()
+            if k not in seen:
+                seen.add(k)
+                keys.append(k)
+        stats.n_cells = len(keys)
+
+        results: Dict[str, MetricRow] = {}
+        misses: List[str] = []
+        for k in keys:
+            hit = self.store.get(k) if self.store is not None else None
+            if hit is not None:
+                results[k] = hit
+                stats.n_cached += 1
+            else:
+                misses.append(k)
+
+        if misses:
+            if self.workers == 1:
+                fresh = map(_worker_run, misses)
+            else:
+                # spawn: fresh interpreters, nothing inherited (see
+                # module docstring). chunksize keeps IPC overhead small
+                # without serializing whole scenario groups to one
+                # worker.
+                ctx = multiprocessing.get_context("spawn")
+                pool = concurrent.futures.ProcessPoolExecutor(
+                    max_workers=self.workers, mp_context=ctx,
+                    initializer=_poison_worker_rng)
+                chunk = max(1, len(misses) // (self.workers * 8))
+                fresh = pool.map(_worker_run, misses, chunksize=chunk)
+            for k, metrics in fresh:
+                results[k] = metrics
+                stats.n_executed += 1
+                if self.store is not None:
+                    self.store.put(k, metrics)
+            if self.workers > 1:
+                pool.shutdown()
+
+        stats.wall_s = time.perf_counter() - t0
+        return {k: results[k] for k in sorted(results)}, stats
+
+
+def run_serial(specs: Sequence[CellSpec]) -> Dict[str, MetricRow]:
+    """The baseline the orchestrator's throughput is measured against:
+    plain in-process loop, no cache, no pool."""
+    return {s.key(): run_cell(s) for s in specs}
+
+
+def aggregate_cells(results: Dict[str, MetricRow],
+                    group_by: Iterable[str] = ("scenario", "algo"),
+                    metrics: Optional[Sequence[str]] = None
+                    ) -> List[dict]:
+    """Aggregation layer: group per-cell metric dicts over seeds and
+    emit one summary row (``repro.sweep.stats.aggregate``) per
+    (group, metric). Rows are sorted by (group values, metric), and the
+    bootstrap key is the group+metric identity, so the output is
+    byte-identical however the cells were scheduled."""
+    group_by = tuple(group_by)
+    groups: Dict[tuple, List[MetricRow]] = {}
+    for key in sorted(results):
+        spec = json.loads(key)
+        gid = tuple(str(spec[g]) for g in group_by)
+        groups.setdefault(gid, []).append(results[key])
+    rows: List[dict] = []
+    for gid in sorted(groups):
+        cells = groups[gid]
+        names = metrics if metrics is not None else sorted(cells[0])
+        for m in names:
+            values = [c[m] for c in cells if m in c]
+            if not values:
+                continue
+            row = dict(zip(group_by, gid))
+            row["metric"] = m
+            row.update(aggregate(
+                values, key=f"{'/'.join(gid)}:{m}"))
+            rows.append(row)
+    return rows
+
+
+def aggregate_json(results: Dict[str, MetricRow], **kw) -> str:
+    """Canonical serialized aggregate — the artifact the determinism
+    claims compare byte-for-byte across worker counts and cell
+    orders."""
+    return json.dumps(aggregate_cells(results, **kw), sort_keys=True)

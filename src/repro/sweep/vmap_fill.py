@@ -1,0 +1,320 @@
+"""Batched max-min progressive fill: the fabric allocator's O(pods^2)
+inner loops as a ``jax.vmap``-over-seeds kernel.
+
+The class-aggregated allocator (``repro.sim.network``) spends its
+arithmetic in two places: the progressive-filling recompute (pick the
+most-constrained link, fix every class crossing it, debit) and the
+per-class completion fronts (next completion = min over classes of
+``(target - vdone) / rate``). Both are dense arithmetic over O(P^2)
+flow-equivalence classes and O(P) links — exactly the shape ``vmap``
+batches well: one fill problem is a handful of small arrays, and a
+32-seed sweep evaluates hundreds of *independent* problems.
+
+This module holds the accelerator path and its retained pure-Python
+twin (the same pattern as ``network_reference``):
+
+  * :func:`fill_reference` — scalar progressive filling + front math on
+    one snapshot, mirroring ``NetworkFabric._recompute``/``_reschedule``
+    arithmetic operation-for-operation. Equivalence tests hold it
+    **bit-identical** to the rates the live allocator recorded.
+  * :func:`batched_fill` — the same algorithm as a jitted
+    ``vmap(lax.while_loop)`` over a padded batch, in float64
+    (``jax.experimental.enable_x64``). XLA's fused multiply-adds round
+    the debit step differently from CPython, so the contract vs the
+    scalar path is *bit-close* (<= a few ulp; ``RTOL``), with completion
+    orderings identical — asserted by ``tests/test_sweep_vmap.py`` and
+    the bench_sweep claim checks over real contention-sweep snapshots
+    (captured via ``FabricConfig.capture_fills``).
+
+Problems come as the snapshot dicts ``NetworkFabric`` records:
+
+    {"links":   [[tag, idx, cap], ...],          # sorted by link key
+     "classes": [{"path": [[tag, idx], ...], "cap": c, "n": k,
+                  "vdone": v, "target": t-or-None, "rate": r}, ...],
+     "dt_next": seconds-or-None}                 # scalar outputs
+
+``rate`` and ``dt_next`` are what the live allocator computed — the
+ground truth the kernels are held against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import enable_x64
+    HAVE_JAX = True
+except Exception:  # pragma: no cover - environment without jax
+    HAVE_JAX = False
+
+#: relative tolerance of the bit-close contract between the batched
+#: kernel and the scalar allocator (float64; the only divergence source
+#: is XLA FMA fusion in the debit step, a few ulp per round)
+RTOL = 1e-9
+
+_INF = float("inf")
+
+
+# --------------------------------------------------------- reference --
+def fill_reference(snapshot: dict) -> dict:
+    """Scalar progressive filling + completion-front math on one
+    snapshot — the pure-Python path, arithmetic-identical to
+    ``NetworkFabric._recompute`` (same shares, same tie-breaks, same
+    ``max(0, rem - k * rate)`` debits, same division order)."""
+    links = [((tag, idx), float(cap))
+             for tag, idx, cap in snapshot["links"]]
+    classes = snapshot["classes"]
+    caps = dict(links)
+    rem = dict(caps)
+    nuse = {k: 0 for k in caps}
+    paths = []
+    for c in classes:
+        path = tuple((tag, idx) for tag, idx in c["path"])
+        paths.append(path)
+        for link in path:
+            nuse[link] += c["n"]
+    unfixed = set(range(len(classes)))
+    # fill_key = (cap, ("~cap", sig)) with sig = (path, cap): "~cap"
+    # is a constant prefix, so the order reduces to (cap, sig)
+    cap_order = sorted(unfixed,
+                       key=lambda i: (classes[i]["cap"],
+                                      (paths[i], classes[i]["cap"])))
+    users = {k: [i for i in range(len(classes)) if k in paths[i]]
+             for k in caps}
+    rates = [0.0] * len(classes)
+    ci = 0
+    while unfixed:
+        best_key = None
+        best_link = None
+        for link, n in nuse.items():
+            if n == 0:
+                continue
+            key = (rem[link] / n, link)
+            if best_key is None or key < best_key:
+                best_key, best_link = key, link
+        while ci < len(cap_order) and cap_order[ci] not in unfixed:
+            ci += 1
+        best_cls = None
+        if ci < len(cap_order):
+            i = cap_order[ci]
+            fill_key = (classes[i]["cap"],
+                        ("~cap", (paths[i], classes[i]["cap"])))
+            if best_key is None or fill_key < best_key:
+                best_key, best_link, best_cls = fill_key, None, i
+        rate = best_key[0]
+        fixed = ([best_cls] if best_cls is not None else
+                 [i for i in users[best_link] if i in unfixed])
+        dec: Dict[tuple, int] = {}
+        for i in fixed:
+            rates[i] = rate
+            unfixed.discard(i)
+            for link in paths[i]:
+                dec[link] = dec.get(link, 0) + classes[i]["n"]
+        for link, k in dec.items():
+            nuse[link] -= k
+            rem[link] = max(0.0, rem[link] - k * rate)
+    etas = [( (c["target"] - c["vdone"]) / r
+              if r > 0.0 and c["target"] is not None else None)
+            for c, r in zip(classes, rates)]
+    finite = [e for e in etas if e is not None]
+    return {"rates": rates, "etas": etas,
+            "dt_next": min(finite) if finite else None}
+
+
+# ----------------------------------------------------------- packing --
+class PackedProblems:
+    """A batch of snapshots padded to uniform (C, L): the array form
+    both kernels consume. Padded links carry zero members and +inf
+    capacity; padded classes have n=0 and start pre-fixed."""
+
+    __slots__ = ("caps", "members", "n", "fcap", "cap_rank", "vdone",
+                 "target", "n_classes", "n_links")
+
+    def __init__(self, snapshots: Sequence[dict]):
+        S = len(snapshots)
+        self.n_links = L = max(len(s["links"]) for s in snapshots)
+        self.n_classes = C = max(len(s["classes"]) for s in snapshots)
+        self.caps = np.full((S, L), _INF)
+        self.members = np.zeros((S, C, L))
+        self.n = np.zeros((S, C))
+        self.fcap = np.full((S, C), _INF)
+        self.cap_rank = np.full((S, C), C, dtype=float)
+        self.vdone = np.zeros((S, C))
+        self.target = np.full((S, C), _INF)
+        for si, snap in enumerate(snapshots):
+            link_idx = {}
+            for li, (tag, idx, cap) in enumerate(snap["links"]):
+                link_idx[(tag, idx)] = li
+                self.caps[si, li] = cap
+            paths = []
+            for cj, c in enumerate(snap["classes"]):
+                path = tuple((tag, idx) for tag, idx in c["path"])
+                paths.append(path)
+                for link in path:
+                    self.members[si, cj, link_idx[link]] = 1.0
+                self.n[si, cj] = c["n"]
+                self.fcap[si, cj] = c["cap"]
+                self.vdone[si, cj] = c["vdone"]
+                if c["target"] is not None:
+                    self.target[si, cj] = c["target"]
+            order = sorted(range(len(paths)),
+                           key=lambda i: (snap["classes"][i]["cap"],
+                                          (paths[i],
+                                           snap["classes"][i]["cap"])))
+            for rank, i in enumerate(order):
+                self.cap_rank[si, i] = rank
+
+
+# ------------------------------------------------------- jax kernel ---
+if HAVE_JAX:
+
+    def _fill_one(caps, members, n, fcap, cap_rank):
+        """One progressive fill as dense arithmetic. Links are indexed
+        in sorted-link-key order, so ``argmin``'s first-minimum rule IS
+        the allocator's lexicographic ``(share, link_key)`` tie-break;
+        class caps lose exact ties against real links (strict ``<``),
+        mirroring the ``("~cap", sig)`` sentinel sort."""
+        C = members.shape[0]
+        fixed = n <= 0.0          # padded classes never participate
+        rem = caps
+        rates = jnp.zeros((C,), caps.dtype)
+
+        def cond(state):
+            fixed, _, _ = state
+            return jnp.any(~fixed)
+
+        def body(state):
+            fixed, rem, rates = state
+            live_n = jnp.where(~fixed, n, 0.0)
+            nuse = live_n @ members              # exact integer sums
+            share_l = jnp.where(nuse > 0.0, rem / nuse, jnp.inf)
+            li = jnp.argmin(share_l)             # first min = key order
+            link_share = share_l[li]
+            cap_key = jnp.where(~fixed, fcap, jnp.inf)
+            cap_min = jnp.min(cap_key)
+            ci = jnp.argmin(jnp.where(cap_key == cap_min, cap_rank,
+                                      jnp.inf))
+            cap_wins = cap_min < link_share
+            share = jnp.where(cap_wins, cap_min, link_share)
+            newly = jnp.where(cap_wins, jnp.arange(C) == ci,
+                              (~fixed) & (members[:, li] > 0.0))
+            rates = jnp.where(newly, share, rates)
+            fixed = fixed | newly
+            k_l = jnp.where(newly, n, 0.0) @ members
+            rem = jnp.where(k_l > 0.0,
+                            jnp.maximum(0.0, rem - k_l * share), rem)
+            return fixed, rem, rates
+
+        _, _, rates = lax.while_loop(cond, body, (fixed, rem, rates))
+        return rates
+
+    @functools.lru_cache(maxsize=None)
+    def _jitted_batch():
+        def batch(caps, members, n, fcap, cap_rank, vdone, target):
+            rates = jax.vmap(_fill_one)(caps, members, n, fcap,
+                                        cap_rank)
+            live = (rates > 0.0) & jnp.isfinite(target)
+            etas = jnp.where(live, (target - vdone) / rates, jnp.inf)
+            return rates, etas, jnp.min(etas, axis=1)
+        return jax.jit(batch)
+
+
+def batched_fill(snapshots: Sequence[dict]) -> dict:
+    """Evaluate a batch of fill problems on the jax kernel. Returns
+    ``{"rates": (S, C), "etas": (S, C), "dt_next": (S,)}`` numpy
+    float64 arrays (padded lanes hold rate 0 / eta inf); raises
+    ``RuntimeError`` without jax (callers gate on :data:`HAVE_JAX`)."""
+    if not HAVE_JAX:
+        raise RuntimeError("jax is unavailable; use fill_reference")
+    p = PackedProblems(snapshots)
+    with enable_x64():
+        rates, etas, dt = _jitted_batch()(
+            p.caps, p.members, p.n, p.fcap, p.cap_rank, p.vdone,
+            p.target)
+        return {"rates": np.asarray(rates), "etas": np.asarray(etas),
+                "dt_next": np.asarray(dt)}
+
+
+def batched_fill_reference(snapshots: Sequence[dict]) -> dict:
+    """The pure-Python loop in the batched API shape — the serial
+    baseline of the kernel microbench and the fallback when jax is
+    missing."""
+    S = len(snapshots)
+    C = max(len(s["classes"]) for s in snapshots)
+    rates = np.zeros((S, C))
+    etas = np.full((S, C), _INF)
+    dt = np.full((S,), _INF)
+    for i, snap in enumerate(snapshots):
+        ref = fill_reference(snap)
+        for j, (r, e) in enumerate(zip(ref["rates"], ref["etas"])):
+            rates[i, j] = r
+            if e is not None:
+                etas[i, j] = e
+        if ref["dt_next"] is not None:
+            dt[i] = ref["dt_next"]
+    return {"rates": rates, "etas": etas, "dt_next": dt}
+
+
+def contention_snapshots(algo: str = "joss-t",
+                         scenario: str = "oversub8", *,
+                         n_jobs: int = 12, seed_index: int = 0,
+                         hosts_per_pod: Tuple[int, ...] = (8, 8),
+                         limit: int = 256) -> List[dict]:
+    """The equivalence corpus: real fill problems captured from one
+    contention-sweep cell (``FabricConfig.capture_fills``). The cell is
+    the same construction as ``repro.sweep.cells``'s
+    ``fabric_contention`` family — seed re-derived from the cell key —
+    so the corpus is deterministic and cheap to regenerate anywhere."""
+    from repro.core.joss import make_algorithm
+    from repro.sim.cluster_sim import SimConfig, Simulator
+    from repro.sim.network import FabricConfig
+    from repro.sim.workloads import (fabric_links, make_cluster,
+                                     profiling_prelude, small_workload)
+    from repro.sweep.cells import WAN_OVERSUB, CellSpec, make_params
+    spec = CellSpec("fabric_contention", algo, scenario, seed_index,
+                    make_params(hosts_per_pod=hosts_per_pod,
+                                n_jobs=n_jobs))
+    seed = spec.sim_seed()
+    links = fabric_links(hosts_per_pod,
+                         wan_oversub=WAN_OVERSUB[scenario])
+    cluster = make_cluster(hosts_per_pod, links=links)
+    jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
+    for j in jobs:
+        j.submit_time = 0.0
+    algorithm = make_algorithm(algo, cluster)
+    if hasattr(algorithm, "registry"):
+        for j in profiling_prelude(cluster):
+            algorithm.registry.record(j, j.true_fp)
+    cfg = SimConfig(fabric=FabricConfig(completion_log=False,
+                                        capture_fills=limit))
+    sim = Simulator(cluster, algorithm, jobs, config=cfg, seed=seed)
+    sim.run()
+    return sim.fabric.fill_snapshots
+
+
+def orderings_match(etas_a: np.ndarray, etas_b: np.ndarray,
+                    rtol: float = RTOL) -> bool:
+    """True when two per-class completion-ETA vectors imply the same
+    completion ordering: finite entries sort identically, with entries
+    closer than ``rtol`` treated as ties (the batched kernel may move a
+    value a few ulp, which must never count as a reordering)."""
+    a = np.asarray(etas_a, dtype=float)
+    b = np.asarray(etas_b, dtype=float)
+    if a.shape != b.shape or not np.array_equal(np.isfinite(a),
+                                                np.isfinite(b)):
+        return False
+    idx = np.where(np.isfinite(a))[0]
+    order_a = sorted(idx, key=lambda i: (a[i], i))
+    order_b = sorted(idx, key=lambda i: (b[i], i))
+    for ia, ib in zip(order_a, order_b):
+        if ia == ib:
+            continue
+        # a swap is only legal between near-equal ETAs (a tie)
+        if not np.isclose(a[ia], a[ib], rtol=rtol, atol=0.0):
+            return False
+    return True

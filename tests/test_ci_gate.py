@@ -98,6 +98,33 @@ def _stub_measurements(gate, monkeypatch):
                 "n_events": p["n_events"]}
     monkeypatch.setattr(gate, "_fresh_obs_probe", _echo_obs)
 
+    def _echo_sweep():
+        with open(os.path.join(_ROOT, "BENCH_sweep.json")) as f:
+            g = json.load(f)["gate"]
+        return {"n_seeds": g["n_seeds"], "speedup": g["speedup"],
+                "warm_cells_per_s": g["warm_cells_per_s"],
+                "serial_cells_per_s": g["serial_cells_per_s"]}
+    monkeypatch.setattr(gate, "_fresh_sweep", _echo_sweep)
+
+    def _echo_claims(perturb=0.0):
+        # echo the committed claim rows; the perturbation shifts every
+        # WTT-derived row exactly like the real _fresh_claims (gap rows
+        # scale too — the *good* direction, so only wtt rows may trip)
+        def shift(row):
+            if perturb and row["metric"] in ("wtt", "wtt_gap"):
+                row = {**row, "mean": row["mean"] * (1 + perturb),
+                       "ci_lo": row["ci_lo"] * (1 + perturb),
+                       "ci_hi": row["ci_hi"] * (1 + perturb)}
+            return row
+        with open(os.path.join(_ROOT, "BENCH_fabric.json")) as f:
+            fab = json.load(f)["claims"]
+        with open(os.path.join(_ROOT, "BENCH_elastic.json")) as f:
+            ela = json.load(f)["claims"]
+        return {"fabric": [shift(r)
+                           for r in fab["rows"] + fab["gaps"]],
+                "elastic": [shift(r) for r in ela["rows"]]}
+    monkeypatch.setattr(gate, "_fresh_claims", _echo_claims)
+
 
 def test_main_trips_on_injected_slowdown(gate, stored, monkeypatch):
     """End-to-end through main(): stubbed measurements echo the stored
@@ -345,3 +372,148 @@ def test_obs_gate_matches_stored_probe_live(gate, stored_obs):
     must be exactly reproducible — the trace is deterministic per seed."""
     assert gate.compare_obs(stored_obs,
                             gate._fresh_obs_probe(stored_obs)) == []
+
+
+# --------------------------------------- statistical sweep gates (PR 8) --
+@pytest.fixture(scope="module")
+def stored_sweep():
+    with open(os.path.join(_ROOT, "BENCH_sweep.json")) as f:
+        return json.load(f)
+
+
+def test_sweep_trajectory_holds_the_envelope(stored_sweep):
+    g = stored_sweep["gate"]
+    assert g["n_seeds"] >= 32, \
+        "committed sweep gate measured below 32 seeds"
+    assert g["speedup"] >= 20.0, \
+        "committed sweep gate below the 20x warm-store envelope"
+    assert stored_sweep["determinism"]["aggregate_sha256"]
+    assert stored_sweep["matrix"]["n_cells"] >= 32 * 5 * 3
+
+
+def test_committed_claims_carry_32_seeds_with_cis(stored_fabric,
+                                                  stored_elastic):
+    """The acceptance criterion: every committed BENCH claim row has
+    n >= 32 replicas and a well-formed bootstrap CI around its mean."""
+    for stored in (stored_fabric, stored_elastic):
+        claims = stored["claims"]
+        assert claims["n_seeds"] >= 32
+        rows = claims["rows"] + claims.get("gaps", [])
+        assert rows, "empty claims block"
+        for r in rows:
+            assert r["n"] >= 32
+            assert r["ci_lo"] <= r["mean"] <= r["ci_hi"]
+
+
+def test_compare_sweep_passes_on_committed_gate(gate, stored_sweep):
+    assert gate.compare_sweep(stored_sweep,
+                              dict(stored_sweep["gate"])) == []
+
+
+def test_compare_sweep_fails_below_stored_envelope(gate, stored_sweep):
+    doctored = {"gate": dict(stored_sweep["gate"], speedup=10.0)}
+    failures = gate.compare_sweep(doctored, dict(stored_sweep["gate"]))
+    assert len(failures) == 1 and "acceptance envelope" in failures[0]
+
+
+def test_compare_sweep_fails_on_fresh_cache_rot(gate, stored_sweep):
+    fresh = dict(stored_sweep["gate"], speedup=3.0)
+    failures = gate.compare_sweep(stored_sweep, fresh)
+    assert len(failures) == 1 and "no longer serving" in failures[0]
+
+
+def _fabric_claim_rows(stored_fabric):
+    c = stored_fabric["claims"]
+    return c["rows"] + c["gaps"]
+
+
+def test_compare_sweep_claims_passes_on_identical_rows(gate,
+                                                       stored_fabric):
+    assert gate.compare_sweep_claims(stored_fabric["claims"],
+                                     _fabric_claim_rows(stored_fabric),
+                                     "fabric") == []
+
+
+def test_compare_sweep_claims_fires_on_disjoint_ci(gate, stored_fabric):
+    fresh = [({**r, "ci_lo": r["ci_hi"] * 2 + 1.0,
+               "ci_hi": r["ci_hi"] * 2 + 2.0}
+              if r["metric"] == "wtt" else r)
+             for r in _fabric_claim_rows(stored_fabric)]
+    failures = gate.compare_sweep_claims(stored_fabric["claims"], fresh,
+                                         "fabric")
+    n_wtt = sum(1 for r in stored_fabric["claims"]["rows"]
+                if r["metric"] == "wtt")
+    assert len(failures) == n_wtt
+    assert all("bad direction" in f for f in failures)
+
+
+def test_compare_sweep_claims_good_direction_never_trips(gate,
+                                                         stored_fabric):
+    """A fresh CI disjoint *below* the stored one (faster WTT) passes;
+    a gap CI disjoint *above* (bigger JoSS win) passes too."""
+    fresh = []
+    for r in _fabric_claim_rows(stored_fabric):
+        if r["metric"] == "wtt":
+            fresh.append({**r, "ci_lo": r["ci_lo"] * 0.25,
+                          "ci_hi": r["ci_lo"] * 0.5})
+        elif r["metric"] == "wtt_gap":
+            fresh.append({**r, "ci_lo": r["ci_hi"] * 2,
+                          "ci_hi": r["ci_hi"] * 3})
+        else:
+            fresh.append(r)
+    assert gate.compare_sweep_claims(stored_fabric["claims"], fresh,
+                                     "fabric") == []
+
+
+def test_compare_sweep_claims_fails_on_missing_counterpart(
+        gate, stored_fabric):
+    fresh = [r for r in _fabric_claim_rows(stored_fabric)
+             if r["metric"] != "wtt_gap"]
+    failures = gate.compare_sweep_claims(stored_fabric["claims"], fresh,
+                                         "fabric")
+    n_gaps = len(stored_fabric["claims"]["gaps"])
+    assert len(failures) == n_gaps
+    assert all("no fresh counterpart" in f for f in failures)
+
+
+def test_compare_sweep_claims_fails_on_thin_replicas(gate,
+                                                     stored_fabric):
+    row = dict(stored_fabric["claims"]["rows"][0], n=8)
+    claims = {"n_seeds": 8, "rows": [row], "gaps": []}
+    failures = gate.compare_sweep_claims(claims, [row], "fabric")
+    assert any("n_seeds=8" in f for f in failures)
+    assert any("8 replicas" in f for f in failures)
+
+
+def test_main_trips_on_ci_perturbation(gate, monkeypatch):
+    """End-to-end self-test: an injected mean shift far beyond the CI
+    width must trip the statistical gate; noise within the CI must
+    pass."""
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--ci-perturb", "0.5"]) == 1
+    assert gate.main(["--ci-perturb", "0.002"]) == 0
+
+
+def test_main_fails_cleanly_without_sweep_trajectory(gate, tmp_path,
+                                                     monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--sweep-json",
+                      str(tmp_path / "missing.json")]) == 1
+
+
+def test_main_fails_without_claims_block(gate, stored_fabric, tmp_path,
+                                         monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    crippled = {k: v for k, v in stored_fabric.items() if k != "claims"}
+    p = tmp_path / "fabric.json"
+    p.write_text(json.dumps(crippled))
+    assert gate.main(["--fabric-json", str(p)]) == 1
+
+
+def test_sweep_gate_reproduces_stored_claims_live(gate, stored_fabric):
+    """One real reduced-seed sweep (not stubbed): the fresh CI rows
+    must overlap the committed ones — the cells are deterministic and
+    the committed means came from the same matrix."""
+    fresh = gate._fresh_claims()
+    assert gate.compare_sweep_claims(stored_fabric["claims"],
+                                     fresh["fabric"], "fabric") == []

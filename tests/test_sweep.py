@@ -1,0 +1,184 @@
+"""The sweep orchestrator's contracts (PR 8): canonical cell keys,
+pool-state-free seeding, bit-identical results across worker counts and
+submission orders, content-addressed caching, and deterministic
+aggregation. The throughput and full-matrix claims run in
+``benchmarks/bench_sweep.py``; these tests pin the semantics on tiny
+matrices."""
+import json
+import random
+
+import numpy as np
+import pytest
+
+from repro.sweep import (CellSpec, ResultStore, SweepEngine, aggregate,
+                         aggregate_json, ci_regressed, code_fingerprint,
+                         make_params, matrix, run_cell, run_serial)
+
+#: a tiny-but-real matrix: 2 algorithms x 2 scenarios x 2 seeds of the
+#: fabric contention family (each cell is a full simulation, ~tens of ms)
+TINY = matrix("fabric_contention", ["fifo", "joss-t"],
+              ["uncontended", "oversub8"], 2,
+              hosts_per_pod=(4, 4), n_jobs=6)
+
+
+# ------------------------------------------------------- cell identity --
+def test_cell_key_is_canonical_and_round_trips():
+    a = CellSpec("fabric_contention", "fifo", "oversub8", 3,
+                 make_params(n_jobs=6, hosts_per_pod=(4, 4)))
+    b = CellSpec("fabric_contention", "fifo", "oversub8", 3,
+                 make_params(hosts_per_pod=[4, 4], n_jobs=6))
+    assert a.key() == b.key()          # kwarg order, list vs tuple
+    assert CellSpec.from_key(a.key()) == a
+    assert CellSpec.from_key(a.key()).key() == a.key()
+
+
+def test_sim_seed_derives_from_the_whole_key():
+    base = CellSpec("f", "a", "s", 0)
+    assert base.sim_seed() == CellSpec("f", "a", "s", 0).sim_seed()
+    for other in (CellSpec("f", "a", "s", 1), CellSpec("f", "a", "x", 0),
+                  CellSpec("f", "b", "s", 0),
+                  CellSpec("f", "a", "s", 0, make_params(k=1))):
+        assert other.sim_seed() != base.sim_seed()
+
+
+def test_sim_seed_ignores_global_rng_state():
+    spec = TINY[0]
+    random.seed(123)
+    np.random.seed(123)
+    a = spec.sim_seed()
+    random.seed(987)
+    np.random.seed(987)
+    assert spec.sim_seed() == a
+
+
+def test_run_cell_ignores_global_rng_state():
+    """The satellite-3 fix at cell granularity: a cell's metrics are a
+    function of its spec alone, whatever the global RNGs held."""
+    spec = TINY[0]
+    random.seed(1)
+    np.random.seed(1)
+    a = run_cell(spec)
+    random.seed(0xDEAD)
+    np.random.seed(0xBEEF)
+    assert run_cell(spec) == a
+
+
+# -------------------------------------------- engine and worker pools --
+@pytest.fixture(scope="module")
+def inline_results():
+    results, stats = SweepEngine(workers=1, store=None).run(TINY)
+    assert stats.n_executed == len(TINY)
+    return results
+
+
+def test_pool_of_8_matches_pool_of_1(inline_results):
+    """Workers re-derive RNG streams from the cell key and never
+    inherit pool state: an 8-worker spawn pool must reproduce the
+    inline engine bit-for-bit."""
+    pooled, stats = SweepEngine(workers=8, store=None).run(TINY)
+    assert stats.workers == 8
+    assert pooled == inline_results
+
+
+def test_shuffled_submission_order_is_invisible(inline_results):
+    shuffled = random.Random(7).sample(TINY, len(TINY))
+    results, _ = SweepEngine(workers=1, store=None).run(shuffled)
+    assert results == inline_results
+    assert (aggregate_json(results, metrics=("wtt",))
+            == aggregate_json(inline_results, metrics=("wtt",)))
+
+
+def test_serial_baseline_matches_engine(inline_results):
+    assert run_serial(TINY[:2]) == {
+        k: inline_results[k] for k in (s.key() for s in TINY[:2])}
+
+
+def test_duplicate_specs_execute_once():
+    results, stats = SweepEngine(workers=1, store=None).run(
+        [TINY[0], TINY[0], TINY[0]])
+    assert stats.n_cells == 1 and stats.n_executed == 1
+    assert list(results) == [TINY[0].key()]
+
+
+def test_unknown_family_raises():
+    with pytest.raises(ValueError, match="unknown cell family"):
+        run_cell(CellSpec("no_such_family", "a", "s", 0))
+
+
+# ------------------------------------------------ content-addressed cache --
+def test_store_round_trip_and_cache_hits(tmp_path, inline_results):
+    store = ResultStore(directory=str(tmp_path))
+    engine = SweepEngine(workers=1, store=store)
+    r1, s1 = engine.run(TINY)
+    assert (s1.n_executed, s1.n_cached) == (len(TINY), 0)
+    r2, s2 = engine.run(TINY)
+    assert (s2.n_executed, s2.n_cached) == (0, len(TINY))
+    assert r1 == r2 == inline_results   # cache transparency, bit-exact
+
+
+def test_store_keyed_on_code_fingerprint(tmp_path):
+    a = ResultStore(directory=str(tmp_path), fingerprint="a" * 64)
+    b = ResultStore(directory=str(tmp_path), fingerprint="b" * 64)
+    a.put("cell", {"wtt": 1.0})
+    assert a.get("cell") == {"wtt": 1.0}
+    assert b.get("cell") is None        # other code version: miss
+
+
+def test_store_treats_corruption_as_miss(tmp_path):
+    store = ResultStore(directory=str(tmp_path), fingerprint="c" * 64)
+    store.put("cell", {"wtt": 1.0})
+    path = store._path("cell")
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert store.get("cell") is None
+    store.put("cell", {"wtt": 2.0})     # overwritable after corruption
+    assert store.get("cell") == {"wtt": 2.0}
+
+
+def test_fingerprint_is_stable_within_a_process():
+    assert code_fingerprint() == code_fingerprint()
+    assert len(code_fingerprint()) == 64
+
+
+# ------------------------------------------------- aggregation + gate --
+def test_aggregate_is_deterministic_and_keyed():
+    vals = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]
+    a = aggregate(vals, key="k")
+    assert a == aggregate(list(reversed(vals)), key="k")
+    assert a != aggregate(vals, key="other")    # CI reseeds per key
+    assert a["n"] == len(vals)
+    assert a["ci_lo"] <= a["mean"] <= a["ci_hi"]
+    assert a["p5"] <= a["p50"] <= a["p95"]
+
+
+def test_aggregate_single_value_degenerates():
+    a = aggregate([2.5], key="k")
+    assert a["ci_lo"] == a["mean"] == a["ci_hi"] == 2.5
+
+
+def test_ci_regressed_directions():
+    stored = {"ci_lo": 10.0, "ci_hi": 12.0}
+    # overlap => never a regression, either direction
+    assert not ci_regressed(stored, {"ci_lo": 11.0, "ci_hi": 13.0},
+                            higher_is_bad=True)
+    assert not ci_regressed(stored, {"ci_lo": 9.0, "ci_hi": 10.5},
+                            higher_is_bad=False)
+    # disjoint in the bad direction => regression
+    assert ci_regressed(stored, {"ci_lo": 12.5, "ci_hi": 14.0},
+                        higher_is_bad=True)
+    assert ci_regressed(stored, {"ci_lo": 7.0, "ci_hi": 9.5},
+                        higher_is_bad=False)
+    # disjoint in the good direction => fine
+    assert not ci_regressed(stored, {"ci_lo": 7.0, "ci_hi": 9.5},
+                            higher_is_bad=True)
+    assert not ci_regressed(stored, {"ci_lo": 12.5, "ci_hi": 14.0},
+                            higher_is_bad=False)
+
+
+def test_aggregate_cells_groups_by_scenario_and_algo(inline_results):
+    rows = json.loads(aggregate_json(inline_results, metrics=("wtt",)))
+    keys = {(r["scenario"], r["algo"], r["metric"]) for r in rows}
+    assert keys == {(s, a, "wtt")
+                    for s in ("uncontended", "oversub8")
+                    for a in ("fifo", "joss-t")}
+    assert all(r["n"] == 2 for r in rows)

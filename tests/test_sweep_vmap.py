@@ -1,0 +1,119 @@
+"""Equivalence of the batched ``jax.vmap`` progressive-fill kernel with
+the scalar allocator (PR 8 satellite): the pure-Python reference must be
+**bit-identical** to the rates the live allocator recorded, the batched
+kernel bit-close (``RTOL``) with identical completion orderings, and
+padding must never let one problem leak into another. All jax-dependent
+tests skip cleanly when jax is unavailable."""
+import numpy as np
+import pytest
+
+from repro.sweep import vmap_fill as vf
+
+needs_jax = pytest.mark.skipif(not vf.HAVE_JAX,
+                               reason="jax unavailable")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    """Real fill problems captured from one contended cell."""
+    snaps = vf.contention_snapshots("joss-t", "oversub8", limit=80)
+    assert len(snaps) >= 20, "capture seam produced too few problems"
+    return snaps
+
+
+# ------------------------------------------------- scalar reference --
+def test_reference_bit_identical_to_live_allocator(corpus):
+    for snap in corpus:
+        ref = vf.fill_reference(snap)
+        recorded = [c["rate"] for c in snap["classes"]]
+        assert ref["rates"] == recorded      # bit-identical floats
+        if snap["dt_next"] is None:
+            assert ref["dt_next"] is None
+        else:
+            assert ref["dt_next"] == pytest.approx(snap["dt_next"],
+                                                   rel=1e-12)
+
+
+def test_reference_even_split_on_one_link():
+    snap = {"links": [["wan", 0, 10.0]],
+            "classes": [{"path": [["wan", 0]], "cap": 100.0, "n": 1,
+                         "vdone": 0.0, "target": 5.0},
+                        {"path": [["wan", 0]], "cap": 100.0, "n": 1,
+                         "vdone": 2.5, "target": 5.0}]}
+    ref = vf.fill_reference(snap)
+    assert ref["rates"] == [5.0, 5.0]
+    assert ref["dt_next"] == 0.5             # (5 - 2.5) / 5
+
+
+def test_reference_class_cap_beats_link_share():
+    snap = {"links": [["wan", 0, 10.0]],
+            "classes": [{"path": [["wan", 0]], "cap": 2.0, "n": 1,
+                         "vdone": 0.0, "target": 4.0},
+                        {"path": [["wan", 0]], "cap": 100.0, "n": 1,
+                         "vdone": 0.0, "target": None}]}
+    ref = vf.fill_reference(snap)
+    # the capped class fixes at 2; the survivor takes the remaining 8
+    assert ref["rates"] == [2.0, 8.0]
+    assert ref["dt_next"] == 2.0             # only the finite target
+
+
+# ---------------------------------------------------- batched kernel --
+@needs_jax
+def test_batched_fill_bit_close_with_identical_orderings(corpus):
+    batch = vf.batched_fill(corpus)
+    ref = vf.batched_fill_reference(corpus)
+    assert batch["rates"].shape == ref["rates"].shape
+    assert np.allclose(batch["rates"], ref["rates"], rtol=vf.RTOL,
+                       atol=0.0)
+    assert np.allclose(batch["dt_next"], ref["dt_next"], rtol=vf.RTOL,
+                       equal_nan=True)
+    for i in range(len(corpus)):
+        assert vf.orderings_match(ref["etas"][i], batch["etas"][i])
+
+
+@needs_jax
+def test_padding_never_leaks_across_problems(corpus):
+    """Mixed-shape batches pad every problem to the widest (C, L); a
+    problem's row must not depend on what it is batched with."""
+    sizes = {len(s["classes"]) for s in corpus}
+    assert len(sizes) > 1, "corpus is uniform; padding untested"
+    full = vf.batched_fill(corpus)
+    for i in (0, len(corpus) // 2, len(corpus) - 1):
+        alone = vf.batched_fill([corpus[i]])
+        c = len(corpus[i]["classes"])
+        assert np.allclose(alone["rates"][0, :c], full["rates"][i, :c],
+                           rtol=vf.RTOL, atol=0.0)
+        assert np.allclose(alone["dt_next"][0], full["dt_next"][i],
+                           rtol=vf.RTOL, equal_nan=True)
+
+
+@needs_jax
+def test_padded_lanes_stay_inert(corpus):
+    batch = vf.batched_fill(corpus)
+    for i, snap in enumerate(corpus):
+        c = len(snap["classes"])
+        assert np.all(batch["rates"][i, c:] == 0.0)
+        assert np.all(np.isinf(batch["etas"][i, c:]))
+
+
+def test_batched_reference_matches_scalar(corpus):
+    ref = vf.batched_fill_reference(corpus)
+    for i, snap in enumerate(corpus):
+        one = vf.fill_reference(snap)
+        c = len(snap["classes"])
+        assert list(ref["rates"][i, :c]) == one["rates"]
+
+
+# --------------------------------------------------- ordering helper --
+def test_orderings_match_tolerates_ulp_ties_only():
+    a = np.array([1.0, 2.0, 3.0, np.inf])
+    assert vf.orderings_match(a, a)
+    ulp = np.array([1.0, 2.0 * (1 + 1e-12), 3.0, np.inf])
+    assert vf.orderings_match(a, ulp)
+    swapped = np.array([2.0, 1.0, 3.0, np.inf])    # real reorder
+    assert not vf.orderings_match(a, swapped)
+    near_tie = np.array([1.0, 1.0 + 1e-12, 3.0, np.inf])
+    tie_swap = np.array([1.0 + 1e-12, 1.0, 3.0, np.inf])
+    assert vf.orderings_match(near_tie, tie_swap)
+    finite_drift = np.array([1.0, 2.0, 3.0, 4.0])  # inf became finite
+    assert not vf.orderings_match(a, finite_drift)
