@@ -89,6 +89,18 @@ ELASTIC_CLAIM_METRICS = ("wtt", "work_lost_mb", "cost_dollars",
 #: serial single-process baseline at the full contention matrix
 MIN_SWEEP_SPEEDUP = 20.0
 
+#: the PR 9 lockstep acceptance envelope: scalar inline fill-path
+#: seconds over lockstep batched fill-path seconds at the committed
+#: gate point (fill-path throughput, not end-to-end wall — stepping
+#: the simulators costs the same either way and dilutes the ratio)
+MIN_LOCKSTEP_FILL_SPEEDUP = 3.0
+
+#: the lockstep gate point: 8 pods x 8 hosts, 24 jobs — 17 fabric
+#: links and fills spanning up to ~47 traffic classes, large enough
+#: that the batched kernel beats the scalar allocator per problem
+LOCKSTEP_HOSTS_PER_POD = (8,) * 8
+LOCKSTEP_N_JOBS = 24
+
 #: replicas per (algorithm, scenario) point on full sweeps — the floor
 #: every committed claim row must carry
 FULL_SEEDS = 32
@@ -112,6 +124,14 @@ def contention_matrix(n_seeds: int) -> list:
 def elastic_matrix(n_seeds: int) -> list:
     return matrix("elastic_churn", ALGOS, ELASTIC_SCENARIOS, n_seeds,
                   fleet=(8, 8), n_jobs=40)
+
+
+def lockstep_matrix(n_seeds: int) -> list:
+    """The lockstep gate matrix: the contention family at the larger
+    8x8-pod / 24-job operating point (480 cells at 32 seeds)."""
+    return matrix("fabric_contention", ALGOS, SCENARIOS, n_seeds,
+                  hosts_per_pod=LOCKSTEP_HOSTS_PER_POD,
+                  n_jobs=LOCKSTEP_N_JOBS)
 
 
 def _by_spec(results: Dict[str, dict]) -> Dict[tuple, dict]:
@@ -164,19 +184,24 @@ def claim_row(rows: Sequence[dict], scenario: str, algo: Optional[str],
     raise KeyError((scenario, algo, metric))
 
 
-def _merge_claims(path: str, claims: dict) -> None:
-    """Read-modify-write a committed BENCH file's ``claims`` block,
-    preserving everything else (e.g. the migration row bench_migration
-    owns in BENCH_elastic.json)."""
+def _merge_key(path: str, key: str, value: dict) -> None:
+    """Read-modify-write one top-level block of a committed BENCH
+    file, preserving every block another bench owns (e.g. the
+    migration row bench_migration owns in BENCH_elastic.json, or the
+    lockstep block in BENCH_sweep.json)."""
     try:
         with open(path) as f:
             payload = json.load(f)
     except OSError:
         payload = {}
-    payload["claims"] = claims
+    payload[key] = value
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
+
+
+def _merge_claims(path: str, claims: dict) -> None:
+    _merge_key(path, "claims", claims)
 
 
 def refresh_fabric_claims(n_seeds: int = FULL_SEEDS) -> Tuple[List[dict],
@@ -364,24 +389,24 @@ def run(quick: bool = False, fast: bool = False) -> str:
 
     # -------------------------------------------------- committed files --
     if write:
-        payload = {
-            "matrix": {"family": "fabric_contention",
-                       "algos": list(ALGOS),
-                       "scenarios": list(SCENARIOS),
-                       "n_seeds": n_seeds, "n_cells": cold.n_cells},
-            "gate": {"n_seeds": n_seeds, "n_cells": warm.n_cells,
-                     "serial_cells_per_s": serial_cps,
-                     "warm_cells_per_s": warm.cells_per_s,
-                     "speedup": speedup, "serial_sample": len(sample),
-                     "fingerprint": fp[:16]},
-            "determinism": {"n_cells": len(det),
-                            "workers_checked": [1, n_pool],
-                            "aggregate_sha256": agg_sha},
-            "vmap": vmap_row,
-        }
-        with open(JSON_PATH, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-            f.write("\n")
+        # read-modify-write: the lockstep block (owned by run_lockstep)
+        # survives a full sweep refresh
+        for key, value in (
+                ("matrix", {"family": "fabric_contention",
+                            "algos": list(ALGOS),
+                            "scenarios": list(SCENARIOS),
+                            "n_seeds": n_seeds, "n_cells": cold.n_cells}),
+                ("gate", {"n_seeds": n_seeds, "n_cells": warm.n_cells,
+                          "serial_cells_per_s": serial_cps,
+                          "warm_cells_per_s": warm.cells_per_s,
+                          "speedup": speedup,
+                          "serial_sample": len(sample),
+                          "fingerprint": fp[:16]}),
+                ("determinism", {"n_cells": len(det),
+                                 "workers_checked": [1, n_pool],
+                                 "aggregate_sha256": agg_sha}),
+                ("vmap", vmap_row)):
+            _merge_key(JSON_PATH, key, value)
         _merge_claims(FABRIC_JSON_PATH,
                       {"n_seeds": n_seeds, "rows": rows, "gaps": gaps})
         _merge_claims(ELASTIC_JSON_PATH,
@@ -397,6 +422,155 @@ def run(quick: bool = False, fast: bool = False) -> str:
                        "elastic": e_rows}, f, indent=1, sort_keys=True)
             f.write("\n")
         out += f"\n\n[reduced-seed run: aggregate report -> {report}]"
+    return out
+
+
+def _scalar_baseline(specs) -> Tuple[Dict[str, dict], float, float, int]:
+    """Serial scalar reference for the lockstep table: every cell runs
+    through the same lockstep builder but with a *timed* inline
+    backend, so the fill-path seconds are the honest cost of the
+    scalar allocator doing exactly the solves the inline path does
+    (no deferral, no coalescing). Returns (results, wall_s, fill_s,
+    n_fills)."""
+    from repro.sim.network import InlineFillBackend
+    from repro.sweep.cells import LOCKSTEP_BUILDERS
+    results: Dict[str, dict] = {}
+    fill_s = 0.0
+    n_fills = 0
+    t0 = time.perf_counter()
+    for spec in specs:
+        sim, finish = LOCKSTEP_BUILDERS[spec.family](spec)
+        sim.begin()
+        backend = InlineFillBackend(timed=True)
+        sim.fabric.fill_backend = backend
+        end = sim.step()
+        results[spec.key()] = finish(sim.finish(end))
+        fill_s += backend.fill_s
+        n_fills += backend.n_fills
+    wall_s = time.perf_counter() - t0
+    return ({k: results[k] for k in sorted(results)},
+            wall_s, fill_s, n_fills)
+
+
+def run_lockstep(quick: bool = False, fast: bool = False) -> str:
+    """PR 9 tentpole bench: the lockstep batched executor vs the
+    scalar inline allocator vs the process pool, at the committed
+    gate point (``LOCKSTEP_HOSTS_PER_POD`` x ``LOCKSTEP_N_JOBS``).
+
+    Asserted claims:
+
+      * **bit-identity** — lockstep per-cell metric dicts equal the
+        scalar runs exactly (completion orderings included: the
+        metrics are completion-derived) and the aggregate claim JSON
+        is byte-identical;
+      * **degradation** — without jax (``use_jax=False``) the
+        executor's scalar deferred path reproduces the same results
+        bit-for-bit;
+      * **fill throughput** — the batched fill path is >=
+        ``MIN_LOCKSTEP_FILL_SPEEDUP`` (3x) faster than the scalar
+        allocator's fill path on full runs (half that as a smoke
+        floor on reduced --quick/--fast lanes, where per-run noise
+        on 120 cells is material).
+
+    Full runs merge a ``lockstep`` block into ``BENCH_sweep.json``
+    (read-modify-write — the orchestrator blocks ``run`` owns are
+    preserved), which ``scripts/check_bench_regression.py`` gates.
+    """
+    from repro.sweep import LockstepExecutor
+    from repro.sweep.vmap_fill import HAVE_JAX
+    n_seeds = sweep_seeds(quick or fast)
+    write = not (quick or fast)
+    specs = lockstep_matrix(n_seeds)
+    out = (f"\n## Lockstep batched execution — live simulation through "
+           f"the vmap fill kernel ({len(specs)} cells at "
+           f"{len(LOCKSTEP_HOSTS_PER_POD)}x"
+           f"{LOCKSTEP_HOSTS_PER_POD[0]} hosts, "
+           f"{LOCKSTEP_N_JOBS} jobs, n_seeds={n_seeds})")
+
+    # ------------------------------------------------- scalar baseline --
+    scalar, s_wall, s_fill, s_fills = _scalar_baseline(specs)
+
+    # ------------------------------------------------ lockstep executor --
+    ex = LockstepExecutor()
+    res = ex.run(specs)
+    st = ex.stats
+    assert set(res) == set(scalar), "lockstep lost or invented cells"
+    assert all(res[k] == scalar[k] for k in scalar), \
+        "lockstep per-cell metrics diverged from the scalar runs"
+    agg_l = aggregate_json(res, metrics=FABRIC_CLAIM_METRICS)
+    agg_s = aggregate_json(scalar, metrics=FABRIC_CLAIM_METRICS)
+    assert agg_l == agg_s, \
+        "lockstep aggregate claim JSON is not byte-identical"
+    agg_sha = hashlib.sha256(agg_l.encode()).hexdigest()
+
+    # --------------------------------------- degradation without jax --
+    nojax_specs = [s for s in specs if s.seed == 0]
+    nojax = LockstepExecutor(use_jax=False).run(nojax_specs)
+    assert all(nojax[s.key()] == scalar[s.key()] for s in nojax_specs), \
+        "scalar deferred path (no jax) diverged from the inline runs"
+
+    # ------------------------------------------------- process pool row --
+    n_pool = 2 if (quick or fast) else 4
+    t0 = time.perf_counter()
+    r_pool, _ = SweepEngine(workers=n_pool, store=None).run(specs)
+    pool_wall = time.perf_counter() - t0
+    assert r_pool == scalar, \
+        f"pool-of-{n_pool} diverged from the scalar baseline"
+
+    # -------------------------------------------------------- the table --
+    fill_speedup = s_fill / st.fill_s if st.fill_s > 0 else float("inf")
+    coalesce = st.problems / max(1, s_fills)
+    out += "\n" + table(
+        "Lockstep vs scalar vs process pool — same cells, bit-identical "
+        "metrics; 'fill s' is wall time inside the allocator (the gated "
+        "axis), 'wall s' is end-to-end",
+        ["path", "cells", "fill s", "fill solves", "wall s"],
+        [["scalar inline", len(specs), f"{s_fill:.2f}", s_fills,
+          f"{s_wall:.2f}"],
+         ["lockstep (batched)", st.n_cells, f"{st.fill_s:.2f}",
+          st.problems, f"{st.wall_s:.2f}"],
+         [f"process pool x{n_pool}", len(r_pool), "-", "-",
+          f"{pool_wall:.2f}"],
+         ["fill speedup", "-", f"{fill_speedup:.2f}x", "-",
+          f"{s_wall / st.wall_s:.2f}x"]])
+    out += (f"\n[lockstep: {st.epochs} epochs, {st.batches} kernel "
+            f"batches, {st.inline_small} small problems inlined, "
+            f"deferred coalescing {coalesce:.2f}x "
+            f"({st.problems} problems vs {s_fills} inline solves), "
+            f"used_jax={st.used_jax}]")
+    out += (f"\n[claim check: lockstep bit-identical to scalar on "
+            f"{len(specs)} cells (aggregate sha {agg_sha[:12]}...); "
+            f"no-jax deferred path bit-identical on "
+            f"{len(nojax_specs)} cells]")
+
+    floor = (MIN_LOCKSTEP_FILL_SPEEDUP if write
+             else MIN_LOCKSTEP_FILL_SPEEDUP / 2)
+    if st.used_jax:
+        assert fill_speedup >= floor, \
+            f"lockstep fill path only {fill_speedup:.2f}x the scalar " \
+            f"allocator (need >= {floor:.1f}x)"
+        out += (f"\n[claim check: batched fill path {fill_speedup:.2f}x "
+                f"the scalar allocator (floor {floor:.1f}x)]")
+    else:  # pragma: no cover - environment without jax
+        out += "\n(jax unavailable: fill-throughput gate skipped)"
+
+    if write and st.used_jax:
+        _merge_key(JSON_PATH, "lockstep", {
+            "hosts_per_pod": list(LOCKSTEP_HOSTS_PER_POD),
+            "n_jobs": LOCKSTEP_N_JOBS, "n_seeds": n_seeds,
+            "n_cells": len(specs), "gang_size": ex.gang_size,
+            "scalar_fill_s": s_fill, "scalar_fills": s_fills,
+            "lockstep_fill_s": st.fill_s, "problems": st.problems,
+            "epochs": st.epochs, "batches": st.batches,
+            "inline_small": st.inline_small,
+            "fill_speedup": fill_speedup,
+            "scalar_wall_s": s_wall, "lockstep_wall_s": st.wall_s,
+            "pool_wall_s": pool_wall, "pool_workers": n_pool,
+            "aggregate_sha256": agg_sha})
+        out += (f"\n\n[merged lockstep block into "
+                f"{os.path.basename(JSON_PATH)}]")
+    elif not HAVE_JAX:  # pragma: no cover
+        out += "\n(jax unavailable: lockstep block not written)"
     return out
 
 

@@ -43,6 +43,8 @@ def main(argv=None) -> int:
         "obs": lambda: bench_obs.run(quick=args.quick),
         "sweep": lambda: bench_sweep.run(quick=args.quick,
                                          fast=args.fast),
+        "lockstep": lambda: bench_sweep.run_lockstep(quick=args.quick,
+                                                     fast=args.fast),
         "engine": lambda: bench_engine.run(quick=args.quick),
     }
     picked = (args.only.split(",") if args.only else list(sections))

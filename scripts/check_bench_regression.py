@@ -76,6 +76,19 @@ WTT gap). Overlapping intervals never trip: noise within the CI is not
 a regression. ``--ci-perturb`` scales the fresh per-seed WTT values for
 the gate's self-test.
 
+PR 9 adds the **lockstep gate** on the ``lockstep`` block of
+``BENCH_sweep.json`` (written by full ``--only lockstep`` runs): the
+committed gate point must show the batched lockstep executor's fill
+path >= 3x the scalar inline allocator at >= 32 seeds (the acceptance
+envelope — a static check on the stored block), and a fresh
+reduced-seed run re-establishes the correctness contract: lockstep
+per-cell metrics and aggregate claim JSON must be *bit-identical* to
+serial scalar runs (deterministic — any drift is a behaviour change),
+while the fresh fill speedup only has to clear a half-envelope smoke
+floor (wall-clock ratios at reduced seeds are noisy; the committed
+full-seed number carries the envelope). ``--lockstep-perturb`` divides
+the fresh speedup for the gate's self-test.
+
 Exit code: 0 = within budget, 1 = regression (or missing trajectory).
 """
 from __future__ import annotations
@@ -117,6 +130,12 @@ MIN_SWEEP_SPEEDUP = 20.0
 #: every committed statistical claim row must carry at least this many
 #: replicas (seeds) behind its confidence interval
 MIN_CLAIM_SEEDS = 32
+
+#: the PR 9 acceptance envelope: batched lockstep fill-path seconds vs
+#: the scalar inline allocator at the committed gate point (matches
+#: benchmarks.bench_sweep.MIN_LOCKSTEP_FILL_SPEEDUP); fresh reduced-
+#: seed re-measures only have to clear half of it (smoke floor)
+MIN_LOCKSTEP_FILL_SPEEDUP = 3.0
 
 #: bad direction per claim metric: True = a higher fresh mean is the
 #: regression direction; False = lower is (the JoSS-vs-baseline gap).
@@ -260,6 +279,30 @@ def _fresh_sweep() -> dict:
             "speedup": warm.cells_per_s / serial_cps}
 
 
+def _fresh_lockstep(perturb: float = 1.0) -> dict:
+    """Re-run the lockstep gate matrix at reduced seed count: a serial
+    scalar pass (timed inline backend) and a batched lockstep pass over
+    the same cells. Bit-identity is the deterministic part of the
+    contract; the fill speedup is wall-clock and therefore only smoke-
+    floored here. ``perturb`` divides the fresh speedup for the gate's
+    self-test."""
+    from benchmarks.bench_sweep import _scalar_baseline, lockstep_matrix
+    from repro.sweep import LockstepExecutor, aggregate_json
+    n = _gate_seeds()
+    specs = lockstep_matrix(n)
+    scalar, _, s_fill, _ = _scalar_baseline(specs)
+    ex = LockstepExecutor()
+    res = ex.run(specs)
+    st = ex.stats
+    identical = (set(res) == set(scalar)
+                 and all(res[k] == scalar[k] for k in scalar)
+                 and aggregate_json(res) == aggregate_json(scalar))
+    speedup = s_fill / st.fill_s if st.fill_s > 0 else float("inf")
+    return {"n_seeds": n, "n_cells": len(specs),
+            "identical": identical, "used_jax": st.used_jax,
+            "fill_speedup": speedup / perturb}
+
+
 def _fresh_claims(perturb: float = 0.0) -> dict:
     """Re-run the fabric and elastic claim matrices at reduced seed
     count and aggregate fresh CI rows. ``perturb`` scales every fresh
@@ -308,6 +351,40 @@ def compare_sweep(stored_sweep: dict, fresh: dict) -> list:
             f"serial baseline at n_seeds={fresh['n_seeds']} (floor "
             f"{MIN_SWEEP_SPEEDUP:.0f}x — the content-addressed cache "
             "is no longer serving re-runs)")
+    return failures
+
+
+def compare_lockstep(stored_lock: dict, fresh: dict) -> list:
+    """Pure comparison for the lockstep gate: the committed block must
+    hold the 3x fill-path acceptance envelope at >= 32 seeds, the
+    fresh reduced-seed run must be bit-identical to scalar execution
+    (deterministic — a mismatch is a behaviour change, not noise), and
+    the fresh fill speedup must clear the half-envelope smoke floor."""
+    failures = []
+    if stored_lock["n_seeds"] < MIN_CLAIM_SEEDS:
+        failures.append(
+            f"committed lockstep gate measured at n_seeds="
+            f"{stored_lock['n_seeds']} (< {MIN_CLAIM_SEEDS} — refresh "
+            "BENCH_sweep.json with a full --only lockstep run)")
+    if stored_lock["fill_speedup"] < MIN_LOCKSTEP_FILL_SPEEDUP:
+        failures.append(
+            f"committed lockstep fill speedup is "
+            f"{stored_lock['fill_speedup']:.2f}x the scalar allocator "
+            f"(acceptance envelope is >= "
+            f"{MIN_LOCKSTEP_FILL_SPEEDUP:.0f}x — refresh "
+            "BENCH_sweep.json with a full --only lockstep run)")
+    if not fresh["identical"]:
+        failures.append(
+            "lockstep executor no longer bit-identical to scalar runs "
+            f"at the gate matrix (n_seeds={fresh['n_seeds']}) — the "
+            "batched fill path's behaviour changed")
+    floor = MIN_LOCKSTEP_FILL_SPEEDUP / 2
+    if fresh["used_jax"] and fresh["fill_speedup"] < floor:
+        failures.append(
+            f"fresh lockstep fill path only {fresh['fill_speedup']:.2f}x "
+            f"the scalar allocator at n_seeds={fresh['n_seeds']} "
+            f"(smoke floor {floor:.1f}x — the batched kernel is no "
+            "longer paying for itself)")
     return failures
 
 
@@ -532,6 +609,9 @@ def main(argv=None) -> int:
     ap.add_argument("--sweep-json", default=SWEEP_JSON_PATH,
                     help="stored sweep-orchestrator gate "
                          "(default: BENCH_sweep.json)")
+    ap.add_argument("--lockstep-perturb", type=float, default=1.0,
+                    help="divide the fresh lockstep fill speedup (gate "
+                         "self-test)")
     ap.add_argument("--ci-perturb", type=float, default=0.0,
                     help="fractional shift applied to the fresh "
                          "per-seed WTT values before aggregation (gate "
@@ -613,6 +693,17 @@ def main(argv=None) -> int:
           f"{stored_sweep['gate']['speedup']:.0f}x at n_seeds="
           f"{stored_sweep['gate']['n_seeds']})")
 
+    stored_lock = stored_sweep.get("lockstep")
+    fresh_lock = None
+    if stored_lock is not None:
+        fresh_lock = _fresh_lockstep(args.lockstep_perturb)
+        print(f"[bench-regression] lockstep: fill "
+              f"{fresh_lock['fill_speedup']:.2f}x scalar at n_seeds="
+              f"{fresh_lock['n_seeds']}, bit-identical="
+              f"{fresh_lock['identical']} (committed "
+              f"{stored_lock['fill_speedup']:.2f}x at n_seeds="
+              f"{stored_lock['n_seeds']})")
+
     fresh_claims = _fresh_claims(args.ci_perturb)
     n_rows = sum(len(v) for v in fresh_claims.values())
     print(f"[bench-regression] claims: {n_rows} fresh CI rows at "
@@ -627,6 +718,12 @@ def main(argv=None) -> int:
                                args.threshold)
     failures += compare_obs(stored_obs, fresh_obs)
     failures += compare_sweep(stored_sweep, fresh_sweep)
+    if stored_lock is None:
+        failures.append(
+            "BENCH_sweep.json has no lockstep block — run a full "
+            "--only lockstep sweep to commit the gate")
+    else:
+        failures += compare_lockstep(stored_lock, fresh_lock)
     for label, path, stored_c in (
             ("fabric", args.fabric_json, stored_fabric),
             ("elastic", args.elastic_json, stored_elastic)):
@@ -660,9 +757,11 @@ def main(argv=None) -> int:
               f"(dispatch + fabric), {args.wtt_threshold:.2%} at every "
               f"elastic WTT point, bit-exact at the migration and "
               f"telemetry-trace probes, the sweep orchestrator held "
-              f"the {MIN_SWEEP_SPEEDUP:.0f}x warm-store envelope, and "
-              f"every statistical claim row's fresh CI overlapped the "
-              f"stored one")
+              f"the {MIN_SWEEP_SPEEDUP:.0f}x warm-store envelope, the "
+              f"lockstep executor stayed bit-identical with its "
+              f"{MIN_LOCKSTEP_FILL_SPEEDUP:.0f}x fill envelope "
+              f"committed, and every statistical claim row's fresh CI "
+              f"overlapped the stored one")
     return 1 if failures else 0
 
 

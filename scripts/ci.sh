@@ -60,6 +60,16 @@
 #                      contention, INT CIs disjoint). SWEEP_LANE=full
 #                      (main) runs 32 seeds; the default fast lane (PRs)
 #                      runs 8
+#   lockstep-claims  — the PR 9 lockstep executor's claims, all
+#                      asserted inside bench_sweep.run_lockstep: the
+#                      batched executor's per-cell metrics bit-identical
+#                      to serial scalar runs at the committed gate
+#                      point (aggregate claim JSON byte-identical), the
+#                      no-jax scalar deferred path bit-identical too,
+#                      and the batched fill path holds the throughput
+#                      smoke floor (full 3x envelope gated on the
+#                      committed BENCH_sweep.json lockstep block by
+#                      bench-regression)
 #   bench-regression — fresh dispatch sweep vs the committed
 #                      BENCH_dispatch.json trajectory (>25% regression at
 #                      the 4096/8192-host points fails) + re-simulated
@@ -79,7 +89,12 @@
 #                      gates (committed sweep speedup >= 20x re-measured
 #                      fresh; every committed claim row n >= 32 with a
 #                      CI; fresh reduced-seed CIs must overlap the
-#                      stored ones)
+#                      stored ones) + the PR 9 lockstep gate (the
+#                      committed lockstep block must hold the 3x
+#                      fill-path envelope at >= 32 seeds; a fresh
+#                      reduced-seed run must stay bit-identical to
+#                      scalar execution and clear the half-envelope
+#                      smoke floor)
 #
 # Every stage carries a soft time budget; a per-stage table at the end
 # flags overruns as warnings (never failures — budgets catch creep, the
@@ -152,6 +167,7 @@ stage fabric-claims 900 python -m benchmarks.run --quick --only fabric
 stage migration-claims 600 python -m benchmarks.run --quick --only migration
 stage obs-claims 600 python -m benchmarks.run --quick --only obs
 stage sweep-claims 600 sweep_claims
+stage lockstep-claims 300 python -m benchmarks.run --quick --only lockstep
 stage bench-regression 900 python scripts/check_bench_regression.py
 budget_table
 echo "== CI green: $((SECONDS))s total =="

@@ -163,6 +163,21 @@ class Simulator:
 
     # ------------------------------------------------------------------ run --
     def run(self) -> SimResult:
+        self.begin()
+        end = self.kernel.run(post_step=self._dispatch_fn,
+                              stop=self._drained)
+        return self.finish(end)
+
+    # -- resumable protocol (PR 9 lockstep seam) ------------------------------
+    # ``run()`` is exactly ``begin(); end = step(); finish(end)`` — the
+    # split exists so a driver can interleave many simulators: pause each
+    # at an event boundary (e.g. a deferred fabric fill), service the
+    # batch, and resume. No state beyond the kernel's own heap/now is
+    # held between calls, so a paused simulator is indistinguishable
+    # from one mid-``run()``.
+    def begin(self) -> None:
+        """Build all run state and enqueue initial events; no event is
+        processed yet."""
         kernel = self.kernel = self._make_kernel()
         subs = self._setup_state()
         kernel.register("submit", self._on_submit)
@@ -179,7 +194,15 @@ class Simulator:
         dispatch = (self._naive_dispatch if self.cfg.poll_all_hosts
                     else self._dispatch)
         self._dispatch_fn = dispatch
-        end = kernel.run(post_step=dispatch, stop=self._drained)
+
+    def step(self, pause=None) -> float:
+        """Drain events until done, the heap empties, or ``pause()``
+        returns true at an event boundary. Returns the last processed
+        event time; call again to resume."""
+        return self.kernel.run(post_step=self._dispatch_fn,
+                               stop=self._drained, pause=pause)
+
+    def finish(self, end: float) -> SimResult:
         return self._finalize(end)
 
     def _drained(self) -> bool:

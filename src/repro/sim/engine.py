@@ -111,9 +111,18 @@ class EventKernel:
 
     # -- loop -------------------------------------------------------------------
     def run(self, *, post_step: Optional[Callable[[float], None]] = None,
-            stop: Optional[Callable[[], bool]] = None) -> float:
+            stop: Optional[Callable[[], bool]] = None,
+            pause: Optional[Callable[[], bool]] = None) -> float:
         """Drain events until the heap empties or ``stop()`` is true after
-        an event. Returns the time of the last processed event."""
+        an event. Returns the time of the last processed event.
+
+        ``pause`` is the lockstep seam (PR 9): checked after ``stop`` at
+        every event boundary, a true return suspends the loop *without*
+        consuming state — the caller may service whatever the pause
+        signals (e.g. a deferred fabric fill) and call ``run`` again to
+        resume exactly where it left off. Heap, registry and ``now``
+        survive across calls, so resumption is indistinguishable from
+        never having paused."""
         heap = self._heap
         handlers = self._handlers
         self_stepping = self._self_stepping
@@ -126,6 +135,8 @@ class EventKernel:
                     and kind not in self_stepping):
                 post_step(now)
             if stop is not None and stop():
+                break
+            if pause is not None and pause():
                 break
         return now
 
@@ -210,7 +221,8 @@ class ProfilingKernel(EventKernel):
         self.post_step_s = 0.0
 
     def run(self, *, post_step: Optional[Callable[[float], None]] = None,
-            stop: Optional[Callable[[], bool]] = None) -> float:
+            stop: Optional[Callable[[], bool]] = None,
+            pause: Optional[Callable[[], bool]] = None) -> float:
         import time
         perf = time.perf_counter
         heap = self._heap
@@ -231,5 +243,7 @@ class ProfilingKernel(EventKernel):
                 post_step(now)
                 self.post_step_s += perf() - t0
             if stop is not None and stop():
+                break
+            if pause is not None and pause():
                 break
         return now

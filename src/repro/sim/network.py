@@ -74,6 +74,24 @@ capacity x horizon) and per-flow *stall* — time lost versus the flow's
 uncontended time ``mb / cap`` — aggregated per kind into
 :class:`FabricSummary` and surfaced as ``SimResult.fabric``,
 ``fabric_stall_s``, ``fabric_mb`` and ``wan_util``.
+
+The fill backend seam (PR 9)
+----------------------------
+Every flow-set or capacity change solves one *fill problem* (the
+progressive-filling recompute). The fast allocator exposes that point
+as a pluggable hook: installing a :class:`FillBackend` on
+``NetworkFabric.fill_backend`` switches ``_reschedule`` from solving
+inline to *deferring* — the fabric marks the fill pending, notifies the
+backend, and arms nothing. The solution must arrive (``apply_fill`` with
+externally computed per-class rates, or ``solve_fill_inline`` for the
+scalar path) before simulated time next advances; ``_settle`` enforces
+that with a hard error. Same-instant reschedules while a fill is pending
+simply coalesce: zero-dt settles never read rates, so only the *last*
+flow-set state of an instant needs solving — exactly the problem the
+inline path's final recompute of that instant would have solved. The
+lockstep executor (``repro.sweep.lockstep``) uses this seam to batch
+pending problems across many paused simulators into single
+``jax.vmap`` kernel calls.
 """
 from __future__ import annotations
 
@@ -83,11 +101,14 @@ import heapq
 import itertools
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+import numpy as np
+
 from repro.core.topology import ElasticLinks, LinkCapacities, VirtualCluster
 from repro.sim.engine import EventKernel, Subsystem
 
 #: a flow whose remaining volume drops below this (1 byte) is complete
 EPS_MB = 1e-6
+_INF = float("inf")
 
 # link-key type tags. Tuples compare lexicographically, giving the
 # explicit total order progressive filling breaks ties with; "~cap"
@@ -154,6 +175,56 @@ class FabricSummary:
     completion_log: List[Tuple[float, str, float]] = dataclasses.field(
         default_factory=list)
     log_dropped: int = 0             # completions not logged (log_limit)
+    #: fill problems solved but not snapshotted because the
+    #: ``capture_fills`` budget was already spent — the capture seam's
+    #: counterpart of ``log_dropped``, so a truncated corpus is visible
+    #: instead of silently looking complete
+    fills_dropped: int = 0
+
+
+class FillBackend:
+    """Pluggable solver hook for the fast allocator's fill problems.
+
+    Install on ``NetworkFabric.fill_backend`` (any time after
+    construction). From then on every ``_reschedule`` *defers* instead of
+    solving: the fabric marks the fill pending and calls :meth:`defer`.
+    The backend — synchronously inside ``defer`` or later, but strictly
+    before the simulation's next time advance — must deliver the
+    solution via ``fabric.apply_fill(rates)`` (externally computed
+    per-class rates, e.g. from the batched ``repro.sweep.vmap_fill``
+    kernel) or ``fabric.solve_fill_inline()`` (the fabric's own scalar
+    recompute). Deferring is free to coalesce: repeated ``defer`` calls
+    at one instant supersede each other, and only the final flow-set
+    state needs solving.
+    """
+
+    def defer(self, fabric: "NetworkFabric", now: float) -> None:
+        raise NotImplementedError
+
+
+class InlineFillBackend(FillBackend):
+    """Degenerate backend: solves every deferred fill immediately with
+    the fabric's own scalar recompute — trajectory-identical to running
+    with no backend at all (the equivalence anchor of the deferred
+    protocol, asserted in ``tests/test_lockstep.py``). ``timed=True``
+    additionally accrues wall-clock spent solving into ``fill_s`` /
+    ``n_fills`` — the scalar fill-path cost the lockstep benchmarks
+    compare the batched path against."""
+
+    def __init__(self, timed: bool = False):
+        self.timed = timed
+        self.fill_s = 0.0
+        self.n_fills = 0
+
+    def defer(self, fabric: "NetworkFabric", now: float) -> None:
+        if not self.timed:
+            fabric.solve_fill_inline()
+            return
+        import time
+        t0 = time.perf_counter()
+        fabric.solve_fill_inline()
+        self.fill_s += time.perf_counter() - t0
+        self.n_fills += 1
 
 
 class _FabricBase(Subsystem):
@@ -229,7 +300,12 @@ class _FabricBase(Subsystem):
         self._caps[(DOWN, pod)] = el.host_down * n
         if el.wan_per_host > 0.0:
             self._caps[(WAN, 0)] = el.wan_per_host * self.cluster.n_hosts
+        self._caps_changed()
         self._reschedule(now)
+
+    def _caps_changed(self) -> None:
+        """Capacity-refresh hook; the fast allocator re-packs its caps
+        vector here, the reference allocator needs nothing."""
 
     # -- shared helpers ----------------------------------------------------------
     def path(self, src_pod: Optional[int], dst_pod: int) -> Path:
@@ -347,11 +423,179 @@ class NetworkFabric(_FabricBase):
         #: fill problems recorded when ``cfg.capture_fills`` > 0 (the
         #: repro.sweep.vmap_fill equivalence corpus)
         self.fill_snapshots: List[dict] = []
+        #: pluggable fill solver (PR 9); None = solve inline (default)
+        self.fill_backend: Optional[FillBackend] = None
+        self._fill_pending = False
+        self._pending_now = 0.0
+        # class-structure arrays for fill_problem(): (members, fcap,
+        # cap_rank) depend only on the class *set*. Built on the first
+        # fill_problem() call and maintained incrementally at class
+        # birth/death from then on (np.insert/np.delete — the class set
+        # churns on most fills, so a rebuild-on-dirty cache thrashes).
+        # None until a fill backend actually asks for dense problems, so
+        # the inline allocator never pays for the maintenance.
+        self._struct_arrays: Optional[tuple] = None
+        self._link_order: List[LinkKey] = []
+        self._link_idx: Dict[LinkKey, int] = {}
+        self._caps_arr: Optional[np.ndarray] = None
+        self._pending_n: Optional[np.ndarray] = None
 
     def attach(self, sim, kernel: EventKernel) -> None:
         super().attach(sim, kernel)
         self._users = {k: [] for k in self._caps}
         self._nuse = dict.fromkeys(self._caps, 0)
+        # fixed for the fabric's lifetime: links are never added or
+        # removed, only (elastically) re-capacitated. Sorted-key order
+        # is the tie-break order, and therefore the packing order every
+        # fill problem must use.
+        self._link_order = sorted(self._caps)
+        self._link_idx = {k: i for i, k in enumerate(self._link_order)}
+        self._caps_changed()
+
+    def _caps_changed(self) -> None:
+        """Link capacities moved (attach, elastic resize): refresh the
+        packed caps vector ``fill_problem`` snapshots from."""
+        if self._link_order:
+            self._caps_arr = np.fromiter(
+                (self._caps[k] for k in self._link_order), float,
+                len(self._link_order))
+
+    # -- deferred fills (PR 9) --------------------------------------------------
+    @property
+    def fill_pending(self) -> bool:
+        """True while a deferred fill awaits ``apply_fill`` /
+        ``solve_fill_inline`` (the lockstep executor's pause signal)."""
+        return self._fill_pending
+
+    def fill_problem(self) -> dict:
+        """The pending fill problem as dense arrays — the exact shape
+        ``repro.sweep.vmap_fill`` kernels consume, built from live state:
+
+            caps      (L,)    link capacities, sorted-link-key order
+            members   (C, L)  class-crosses-link incidence (0/1)
+            n         (C,)    live members per class
+            fcap      (C,)    per-flow rate cap per class
+            cap_rank  (C,)    position in the fill_key (cap, sig) order
+            remaining (C,)    earliest front target minus vdone — the
+                              ETA numerator (inf when no live front)
+
+        Classes appear in sorted-signature order (``self._order``) —
+        the order ``apply_fill`` expects rates back in. The
+        members/fcap/cap_rank block is maintained incrementally at
+        class birth/death (first call builds it); n/remaining are
+        snapshotted per problem, and caps whenever capacities move.
+        remaining lets the batched kernel return ``dt_next`` alongside
+        rates, collapsing ``apply_fill``'s rearm to a push (the front
+        peeks happen here instead of in ``_arm`` — same heaps, same
+        tombstone pops, just earlier in the barrier)."""
+        if self._struct_arrays is None:
+            self._build_struct()
+        members, fcap, cap_rank = self._struct_arrays
+        order = self._order
+        C = len(order)
+        n = np.fromiter((c.n for c in order), float, C)
+        # remaining[k] = front target - vdone, the numerator of the
+        # scalar ``_arm`` scan's ETA (same subtraction, just performed
+        # here) — inf when the class has no live front. _front_target
+        # is inlined: the overwhelmingly common case is a clean front
+        # head (no tombstone), and a per-class method call is
+        # measurable at this call rate.
+        remaining = np.empty(C)
+        inf = _INF
+        for k, c in enumerate(order):
+            front = c.front
+            if front and front[0][1] in c.dead:
+                dead = c.dead
+                while front and front[0][1] in dead:
+                    dead.discard(front[0][1])
+                    heapq.heappop(front)
+            remaining[k] = front[0][0] - c.vdone if front else inf
+        # apply_fill reuses n for the link-load matvec (no sim progress
+        # happens between the barrier's collect and its delivery)
+        self._pending_n = n
+        return {"caps": self._caps_arr, "members": members, "n": n,
+                "fcap": fcap, "cap_rank": cap_rank,
+                "remaining": remaining}
+
+    def _build_struct(self) -> None:
+        """Full (members, fcap, cap_rank) build — runs once, on the
+        first ``fill_problem``; class birth/death maintains the arrays
+        incrementally from then on (``_add_class``/``_drop_class``)."""
+        order = self._order
+        C = len(order)
+        L = len(self._link_order)
+        members = np.zeros((C, L))
+        fcap = np.empty(C)
+        idx = self._link_idx
+        for j, cls in enumerate(order):
+            fcap[j] = cls.cap
+            row = members[j]
+            for link in cls.path:
+                row[idx[link]] = 1.0
+        cap_rank = np.empty(C)
+        pos = {cls.sig: j for j, cls in enumerate(order)}
+        for rank, cls in enumerate(self._cap_order):
+            cap_rank[pos[cls.sig]] = rank
+        self._struct_arrays = (members, fcap, cap_rank)
+
+    def apply_fill(self, rates, dt_next: Optional[float] = None) -> None:
+        """Deliver a deferred fill's solution: ``rates[j]`` is the
+        per-member rate of class ``j`` in ``self._order`` (the order
+        ``fill_problem`` listed them) — a float sequence or 1-D array.
+        Class rates are set from plain Python floats (``.tolist()``) so
+        numpy scalars never leak into the progress arithmetic. Rearms
+        the completion event exactly as the inline path would: via the
+        shared ``_arm`` scan, or — when the solver already computed
+        ``dt_next`` from the remaining array ``fill_problem``
+        shipped (bit-identical arithmetic, ``inf`` = nothing to arm) —
+        by pushing ``now + dt_next`` directly."""
+        if not self._fill_pending:
+            raise RuntimeError("apply_fill with no fill pending")
+        order = self._order
+        arr = np.asarray(rates, dtype=float)
+        for cls, r in zip(order, arr.tolist()):
+            cls.rate = r
+        load = self._load
+        arrs = self._struct_arrays
+        if arrs is not None and len(arr) == len(order):
+            # link loads via one matvec over the maintained incidence
+            # matrix. Summation order differs from the scalar loop by
+            # at most an ulp, which only the link-utilization telemetry
+            # can see — loads feed the carried-MB integrals, never the
+            # progress arithmetic the equivalence claims compare.
+            n_arr = self._pending_n
+            if n_arr is None or len(n_arr) != len(order):
+                n_arr = np.fromiter((c.n for c in order), float,
+                                    len(order))
+            loads = (n_arr * arr) @ arrs[0]
+            for k, v in zip(self._link_order, loads.tolist()):
+                load[k] = v
+        else:
+            for k in load:
+                load[k] = 0.0
+            for c in order:
+                r = c.rate * c.n
+                for link in c.path:
+                    load[link] += r
+        self._fill_pending = False
+        self._pending_n = None
+        now = self._pending_now
+        if dt_next is None:
+            self._arm(now)
+        else:
+            dt = float(dt_next)
+            self._finish_arm(now, now + dt if dt != _INF else None)
+
+    def solve_fill_inline(self) -> None:
+        """Deliver a deferred fill with the fabric's own scalar
+        recompute — the backend-installed path degrades to exactly the
+        inline allocator (used by :class:`InlineFillBackend` and the
+        lockstep executor's no-jax fallback)."""
+        if not self._fill_pending:
+            raise RuntimeError("solve_fill_inline with no fill pending")
+        self._recompute()
+        self._fill_pending = False
+        self._arm(self._pending_now)
 
     # -- class bookkeeping -------------------------------------------------------
     def _add_class(self, sig: Sig) -> _Class:
@@ -365,6 +609,33 @@ class NetworkFabric(_FabricBase):
         self._cap_order.insert(j, cls)
         for link in cls.path:
             self._users[link].append(cls)
+        arrs = self._struct_arrays
+        if arrs is not None:
+            # incremental maintenance of the fill_problem arrays: the
+            # new class lands at order position i / cap rank j, pushing
+            # existing ranks >= j up by one. Hand-rolled slice copies —
+            # np.insert's python wrapper costs ~10x the memcpy.
+            members, fcap, cap_rank = arrs
+            C, L = members.shape
+            m2 = np.zeros((C + 1, L))
+            m2[:i] = members[:i]
+            m2[i + 1:] = members[i:]
+            idx = self._link_idx
+            row = m2[i]
+            for link in cls.path:
+                row[idx[link]] = 1.0
+            f2 = np.empty(C + 1)
+            f2[:i] = fcap[:i]
+            f2[i] = cls.cap
+            f2[i + 1:] = fcap[i:]
+            r2 = np.empty(C + 1)
+            r2[:i] = cap_rank[:i]
+            r2[i] = j
+            r2[i + 1:] = cap_rank[i:]
+            r2[r2 >= j] += 1.0
+            r2[i] = j
+            self._struct_arrays = (m2, f2, r2)
+            self._pending_n = None
         return cls
 
     def _drop_class(self, cls: _Class) -> None:
@@ -377,6 +648,22 @@ class NetworkFabric(_FabricBase):
         del self._cap_order[j]
         for link in cls.path:
             self._users[link].remove(cls)
+        arrs = self._struct_arrays
+        if arrs is not None:
+            members, fcap, cap_rank = arrs
+            C, L = members.shape
+            m2 = np.empty((C - 1, L))
+            m2[:i] = members[:i]
+            m2[i:] = members[i + 1:]
+            f2 = np.empty(C - 1)
+            f2[:i] = fcap[:i]
+            f2[i:] = fcap[i + 1:]
+            r2 = np.empty(C - 1)
+            r2[:i] = cap_rank[:i]
+            r2[i:] = cap_rank[i + 1:]
+            r2[r2 > j] -= 1.0
+            self._struct_arrays = (m2, f2, r2)
+            self._pending_n = None
 
     # -- flow API ----------------------------------------------------------------
     def start_flow(self, now: float, mb: float, src_pod: Optional[int],
@@ -432,6 +719,11 @@ class NetworkFabric(_FabricBase):
         and accrue the link-carried integrals."""
         dt = now - self._last
         if dt > 0.0:
+            if self._fill_pending:
+                raise RuntimeError(
+                    "simulated time advanced across a deferred fill: "
+                    "the fill backend must deliver rates (apply_fill / "
+                    "solve_fill_inline) before the next event instant")
             for cls in self._classes.values():
                 if cls.rate:
                     cls.vdone += cls.rate * dt
@@ -514,16 +806,42 @@ class NetworkFabric(_FabricBase):
         classes (rate 0.0 — a zero-capacity elastic link) arm nothing:
         their flows simply wait for the next flow-set or capacity
         change. The epoch counter invalidates any previously armed
-        event."""
+        event.
+
+        With a :class:`FillBackend` installed the solve is *deferred*:
+        the fill is marked pending and nothing is armed until the
+        backend delivers rates (``apply_fill``/``solve_fill_inline``,
+        which run the identical arming arithmetic via ``_arm``).
+        Same-instant reschedules coalesce — zero-dt settles never read
+        rates, so solving only the instant's final flow-set state is
+        exactly equivalent to the inline path's last recompute. The
+        armed completion event lands at ``t_next`` strictly after
+        ``now``, so arming from the barrier instead of mid-handler
+        cannot reorder same-time events."""
         self._epoch += 1
         if not self._flows:
             # the last flow just drained: rates are all zero now, and
             # the carried-MB integrals must stop accruing across the
-            # idle gap until the next flow starts
+            # idle gap until the next flow starts. A pending fill is
+            # withdrawn — there is nothing left to solve.
             for k in self._load:
                 self._load[k] = 0.0
+            self._fill_pending = False
+            return
+        backend = self.fill_backend
+        if backend is not None:
+            self._fill_pending = True
+            self._pending_now = now
+            backend.defer(self, now)
             return
         self._recompute()
+        self._arm(now)
+
+    def _arm(self, now: float) -> None:
+        """Post-solve half of a reschedule: arm the next completion
+        event from the class fronts and service the capture seam.
+        Shared verbatim by the inline path and ``apply_fill``, so a
+        deferred solve rearms bit-identically."""
         t_next = None
         for cls in self._classes.values():
             if cls.rate <= 0.0:
@@ -533,11 +851,20 @@ class NetworkFabric(_FabricBase):
                 t = now + (target - cls.vdone) / cls.rate
                 if t_next is None or t < t_next:
                     t_next = t
+        self._finish_arm(now, t_next)
+
+    def _finish_arm(self, now: float, t_next: Optional[float]) -> None:
+        """Tail of a rearm — event push and the capture seam — shared
+        by the ``_arm`` scan and ``apply_fill``'s solver-computed
+        ``dt_next`` shortcut."""
         if t_next is not None:
             self.kernel.push(t_next, "flow", self._epoch)
-        if (self.cfg.capture_fills
-                and len(self.fill_snapshots) < self.cfg.capture_fills):
-            self._capture_fill(now, t_next)
+        limit = self.cfg.capture_fills
+        if limit:
+            if len(self.fill_snapshots) < limit:
+                self._capture_fill(now, t_next)
+            else:
+                self.summary.fills_dropped += 1
 
     def _capture_fill(self, now: float, t_next: Optional[float]) -> None:
         """Snapshot the fill problem this reschedule just solved — the

@@ -13,20 +13,28 @@ statistical claim rows committed in ``BENCH_*.json`` and gated by
 ``scripts/check_bench_regression.py``. The arithmetic-heavy fabric
 inner loops additionally exist as a batched ``jax.vmap`` kernel in
 :mod:`repro.sweep.vmap_fill`, equivalence-tested against the scalar
-allocator.
+allocator — and, since PR 9, runs *live* under the
+``backend="lockstep"`` execution mode
+(:class:`~repro.sweep.lockstep.LockstepExecutor`): many simulators
+advance in synchronized epochs and their fabric fills are solved in one
+batched kernel call per epoch.
 """
 from repro.sweep.cache import (DEFAULT_STORE_DIR, ResultStore,
                                code_fingerprint)
-from repro.sweep.cells import (CELL_FAMILIES, CellSpec, make_params,
-                               matrix, run_cell, summary_metrics)
+from repro.sweep.cells import (CELL_FAMILIES, LOCKSTEP_BUILDERS,
+                               CellSpec, make_params, matrix, run_cell,
+                               summary_metrics)
 from repro.sweep.engine import (SweepEngine, SweepStats, aggregate_cells,
                                 aggregate_json, run_serial)
+from repro.sweep.lockstep import (DeferredFillBackend, LockstepExecutor,
+                                  LockstepStats)
 from repro.sweep.stats import aggregate, ci_regressed, stable_hash
 
 __all__ = [
     "DEFAULT_STORE_DIR", "ResultStore", "code_fingerprint",
-    "CELL_FAMILIES", "CellSpec", "make_params", "matrix", "run_cell",
-    "summary_metrics", "SweepEngine", "SweepStats", "aggregate_cells",
-    "aggregate_json", "run_serial", "aggregate", "ci_regressed",
-    "stable_hash",
+    "CELL_FAMILIES", "LOCKSTEP_BUILDERS", "CellSpec", "make_params",
+    "matrix", "run_cell", "summary_metrics", "SweepEngine",
+    "SweepStats", "aggregate_cells", "aggregate_json", "run_serial",
+    "DeferredFillBackend", "LockstepExecutor", "LockstepStats",
+    "aggregate", "ci_regressed", "stable_hash",
 ]

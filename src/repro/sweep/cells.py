@@ -126,10 +126,14 @@ def _warm_registry(algo, cluster) -> None:
             algo.registry.record(j, j.true_fp)
 
 
-def _fabric_contention_cell(spec: CellSpec) -> Dict[str, float]:
-    """Burst small workload through the contention-aware fabric at the
-    scenario's WAN-oversubscription level (the bench_fabric contention
-    cell, parameterized by seed)."""
+def build_fabric_contention(spec: CellSpec):
+    """Construct the ``fabric_contention`` cell without running it:
+    returns ``(sim, finish)`` where ``sim`` is the ready-to-run
+    :class:`Simulator` and ``finish(res)`` turns its result into the
+    cell's metric dict. ``_fabric_contention_cell`` is exactly
+    ``build(...)`` + ``sim.run()`` + ``finish(...)``; the lockstep
+    executor (PR 9) uses the same builder but drives ``sim`` through
+    the resumable ``begin/step/finish`` protocol instead."""
     from repro.core.joss import make_algorithm
     from repro.sim.cluster_sim import SimConfig, Simulator
     from repro.sim.network import FabricConfig
@@ -149,11 +153,23 @@ def _fabric_contention_cell(spec: CellSpec) -> Dict[str, float]:
     algo = make_algorithm(spec.algo, cluster)
     _warm_registry(algo, cluster)
     cfg = SimConfig(fabric=FabricConfig(completion_log=False))
-    res = Simulator(cluster, algo, jobs, config=cfg, seed=seed).run()
-    assert len(res.job_finish) == n_jobs, \
-        f"{spec.algo}/{spec.scenario}#{spec.seed}: " \
-        f"{len(res.job_finish)}/{n_jobs} jobs finished"
-    return summary_metrics(res)
+    sim = Simulator(cluster, algo, jobs, config=cfg, seed=seed)
+
+    def finish(res) -> Dict[str, float]:
+        assert len(res.job_finish) == n_jobs, \
+            f"{spec.algo}/{spec.scenario}#{spec.seed}: " \
+            f"{len(res.job_finish)}/{n_jobs} jobs finished"
+        return summary_metrics(res)
+
+    return sim, finish
+
+
+def _fabric_contention_cell(spec: CellSpec) -> Dict[str, float]:
+    """Burst small workload through the contention-aware fabric at the
+    scenario's WAN-oversubscription level (the bench_fabric contention
+    cell, parameterized by seed)."""
+    sim, finish = build_fabric_contention(spec)
+    return finish(sim.run())
 
 
 def _elastic_churn_cell(spec: CellSpec) -> Dict[str, float]:
@@ -198,6 +214,14 @@ def _elastic_churn_cell(spec: CellSpec) -> Dict[str, float]:
 CELL_FAMILIES: Dict[str, Callable[[CellSpec], Dict[str, float]]] = {
     "fabric_contention": _fabric_contention_cell,
     "elastic_churn": _elastic_churn_cell,
+}
+
+#: families the lockstep executor can drive: builder(spec) -> (sim,
+#: finish). Families absent here (e.g. elastic_churn, which has no
+#: fabric and therefore no fill problems to batch) fall back to the
+#: scalar ``run_cell`` path inside the lockstep backend.
+LOCKSTEP_BUILDERS: Dict[str, Callable] = {
+    "fabric_contention": build_fabric_contention,
 }
 
 

@@ -82,12 +82,26 @@ class SweepEngine:
     ``workers=1`` runs cells inline (no pool, no RNG poisoning of the
     calling process); ``workers>1`` spawns that many fresh worker
     interpreters. ``store=None`` disables caching entirely.
+
+    ``backend="lockstep"`` (PR 9) executes cache misses in-process
+    through :class:`repro.sweep.lockstep.LockstepExecutor` — many
+    simulators advancing in synchronized epochs with their fabric fills
+    batched into one vmap kernel call per epoch — instead of the
+    process pool. Results are bit-compatible with the pool path (same
+    per-cell metrics, same store entries), so the two backends share
+    one cache; ``workers`` is ignored in lockstep mode. The executor's
+    accounting lands in ``self.lockstep_stats`` after ``run``.
     """
 
     def __init__(self, *, workers: int = 1,
-                 store: Optional[ResultStore] = None):
+                 store: Optional[ResultStore] = None,
+                 backend: str = "pool"):
+        if backend not in ("pool", "lockstep"):
+            raise ValueError(f"unknown sweep backend {backend!r}")
         self.workers = max(1, int(workers))
         self.store = store
+        self.backend = backend
+        self.lockstep_stats = None
 
     def run(self, specs: Sequence[CellSpec]
             ) -> Tuple[Dict[str, MetricRow], SweepStats]:
@@ -116,7 +130,13 @@ class SweepEngine:
                 misses.append(k)
 
         if misses:
-            if self.workers == 1:
+            if self.backend == "lockstep":
+                from repro.sweep.lockstep import LockstepExecutor
+                ex = LockstepExecutor()
+                fresh = ex.run([CellSpec.from_key(k)
+                                for k in misses]).items()
+                self.lockstep_stats = ex.stats
+            elif self.workers == 1:
                 fresh = map(_worker_run, misses)
             else:
                 # spawn: fresh interpreters, nothing inherited (see
@@ -134,7 +154,7 @@ class SweepEngine:
                 stats.n_executed += 1
                 if self.store is not None:
                     self.store.put(k, metrics)
-            if self.workers > 1:
+            if self.backend == "pool" and self.workers > 1:
                 pool.shutdown()
 
         stats.wall_s = time.perf_counter() - t0

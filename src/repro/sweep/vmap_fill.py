@@ -39,6 +39,7 @@ ground truth the kernels are held against.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -137,8 +138,13 @@ class PackedProblems:
 
     def __init__(self, snapshots: Sequence[dict]):
         S = len(snapshots)
-        self.n_links = L = max(len(s["links"]) for s in snapshots)
-        self.n_classes = C = max(len(s["classes"]) for s in snapshots)
+        # floors of 1: a zero-class/zero-link snapshot (or an empty
+        # batch) still packs to valid arrays — its lanes are all
+        # padding, which the kernel resolves to rate 0 / eta inf
+        self.n_links = L = max(
+            1, max((len(s["links"]) for s in snapshots), default=0))
+        self.n_classes = C = max(
+            1, max((len(s["classes"]) for s in snapshots), default=0))
         self.caps = np.full((S, L), _INF)
         self.members = np.zeros((S, C, L))
         self.n = np.zeros((S, C))
@@ -178,39 +184,57 @@ if HAVE_JAX:
         in sorted-link-key order, so ``argmin``'s first-minimum rule IS
         the allocator's lexicographic ``(share, link_key)`` tie-break;
         class caps lose exact ties against real links (strict ``<``),
-        mirroring the ``("~cap", sig)`` sentinel sort."""
+        mirroring the ``("~cap", sig)`` sentinel sort.
+
+        Two deviations from the literal scalar loop, both provably
+        bit-identical:
+
+        * a cap win fixes **every** unfixed class whose cap equals the
+          winning ``cap_min`` at once, not one per round. The scalar
+          allocator fixes them on consecutive rounds — in between, the
+          links those classes cross keep ``rem/nuse > cap`` (debiting
+          ``k`` members at rate ``cap`` preserves the inequality), so
+          no link can snatch a round in the middle; and the combined
+          debit equals the sequential ones exactly
+          (``max(0, rem - (k1+k2)r)`` == two chained ``max(0, .-kr)``
+          steps, including when the clamp engages). Collapsing the
+          rounds turns uncontended problems from O(C) iterations into
+          O(distinct caps). ``cap_rank`` is kept in the signature for
+          packing compatibility but no longer consulted.
+        * per-link member counts are carried in the loop state and
+          debited (exact small-integer float arithmetic) instead of
+          recomputed by a matmul each round.
+        """
         C = members.shape[0]
         fixed = n <= 0.0          # padded classes never participate
         rem = caps
         rates = jnp.zeros((C,), caps.dtype)
+        nuse0 = n @ members       # exact integer sums
 
         def cond(state):
-            fixed, _, _ = state
+            fixed, _, _, _ = state
             return jnp.any(~fixed)
 
         def body(state):
-            fixed, rem, rates = state
-            live_n = jnp.where(~fixed, n, 0.0)
-            nuse = live_n @ members              # exact integer sums
+            fixed, rem, rates, nuse = state
             share_l = jnp.where(nuse > 0.0, rem / nuse, jnp.inf)
             li = jnp.argmin(share_l)             # first min = key order
             link_share = share_l[li]
             cap_key = jnp.where(~fixed, fcap, jnp.inf)
             cap_min = jnp.min(cap_key)
-            ci = jnp.argmin(jnp.where(cap_key == cap_min, cap_rank,
-                                      jnp.inf))
             cap_wins = cap_min < link_share
             share = jnp.where(cap_wins, cap_min, link_share)
-            newly = jnp.where(cap_wins, jnp.arange(C) == ci,
+            newly = jnp.where(cap_wins, cap_key == cap_min,
                               (~fixed) & (members[:, li] > 0.0))
             rates = jnp.where(newly, share, rates)
             fixed = fixed | newly
             k_l = jnp.where(newly, n, 0.0) @ members
             rem = jnp.where(k_l > 0.0,
                             jnp.maximum(0.0, rem - k_l * share), rem)
-            return fixed, rem, rates
+            return fixed, rem, rates, nuse - k_l
 
-        _, _, rates = lax.while_loop(cond, body, (fixed, rem, rates))
+        _, _, rates, _ = lax.while_loop(cond, body,
+                                        (fixed, rem, rates, nuse0))
         return rates
 
     @functools.lru_cache(maxsize=None)
@@ -222,6 +246,29 @@ if HAVE_JAX:
             etas = jnp.where(live, (target - vdone) / rates, jnp.inf)
             return rates, etas, jnp.min(etas, axis=1)
         return jax.jit(batch)
+
+    @functools.lru_cache(maxsize=None)
+    def _jitted_rates():
+        """Rates-only jitted vmap (equivalence tests and the
+        rates-only solver path)."""
+        return jax.jit(jax.vmap(_fill_one))
+
+    @functools.lru_cache(maxsize=None)
+    def _jitted_rates_dt():
+        """The lockstep hot path: rates plus the seconds to the
+        earliest completion, so ``apply_fill`` can rearm without its
+        per-class Python loop. ``remaining`` is ``target - vdone``,
+        subtracted host-side (same IEEE op either way; one fewer
+        array to pack and transfer per call). ``min`` over etas is
+        exact and ``now + min(etas) == min(now + eta_i)`` (addition
+        of a common term is monotone), so the armed time is
+        bit-identical to the scalar ``_arm`` scan."""
+        def one(caps, members, n, fcap, cap_rank, remaining):
+            rates = _fill_one(caps, members, n, fcap, cap_rank)
+            live = (rates > 0.0) & jnp.isfinite(remaining)
+            etas = jnp.where(live, remaining / rates, jnp.inf)
+            return rates, jnp.min(etas)
+        return jax.jit(jax.vmap(one))
 
 
 def batched_fill(snapshots: Sequence[dict]) -> dict:
@@ -240,12 +287,189 @@ def batched_fill(snapshots: Sequence[dict]) -> dict:
                 "dt_next": np.asarray(dt)}
 
 
+# ------------------------------------------------------ live solver ---
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+_CACHE_READY = False
+
+
+def _enable_persistent_cache() -> None:
+    """Point jax's persistent compilation cache at ``.jax_cache`` in the
+    repo root (override: ``REPRO_JAX_CACHE``), so the lockstep kernel's
+    cold-start compile is paid once per machine, not once per process.
+    Best-effort: any failure (unsupported jax, read-only checkout)
+    leaves the in-memory jit cache as the only one."""
+    global _CACHE_READY
+    if _CACHE_READY or not HAVE_JAX:
+        return
+    _CACHE_READY = True
+    try:  # pragma: no cover - depends on jax build/config support
+        cache_dir = (os.environ.get("REPRO_JAX_CACHE")
+                     or os.path.join(_REPO_ROOT, ".jax_cache"))
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                          -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          0.0)
+    except Exception:
+        pass
+
+
+def _next_pow2(x: int) -> int:
+    """Smallest power of two >= max(1, x) — the shape-bucketing grid."""
+    return 1 << max(0, (x - 1).bit_length())
+
+
+def _ceil_mult(x: int, q: int) -> int:
+    """Smallest multiple of ``q`` >= max(1, x) — the live solver's
+    padding grid. Finer than pow2 (a 17-link problem pads to 24, not
+    32): each padded element costs real flops every while_loop round,
+    while an extra distinct shape only costs one cached compile."""
+    return q * max(1, -(-x // q))
+
+
+class BatchedFillSolver:
+    """Persistent batched solver for *live* fill problems (the PR 9
+    lockstep executor's engine). Differences from :func:`batched_fill`,
+    all in service of the per-epoch hot path:
+
+    * consumes the dense problem dicts ``NetworkFabric.fill_problem()``
+      emits (arrays already in allocator order) instead of snapshot
+      dicts, and returns one rates row per problem in that same order;
+    * holds ``enable_x64`` open for its lifetime — entering the context
+      per call costs ~50x the solve itself on small batches;
+    * solves each epoch's problems in **one** kernel call, padded to
+      the batch max (C, L) on a multiples-of-(16, 8) grid with the
+      batch dim padded to ``pad_batch`` lanes. Padding is inert in
+      every kernel reduction, so each problem's result is bit-exact
+      regardless of batch composition, while per-call dispatch — the
+      dominant cost at live batch sizes — is paid once per epoch and
+      the distinct-shape set XLA ever compiles stays at a handful;
+    * enables the persistent compilation cache so cold processes reuse
+      compiles across runs.
+
+    Use as a context manager (or call :meth:`close`) to restore the
+    global x64 state."""
+
+    def __init__(self, *, pad_batch: int = 64, pad_classes: int = 48,
+                 pad_links: int = 24):
+        if not HAVE_JAX:
+            raise RuntimeError(
+                "jax is unavailable; use the fabric's inline fill")
+        self.pad_batch = _next_pow2(pad_batch)
+        self.pad_classes = max(1, int(pad_classes))
+        self.pad_links = max(1, int(pad_links))
+        _enable_persistent_cache()
+        self._x64 = enable_x64()
+        self._x64.__enter__()
+        self._open = True
+        self.n_batches = 0
+        self.n_problems = 0
+        # reusable pack buffers for the (almost always unique) padded
+        # shape; {shape: arrays} plus the dirty-row count to reset.
+        # Only the latest shape is retained.
+        self._bufs: Dict[Tuple[int, int, int], tuple] = {}
+        self._dirty_rows: Dict[Tuple[int, int, int], int] = {}
+
+    def close(self) -> None:
+        if self._open:
+            self._open = False
+            self._x64.__exit__(None, None, None)
+
+    def __enter__(self) -> "BatchedFillSolver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def solve(self, problems: Sequence[dict]
+              ) -> List[Tuple[np.ndarray, float]]:
+        """Solve a batch of ``fill_problem()`` dicts; returns, per
+        problem, ``(rates, dt_next)`` — the per-member rate of each
+        class in the problem's own class order (shape ``(C_i,)``,
+        float64) and the seconds to the earliest completion under
+        those rates (``inf`` when no class arms one). ``dt_next`` is
+        bit-identical to the scalar ``_arm`` scan, so
+        ``apply_fill(rates, dt_next=dt)`` rearms without its per-class
+        Python loop."""
+        if not problems:
+            return []
+        # One call for the whole epoch, padded to the batch's max
+        # shape on a multiples-of-(16, 8) grid. Padding is *inert* in
+        # every reduction — padded links carry inf capacity and no
+        # members (never the argmin winner), padded classes start
+        # fixed with inf cap keys and inf etas — so a problem's rates
+        # and dt are bit-identical under any padding, batch
+        # composition included. The grid exists purely to bound the
+        # distinct-shape set XLA ever sees: each fresh shape costs a
+        # compile (~300ms, persistent-cached) plus a once-per-process
+        # cache deserialize (~25ms) that dwarfs thousands of warm
+        # calls (~200us) — fewer, coarser shapes beat tighter padding.
+        # The pad_* floors make the shape *constant* for a whole run at
+        # typical sizes (one compile, one per-process cache load —
+        # every first-call-per-shape costs ~60-160ms, an order of
+        # magnitude above thousands of warm calls); the ceil_mult
+        # escape hatches keep outsized problems correct.
+        S = len(problems)
+        PC = max(self.pad_classes,
+                 _ceil_mult(max(p["n"].shape[0] for p in problems), 16))
+        PL = max(self.pad_links,
+                 _ceil_mult(max(p["caps"].shape[0] for p in problems),
+                            8))
+        # S fluctuates every epoch; unpadded it would put the batch
+        # size in the jit shape. Padding lanes are all-fixed (n=0)
+        # and add no while_loop rounds.
+        PS = max(self.pad_batch, _ceil_mult(S, 16))
+        bufs = self._bufs.get((PS, PC, PL))
+        if bufs is None:
+            bufs = (np.full((PS, PL), _INF),        # caps
+                    np.zeros((PS, PC, PL)),         # members
+                    np.zeros((PS, PC)),             # n
+                    np.full((PS, PC), _INF),        # fcap
+                    np.full((PS, PC), float(PC)),   # cap_rank
+                    np.full((PS, PC), _INF))        # remaining
+            self._bufs = {(PS, PC, PL): bufs}
+        caps, members, n, fcap, cap_rank, remaining = bufs
+        # restore the pad values the previous call's problems overwrote
+        # (rows dirty up to the previous real-lane count). Reuse beats
+        # fresh np.full/np.zeros per call: the reset touches S_prev
+        # rows, a fresh build allocates and fills all PS.
+        dirty = self._dirty_rows.get((PS, PC, PL), 0)
+        if dirty:
+            caps[:dirty] = _INF
+            members[:dirty] = 0.0
+            n[:dirty] = 0.0
+            fcap[:dirty] = _INF
+            cap_rank[:dirty] = float(PC)
+            remaining[:dirty] = _INF
+        self._dirty_rows = {(PS, PC, PL): S}
+        for si, p in enumerate(problems):
+            C = p["n"].shape[0]
+            L = p["caps"].shape[0]
+            caps[si, :L] = p["caps"]
+            members[si, :C, :L] = p["members"]
+            n[si, :C] = p["n"]
+            fcap[si, :C] = p["fcap"]
+            cap_rank[si, :C] = p["cap_rank"]
+            remaining[si, :C] = p["remaining"]
+        rates, dts = _jitted_rates_dt()(caps, members, n, fcap,
+                                        cap_rank, remaining)
+        rates = np.asarray(rates)
+        dts = np.asarray(dts)
+        out: List[Tuple[np.ndarray, float]] = [
+            (rates[si, :problems[si]["n"].shape[0]], float(dts[si]))
+            for si in range(S)]
+        self.n_batches += 1
+        self.n_problems += S
+        return out
+
+
 def batched_fill_reference(snapshots: Sequence[dict]) -> dict:
     """The pure-Python loop in the batched API shape — the serial
     baseline of the kernel microbench and the fallback when jax is
     missing."""
     S = len(snapshots)
-    C = max(len(s["classes"]) for s in snapshots)
+    C = max(1, max((len(s["classes"]) for s in snapshots), default=0))
     rates = np.zeros((S, C))
     etas = np.full((S, C), _INF)
     dt = np.full((S,), _INF)

@@ -106,6 +106,14 @@ def _stub_measurements(gate, monkeypatch):
                 "serial_cells_per_s": g["serial_cells_per_s"]}
     monkeypatch.setattr(gate, "_fresh_sweep", _echo_sweep)
 
+    def _echo_lockstep(perturb=1.0):
+        with open(os.path.join(_ROOT, "BENCH_sweep.json")) as f:
+            lk = json.load(f)["lockstep"]
+        return {"n_seeds": lk["n_seeds"], "n_cells": lk["n_cells"],
+                "identical": True, "used_jax": True,
+                "fill_speedup": lk["fill_speedup"] / perturb}
+    monkeypatch.setattr(gate, "_fresh_lockstep", _echo_lockstep)
+
     def _echo_claims(perturb=0.0):
         # echo the committed claim rows; the perturbation shifts every
         # WTT-derived row exactly like the real _fresh_claims (gap rows
@@ -483,6 +491,86 @@ def test_compare_sweep_claims_fails_on_thin_replicas(gate,
     failures = gate.compare_sweep_claims(claims, [row], "fabric")
     assert any("n_seeds=8" in f for f in failures)
     assert any("8 replicas" in f for f in failures)
+
+
+# -------------------------------------------- lockstep gate (PR 9) --
+def test_lockstep_block_committed(stored_sweep):
+    """The acceptance criterion: the committed lockstep block carries
+    the full-seed gate point and holds the 3x fill-path envelope."""
+    lk = stored_sweep["lockstep"]
+    assert lk["n_seeds"] >= 32
+    assert lk["n_cells"] == 5 * 3 * lk["n_seeds"]
+    assert lk["hosts_per_pod"] == [8] * 8 and lk["n_jobs"] == 24
+    assert lk["fill_speedup"] >= 3.0, \
+        "committed lockstep gate below the 3x fill-path envelope"
+    assert lk["scalar_fill_s"] > lk["lockstep_fill_s"] > 0
+    # deferred coalescing: the lockstep path delivers strictly fewer
+    # problems than the inline path solves
+    assert 0 < lk["problems"] < lk["scalar_fills"]
+    assert lk["batches"] > 0 and len(lk["aggregate_sha256"]) == 64
+
+
+def _lockstep_fresh_from_stored(lk):
+    return {"n_seeds": lk["n_seeds"], "n_cells": lk["n_cells"],
+            "identical": True, "used_jax": True,
+            "fill_speedup": lk["fill_speedup"]}
+
+
+def test_compare_lockstep_passes_on_committed_block(gate, stored_sweep):
+    lk = stored_sweep["lockstep"]
+    assert gate.compare_lockstep(lk,
+                                 _lockstep_fresh_from_stored(lk)) == []
+
+
+def test_compare_lockstep_fails_below_stored_envelope(gate,
+                                                      stored_sweep):
+    lk = dict(stored_sweep["lockstep"], fill_speedup=2.0)
+    failures = gate.compare_lockstep(lk,
+                                     _lockstep_fresh_from_stored(lk))
+    assert any("acceptance envelope" in f for f in failures)
+
+
+def test_compare_lockstep_fails_on_thin_seeds(gate, stored_sweep):
+    lk = dict(stored_sweep["lockstep"], n_seeds=8)
+    failures = gate.compare_lockstep(lk,
+                                     _lockstep_fresh_from_stored(lk))
+    assert any("n_seeds=8" in f for f in failures)
+
+
+def test_compare_lockstep_fails_on_identity_break(gate, stored_sweep):
+    lk = stored_sweep["lockstep"]
+    fresh = dict(_lockstep_fresh_from_stored(lk), identical=False)
+    failures = gate.compare_lockstep(lk, fresh)
+    assert len(failures) == 1 and "behaviour" in failures[0]
+
+
+def test_compare_lockstep_smoke_floor(gate, stored_sweep):
+    """Fresh reduced-seed speedups are noisy: anything above half the
+    envelope passes; below it trips; without jax the wall-clock check
+    is skipped entirely (bit-identity of the scalar path still gates)."""
+    lk = stored_sweep["lockstep"]
+    ok = dict(_lockstep_fresh_from_stored(lk), fill_speedup=1.6)
+    assert gate.compare_lockstep(lk, ok) == []
+    slow = dict(ok, fill_speedup=1.0)
+    failures = gate.compare_lockstep(lk, slow)
+    assert len(failures) == 1 and "smoke floor" in failures[0]
+    nojax = dict(slow, used_jax=False)
+    assert gate.compare_lockstep(lk, nojax) == []
+
+
+def test_main_trips_on_lockstep_perturbation(gate, monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--lockstep-perturb", "4.0"]) == 1
+
+
+def test_main_fails_without_lockstep_block(gate, stored_sweep,
+                                           tmp_path, monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    crippled = {k: v for k, v in stored_sweep.items()
+                if k != "lockstep"}
+    p = tmp_path / "sweep.json"
+    p.write_text(json.dumps(crippled))
+    assert gate.main(["--sweep-json", str(p)]) == 1
 
 
 def test_main_trips_on_ci_perturbation(gate, monkeypatch):

@@ -104,6 +104,142 @@ def test_batched_reference_matches_scalar(corpus):
         assert list(ref["rates"][i, :c]) == one["rates"]
 
 
+# ----------------------------------------- degenerate packed inputs --
+def test_packed_zero_class_snapshot_is_all_padding():
+    """A snapshot with links but no classes (an idle fabric) packs to
+    the floor shape with every lane inert: n=0, inf caps, no members."""
+    snap = {"links": [["wan", 0, 10.0]], "classes": []}
+    p = vf.PackedProblems([snap])
+    assert p.n_classes == 1 and p.n_links == 1
+    assert np.all(p.n == 0.0)
+    assert np.all(np.isinf(p.fcap)) and np.all(np.isinf(p.target))
+    assert np.all(p.members == 0.0)
+    assert vf.fill_reference(snap) == {"rates": [], "etas": [],
+                                       "dt_next": None}
+
+
+def test_packed_empty_batch_has_floor_shapes():
+    p = vf.PackedProblems([])
+    assert p.caps.shape == (0, 1) and p.n.shape == (0, 1)
+    assert p.members.shape == (0, 1, 1)
+
+
+@needs_jax
+def test_batched_fill_zero_class_snapshot_resolves_inert():
+    out = vf.batched_fill([{"links": [["wan", 0, 10.0]],
+                            "classes": []}])
+    assert np.all(out["rates"] == 0.0)
+    assert np.all(np.isinf(out["etas"]))
+    assert np.all(np.isinf(out["dt_next"]))
+
+
+def _single_flow_snap():
+    # one class, one member flow, crossing one link: rate is the
+    # whole link (cap doesn't bind), eta = (target - vdone) / rate
+    return {"links": [["wan", 0, 6.0]],
+            "classes": [{"path": [["wan", 0]], "cap": 100.0, "n": 1,
+                         "vdone": 1.0, "target": 4.0}]}
+
+
+def _all_capped_snap():
+    # every class's own cap undercuts its link share: the fill fixes
+    # all of them at cap and the link is left slack
+    return {"links": [["wan", 0, 100.0]],
+            "classes": [{"path": [["wan", 0]], "cap": 2.0, "n": 2,
+                         "vdone": 0.0, "target": 8.0},
+                        {"path": [["wan", 0]], "cap": 3.0, "n": 1,
+                         "vdone": 1.0, "target": None}]}
+
+
+def test_reference_single_flow_class():
+    ref = vf.fill_reference(_single_flow_snap())
+    assert ref["rates"] == [6.0]
+    assert ref["dt_next"] == 0.5              # (4 - 1) / 6
+
+
+def test_reference_all_capped_classes():
+    ref = vf.fill_reference(_all_capped_snap())
+    assert ref["rates"] == [2.0, 3.0]
+    assert ref["dt_next"] == 4.0              # (8 - 0) / 2
+
+
+@needs_jax
+def test_batched_fill_degenerate_snapshots_match_reference():
+    """Zero-class, single-flow and all-capped problems through one
+    mixed batch: each row bit-close to its scalar reference, the empty
+    row fully inert."""
+    snaps = [{"links": [["wan", 0, 10.0]], "classes": []},
+             _single_flow_snap(), _all_capped_snap()]
+    out = vf.batched_fill(snaps)
+    refb = vf.batched_fill_reference(snaps)
+    assert np.allclose(out["rates"], refb["rates"], rtol=vf.RTOL,
+                       atol=0.0)
+    assert np.allclose(out["dt_next"], refb["dt_next"], rtol=vf.RTOL,
+                       equal_nan=True)
+    assert np.all(out["rates"][0] == 0.0)
+
+
+# ------------------------------------------------------ live solver --
+def _problem(snapshot):
+    """A ``fill_problem()``-shaped dict from a snapshot (same packing
+    the fabric does, including ``remaining = target - vdone``)."""
+    p = vf.PackedProblems([snapshot])
+    C = max(1, len(snapshot["classes"]))
+    L = max(1, len(snapshot["links"]))
+    return {"caps": p.caps[0, :L], "members": p.members[0, :C, :L],
+            "n": p.n[0, :C], "fcap": p.fcap[0, :C],
+            "cap_rank": p.cap_rank[0, :C],
+            "remaining": p.target[0, :C] - p.vdone[0, :C]}
+
+
+@needs_jax
+def test_solver_matches_reference_on_corpus(corpus):
+    with vf.BatchedFillSolver() as solver:
+        sols = solver.solve([_problem(s) for s in corpus])
+    assert len(sols) == len(corpus)
+    for snap, (rates, dt) in zip(corpus, sols):
+        ref = vf.fill_reference(snap)
+        c = len(snap["classes"])
+        assert rates.shape == (max(1, c),)
+        assert np.allclose(rates[:c], ref["rates"], rtol=vf.RTOL,
+                           atol=0.0)
+        if ref["dt_next"] is None:
+            assert np.isinf(dt)
+        else:
+            assert dt == pytest.approx(ref["dt_next"], rel=vf.RTOL)
+
+
+@needs_jax
+def test_solver_results_independent_of_batch_composition(corpus):
+    """The solver's padding-inertness claim is *bit*-exact: a problem
+    solved alone, in a small batch, or in the full epoch batch returns
+    identical bytes — batch composition can never perturb a lane."""
+    probs = [_problem(s) for s in corpus]
+    with vf.BatchedFillSolver() as solver:
+        full = solver.solve(probs)
+        for i in (0, len(probs) // 2, len(probs) - 1):
+            alone = solver.solve([probs[i]])[0]
+            assert np.array_equal(alone[0], full[i][0])
+            assert (alone[1] == full[i][1]
+                    or (np.isinf(alone[1]) and np.isinf(full[i][1])))
+        assert solver.n_batches == 4 and solver.n_problems > len(probs)
+
+
+@needs_jax
+def test_solver_degenerate_problems():
+    """Zero-class / single-flow / all-capped problems through the live
+    solver in one batch."""
+    empty = {"links": [["wan", 0, 10.0]], "classes": []}
+    snaps = [empty, _single_flow_snap(), _all_capped_snap()]
+    with vf.BatchedFillSolver() as solver:
+        sols = solver.solve([_problem(s) for s in snaps])
+        assert solver.solve([]) == []
+    (r0, dt0), (r1, dt1), (r2, dt2) = sols
+    assert np.all(r0 == 0.0) and np.isinf(dt0)   # padding lane only
+    assert list(r1) == [6.0] and dt1 == 0.5
+    assert list(r2) == [2.0, 3.0] and dt2 == 4.0
+
+
 # --------------------------------------------------- ordering helper --
 def test_orderings_match_tolerates_ulp_ties_only():
     a = np.array([1.0, 2.0, 3.0, np.inf])
