@@ -1,0 +1,224 @@
+"""Beyond-paper: chaos engineering (PR 10) — correlated fault injection,
+gray failures, and the adaptive timeout/quarantine response loop.
+
+Three experiments:
+
+* **Campaign matrix** — the named ``repro.sim.workloads.chaos_scenarios``
+  campaigns (calm / gray / outages / hostile / partition) for all five
+  algorithms with the response loop on: what each fault class costs and
+  what the detector does about it.
+* **Detection A/B probe** — the ``hostile`` campaign (correlated pod
+  outages with gray prodromes, slowdown ramps, disk-slow episodes, hung
+  tasks) with the response loop ON vs OFF. This is the committed CI gate
+  scenario (see ``GATE``/``chaos_probe``): full sweeps write its numbers
+  into ``BENCH_chaos.json`` and ``scripts/check_bench_regression.py``
+  re-measures them.
+* **Bit-identity + determinism** — an attached-but-calm chaos layer
+  (empty campaign, inert detector) replayed against all 25 committed
+  golden trajectories, and repeated hostile runs compared by injection-
+  and decision-log signature.
+
+Claim checks (hard asserts):
+  * with the hostile campaign, progress-timeout detection + host
+    quarantine cuts WTT AND task re-executions versus detection-off for
+    all five algorithms — gray hosts stop eating dispatches, hung tasks
+    are killed and re-run instead of stalling their jobs;
+  * the response loop actually acts: timeouts fire, hosts are
+    quarantined, and every job still finishes (graceful degradation —
+    quarantine never wedges the cluster);
+  * chaos off — and chaos *attached but empty* — is bit-identical to
+    all 25 committed golden trajectories (the fault layer is pay-for-
+    play, exactly like churn/fabric/telemetry before it);
+  * injection and decision logs are deterministic per seed (signatures
+    of repeated runs are equal).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import table
+from repro.chaos import (ChaosConfig, ChaosSubsystem, ResponseConfig,
+                         ResponseSubsystem)
+from repro.core.joss import make_algorithm
+from repro.sim.cluster_sim import SimConfig, Simulator
+from repro.sim.golden import (case_key, golden_cases, load_golden,
+                              run_case, signature_hash)
+from repro.sim.workloads import (chaos_scenarios, make_cluster,
+                                 profiling_prelude, small_workload)
+
+ALGOS = ("joss-t", "joss-j", "fifo", "fair", "capacity")
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_chaos.json")
+
+#: the committed detection-claims gate scenario: the ``hostile`` campaign
+#: (two pod outages with 240 s gray prodromes, a slowdown ramp, a
+#: disk-slow episode, two hung tasks) on a 2x5 fleet. The tight 2x grace
+#: and one-strike quarantine are what the campaign's fault density
+#: rewards: every timeout is a true positive on a 6x-degraded host.
+GATE = dict(hosts_per_pod=(5, 5), n_jobs=30, seed=11, chaos_seed=5,
+            grace=2.0, quarantine_at=1.0,
+            campaign=dict(n_outages=2, outage_gray_s=240.0,
+                          outage_gray_factor=6.0, n_gray=1,
+                          gray_factor=6.0, n_disk=1, n_hung=2,
+                          horizon=1200.0))
+
+
+def _mk(algo_name: str, hosts_per_pod, n_jobs: int, seed: int):
+    cluster = make_cluster(tuple(hosts_per_pod))
+    jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
+    algo = make_algorithm(algo_name, cluster)
+    if hasattr(algo, "registry"):
+        for j in profiling_prelude(cluster):
+            algo.registry.record(j, j.true_fp)
+    return cluster, jobs, algo
+
+
+def chaos_probe(algo_name: str, detect: bool, point: dict = GATE):
+    """One run of the committed gate scenario — shared with the CI gate
+    (``scripts/check_bench_regression.py`` re-measures exactly this)."""
+    cluster, jobs, algo = _mk(algo_name, point["hosts_per_pod"],
+                              point["n_jobs"], point["seed"])
+    chaos = ChaosConfig(seed=point["chaos_seed"], **point["campaign"])
+    response = (ResponseConfig(grace=point["grace"],
+                               quarantine_at=point["quarantine_at"])
+                if detect else None)
+    cfg = SimConfig(chaos=chaos, response=response)
+    res = Simulator(cluster, algo, jobs, config=cfg,
+                    seed=point["seed"]).run()
+    assert len(res.job_finish) == len(jobs), \
+        f"{algo_name}: {len(res.job_finish)}/{len(jobs)} jobs finished"
+    return res
+
+
+def _scenario_run(algo_name: str, scenario: str, n_jobs: int,
+                  seed: int = 11):
+    cluster, jobs, algo = _mk(algo_name, (4, 4), n_jobs, seed)
+    chaos = ChaosConfig(seed=seed + 1, **chaos_scenarios()[scenario])
+    cfg = SimConfig(chaos=chaos, response=ResponseConfig())
+    res = Simulator(cluster, algo, jobs, config=cfg, seed=seed).run()
+    assert len(res.job_finish) == len(jobs), \
+        f"{algo_name}/{scenario}: {len(res.job_finish)}/{len(jobs)}"
+    return res
+
+
+def _full_sig(res):
+    idx = {j.job_id: i for i, j in enumerate(res.jobs)}
+    return (res.wtt, res.n_reexec, res.n_timeouts, res.n_quarantined,
+            tuple(((log.task.tid[0], idx[log.task.tid[1]],
+                    *log.task.tid[2:]),
+                   (log.host.pod, log.host.index),
+                   log.start, log.finish) for log in res.task_logs))
+
+
+def _calm_subsystems():
+    """An attached-but-inert chaos layer: an empty campaign and a
+    detector whose grace never trips. Attaching these to a golden case
+    must not move a single event."""
+    return (ChaosSubsystem(ChaosConfig(seed=0)),
+            ResponseSubsystem(ResponseConfig(grace=1e18,
+                                             quarantine_at=1e18)))
+
+
+def run(quick: bool = False) -> str:
+    # ---------------------------------------------- campaign matrix ---------
+    n_jobs = 12 if quick else 24
+    rows: List[List] = []
+    for scen in chaos_scenarios():
+        for name in ALGOS:
+            res = _scenario_run(name, scen, n_jobs)
+            rows.append([scen, name, res.wtt, res.n_chaos_events,
+                         res.n_hung, res.n_timeouts, res.n_quarantined,
+                         res.n_surfaced, res.n_reexec,
+                         res.n_host_losses])
+    out = table(
+        "Chaos campaigns x algorithm (2x4 fleet, response loop on; "
+        "'events' = primary campaign injections applied)",
+        ["campaign", "algo", "wtt s", "events", "hung", "timeouts",
+         "quarantined", "surfaced", "re-exec", "losses"], rows)
+
+    # calm campaign must be a no-op end to end
+    calm = [r for r in rows if r[0] == "calm"]
+    assert all(r[3] == 0 and r[5] == 0 and r[6] == 0 for r in calm), \
+        "calm campaign injected or detected something"
+
+    # ----------------------------------------- detection A/B probe ----------
+    prows: List[List] = []
+    gate_algos: Dict[str, dict] = {}
+    tot_timeouts = tot_quar = 0
+    for name in ALGOS:
+        off = chaos_probe(name, detect=False)
+        on = chaos_probe(name, detect=True)
+        assert on.wtt < off.wtt, \
+            (f"{name}: detection did not cut WTT "
+             f"({on.wtt:.0f}s vs {off.wtt:.0f}s detection-off)")
+        assert on.n_reexec < off.n_reexec, \
+            (f"{name}: detection did not cut re-executions "
+             f"({on.n_reexec} vs {off.n_reexec} detection-off)")
+        tot_timeouts += on.n_timeouts
+        tot_quar += on.n_quarantined
+        gate_algos[name] = dict(
+            off_wtt=off.wtt, off_reexec=off.n_reexec,
+            wtt=on.wtt, reexec=on.n_reexec,
+            n_timeouts=on.n_timeouts, n_quarantined=on.n_quarantined,
+            n_surfaced=on.n_surfaced)
+        prows.append([name, off.wtt, off.n_reexec, on.wtt, on.n_reexec,
+                      on.n_timeouts, on.n_quarantined, on.n_surfaced])
+    out += "\n" + table(
+        "Detection A/B probe — hostile campaign on a 2x5 fleet "
+        "(the committed CI gate scenario)",
+        ["algo", "off wtt s", "off re-exec", "wtt s", "re-exec",
+         "timeouts", "quarantined", "surfaced"], prows)
+    assert tot_timeouts > 0 and tot_quar > 0, \
+        "claims probe never exercised the response loop"
+    out += ("\n\n[claim check: timeout+quarantine detection cuts WTT "
+            "AND re-executions vs detection-off for all 5 algorithms "
+            f"({tot_timeouts} timeouts, {tot_quar} quarantines across "
+            "the probe; every job finished under quarantine)]")
+
+    # ------------------------------- golden bit-identity (chaos off) --------
+    stored_golden = load_golden()
+    cases = golden_cases()
+    if quick:
+        cases = cases[::5]      # one variant per algorithm
+    for algo, variant in cases:
+        res = run_case(algo, variant, subsystems=_calm_subsystems())
+        assert signature_hash(res) == stored_golden[case_key(algo, variant)], \
+            (f"attached-but-calm chaos layer perturbed the committed "
+             f"golden trajectory {case_key(algo, variant)}")
+    out += (f"\n[claim check: attached-but-calm chaos layer (empty "
+            f"campaign + inert detector) bit-identical to "
+            f"{len(cases)}/{len(golden_cases())} committed golden "
+            "trajectories]")
+
+    # ------------------------------------- per-seed determinism -------------
+    a = chaos_probe("joss-t", detect=True)
+    b = chaos_probe("joss-t", detect=True)
+    assert a.chaos.signature() == b.chaos.signature(), \
+        "chaos injection log not deterministic per seed"
+    assert a.response.signature() == b.response.signature(), \
+        "response decision log not deterministic per seed"
+    assert _full_sig(a) == _full_sig(b), \
+        "chaos trajectory not deterministic per seed"
+    out += ("\n[claim check: injection and decision logs deterministic "
+            "per seed]")
+
+    # full sweeps rewrite the committed gate row
+    if not quick:
+        stored = dict(
+            gate={k: (list(v) if isinstance(v, tuple) else v)
+                  for k, v in GATE.items()},
+            algos=gate_algos,
+            chaos_signature=a.chaos.signature(),
+            response_signature=a.response.signature())
+        with open(JSON_PATH, "w") as f:
+            json.dump(stored, f, indent=1, sort_keys=True)
+            f.write("\n")
+        out += f"\n[wrote chaos gate row -> {JSON_PATH}]"
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -22,9 +22,10 @@ def main(argv=None) -> int:
                     help="comma-separated section names")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_dispatch, bench_elastic, bench_engine,
-                            bench_fabric, bench_filtering, bench_migration,
-                            bench_mixed_workload, bench_obs, bench_overhead,
+    from benchmarks import (bench_chaos, bench_dispatch, bench_elastic,
+                            bench_engine, bench_fabric, bench_filtering,
+                            bench_migration, bench_mixed_workload,
+                            bench_obs, bench_overhead,
                             bench_small_workload, bench_sweep,
                             bench_threshold)
 
@@ -40,6 +41,7 @@ def main(argv=None) -> int:
         "elastic": lambda: bench_elastic.run(quick=args.quick),
         "fabric": lambda: bench_fabric.run(quick=args.quick),
         "migration": lambda: bench_migration.run(quick=args.quick),
+        "chaos": lambda: bench_chaos.run(quick=args.quick),
         "obs": lambda: bench_obs.run(quick=args.quick),
         "sweep": lambda: bench_sweep.run(quick=args.quick,
                                          fast=args.fast),

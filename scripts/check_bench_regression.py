@@ -89,6 +89,19 @@ floor (wall-clock ratios at reduced seeds are noisy; the committed
 full-seed number carries the envelope). ``--lockstep-perturb`` divides
 the fresh speedup for the gate's self-test.
 
+PR 10 adds the **chaos gate** on ``BENCH_chaos.json`` (written by full
+``--only chaos`` sweeps): the committed hostile-campaign detection A/B
+probe is re-simulated for every stored algorithm, with and without the
+timeout/quarantine response loop, and must re-establish the acceptance
+envelope — detection cuts WTT AND task re-executions versus
+detection-off. Like the other simulation gates the probe is
+deterministic per seed, so the fresh WTT / re-exec / timeout /
+quarantine counters and the injection- and decision-log signatures must
+match the stored row *exactly*: drift is a behaviour change, to be
+acknowledged by refreshing the file with a full ``--only chaos`` sweep.
+``--chaos-perturb`` adds seconds to the fresh detection-on WTT (and
+poisons the fresh signatures) for the gate's self-test.
+
 Exit code: 0 = within budget, 1 = regression (or missing trajectory).
 """
 from __future__ import annotations
@@ -108,6 +121,7 @@ ELASTIC_JSON_PATH = os.path.join(_ROOT, "BENCH_elastic.json")
 FABRIC_JSON_PATH = os.path.join(_ROOT, "BENCH_fabric.json")
 OBS_JSON_PATH = os.path.join(_ROOT, "BENCH_obs.json")
 SWEEP_JSON_PATH = os.path.join(_ROOT, "BENCH_sweep.json")
+CHAOS_JSON_PATH = os.path.join(_ROOT, "BENCH_chaos.json")
 
 #: assign entries are gated at and above this many total map slots — the
 #: scale points PR 1's O(1) envelope was accepted at
@@ -233,6 +247,33 @@ def _fresh_migration(stored_mig: dict, perturb: float = 0.0) -> dict:
         if algo == "joss-t":
             sig = mig.migration.signature()
             fresh["signature"] = sig + "!" if perturb else sig
+    return fresh
+
+
+def _fresh_chaos(stored_chaos: dict, perturb: float = 0.0) -> dict:
+    """Re-simulate the committed chaos detection A/B probe for every
+    stored algorithm (deterministic per seed). Returns the same shape
+    as the stored ``algos`` mapping plus ``chaos_signature`` /
+    ``response_signature`` keys — the log signatures of the scenario's
+    joss-t detection-on run. ``perturb`` adds seconds to the fresh
+    detection-on WTT (and poisons the signatures) for the gate's
+    self-test."""
+    from benchmarks.bench_chaos import chaos_probe
+    point = dict(stored_chaos["gate"])
+    point["hosts_per_pod"] = tuple(point["hosts_per_pod"])
+    fresh: dict = {}
+    for algo in sorted(stored_chaos["algos"]):
+        off = chaos_probe(algo, detect=False, point=point)
+        on = chaos_probe(algo, detect=True, point=point)
+        fresh[algo] = dict(
+            off_wtt=off.wtt, off_reexec=off.n_reexec,
+            wtt=on.wtt + perturb, reexec=on.n_reexec,
+            n_timeouts=on.n_timeouts, n_quarantined=on.n_quarantined,
+            n_surfaced=on.n_surfaced)
+        if algo == "joss-t":
+            cs, rs = on.chaos.signature(), on.response.signature()
+            fresh["chaos_signature"] = cs + "!" if perturb else cs
+            fresh["response_signature"] = rs + "!" if perturb else rs
     return fresh
 
 
@@ -502,6 +543,46 @@ def compare_migration(stored_mig: dict, fresh: dict) -> list:
     return failures
 
 
+def compare_chaos(stored_chaos: dict, fresh: dict) -> list:
+    """Pure comparison for the chaos gate: the fresh re-simulation must
+    hold the acceptance envelope (detection beats detection-off on both
+    WTT and re-executions) AND match the stored row exactly (the probe
+    is deterministic — drift means behaviour changed)."""
+    failures = []
+    total_timeouts = total_quar = 0
+    for algo, s in sorted(stored_chaos["algos"].items()):
+        f = fresh[algo]
+        total_timeouts += f["n_timeouts"]
+        total_quar += f["n_quarantined"]
+        if f["wtt"] >= f["off_wtt"]:
+            failures.append(
+                f"chaos detection did not cut WTT for {algo} "
+                f"({f['wtt']:.0f}s vs {f['off_wtt']:.0f}s "
+                "detection-off)")
+        if f["reexec"] >= f["off_reexec"]:
+            failures.append(
+                f"chaos detection did not cut re-executions for {algo} "
+                f"({f['reexec']} vs {f['off_reexec']} detection-off)")
+        for k in ("wtt", "reexec", "n_timeouts", "n_quarantined",
+                  "n_surfaced"):
+            if f[k] != s[k]:
+                failures.append(
+                    f"chaos {k} drifted for {algo}: {f[k]} vs stored "
+                    f"{s[k]} (behaviour change — refresh the row with "
+                    "a full --only chaos sweep)")
+    if total_timeouts <= 0 or total_quar <= 0:
+        failures.append("chaos probe never exercised the response loop "
+                        "(no timeouts or no quarantines across all "
+                        "algorithms)")
+    for key in ("chaos_signature", "response_signature"):
+        if fresh[key] != stored_chaos[key]:
+            failures.append(
+                f"{key.replace('_', '-')} drifted "
+                f"({fresh[key][:12]}... vs stored "
+                f"{stored_chaos[key][:12]}...)")
+    return failures
+
+
 def compare_fabric(stored: dict, fresh_events: float,
                    threshold: float) -> list:
     """Pure comparison for the fabric gate: the committed gate point
@@ -601,6 +682,12 @@ def main(argv=None) -> int:
     ap.add_argument("--migration-perturb", type=float, default=0.0,
                     help="MB of artificial work loss added to the fresh "
                          "migration probe (gate self-test)")
+    ap.add_argument("--chaos-json", default=CHAOS_JSON_PATH,
+                    help="stored chaos detection gate "
+                         "(default: BENCH_chaos.json)")
+    ap.add_argument("--chaos-perturb", type=float, default=0.0,
+                    help="seconds added to the fresh detection-on WTT "
+                         "(gate self-test)")
     ap.add_argument("--obs-json", default=OBS_JSON_PATH,
                     help="stored telemetry trajectory "
                          "(default: BENCH_obs.json)")
@@ -649,6 +736,12 @@ def main(argv=None) -> int:
             stored_sweep = json.load(f)
     except OSError as e:
         print(f"[bench-regression] cannot read sweep trajectory: {e}")
+        return 1
+    try:
+        with open(args.chaos_json) as f:
+            stored_chaos = json.load(f)
+    except OSError as e:
+        print(f"[bench-regression] cannot read chaos trajectory: {e}")
         return 1
 
     fresh_assign: dict = {}
@@ -749,14 +842,24 @@ def main(argv=None) -> int:
                   f"{f['n_migrated']} migrated (baseline "
                   f"{f['base_lost']:.1f} MB / {f['base_reexec']})")
         failures += compare_migration(stored_mig, fresh_mig)
+
+    fresh_chaos = _fresh_chaos(stored_chaos, args.chaos_perturb)
+    for algo in sorted(stored_chaos["algos"]):
+        f = fresh_chaos[algo]
+        print(f"[bench-regression] chaos {algo}: "
+              f"{f['wtt']:.0f}s wtt / {f['reexec']} re-exec / "
+              f"{f['n_timeouts']} timeouts / {f['n_quarantined']} "
+              f"quarantined (detection-off {f['off_wtt']:.0f}s / "
+              f"{f['off_reexec']})")
+    failures += compare_chaos(stored_chaos, fresh_chaos)
     for f in failures:
         print(f"[bench-regression] FAIL: {f}")
     if not failures:
         print(f"[bench-regression] OK: trajectory held within "
               f"{args.threshold:.0%} at every gated perf point "
               f"(dispatch + fabric), {args.wtt_threshold:.2%} at every "
-              f"elastic WTT point, bit-exact at the migration and "
-              f"telemetry-trace probes, the sweep orchestrator held "
+              f"elastic WTT point, bit-exact at the migration, chaos, "
+              f"and telemetry-trace probes, the sweep orchestrator held "
               f"the {MIN_SWEEP_SPEEDUP:.0f}x warm-store envelope, the "
               f"lockstep executor stayed bit-identical with its "
               f"{MIN_LOCKSTEP_FILL_SPEEDUP:.0f}x fill envelope "

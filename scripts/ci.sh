@@ -35,6 +35,16 @@
 #                      no-migration runs, decisions are deterministic
 #                      per seed, and fleet compaction cuts VPS-hours
 #                      and WTT on the straggler tail without losing work
+#   chaos-claims     — chaos-layer claims, all asserted inside
+#                      bench_chaos: the attached-but-calm fault layer
+#                      (empty campaign + inert detector) is bit-identical
+#                      to the committed golden trajectories, the calm
+#                      campaign injects and detects nothing, the hostile-
+#                      campaign detection A/B probe cuts WTT AND task
+#                      re-executions vs detection-off for all five
+#                      algorithms with every job still finishing under
+#                      quarantine, and injection/decision logs are
+#                      deterministic per seed
 #   obs-claims       — telemetry claims, all asserted inside bench_obs:
 #                      telemetry-on runs are bit-identical to all 25
 #                      committed golden trajectories, events/s stays
@@ -82,6 +92,12 @@
 #                      bit-exactly (loss/re-exec/restore counters and
 #                      the decision-log signature must match, and the
 #                      <= 5% loss envelope must hold) + the committed
+#                      chaos detection gate of BENCH_chaos.json
+#                      re-simulated bit-exactly (WTT / re-exec / timeout
+#                      / quarantine counters and the injection- and
+#                      decision-log signatures must match, and detection
+#                      must beat detection-off on WTT and re-executions
+#                      for every stored algorithm) + the committed
 #                      BENCH_obs.json telemetry gate (stored overhead
 #                      ratio must hold the 90% envelope; the trace
 #                      probe re-simulated and its sha256/event count
@@ -165,6 +181,7 @@ stage claim-checks 900 python -m benchmarks.run --quick --only overhead,dispatch
 stage elastic-claims 900 python -m benchmarks.run --quick --only elastic
 stage fabric-claims 900 python -m benchmarks.run --quick --only fabric
 stage migration-claims 600 python -m benchmarks.run --quick --only migration
+stage chaos-claims 600 python -m benchmarks.run --quick --only chaos
 stage obs-claims 600 python -m benchmarks.run --quick --only obs
 stage sweep-claims 600 sweep_claims
 stage lockstep-claims 300 python -m benchmarks.run --quick --only lockstep

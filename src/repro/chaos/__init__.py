@@ -1,0 +1,17 @@
+"""Chaos engineering layer: deterministic fault campaigns, gray
+failures, and the adaptive timeout/quarantine response loop (PR 10)."""
+from repro.chaos.campaign import ChaosConfig, ChaosEvent, build_campaign
+from repro.chaos.inject import ChaosSubsystem, ChaosSummary
+from repro.chaos.response import (ResponseConfig, ResponseSubsystem,
+                                  ResponseSummary)
+
+__all__ = [
+    "ChaosConfig",
+    "ChaosEvent",
+    "build_campaign",
+    "ChaosSubsystem",
+    "ChaosSummary",
+    "ResponseConfig",
+    "ResponseSubsystem",
+    "ResponseSummary",
+]

@@ -95,6 +95,15 @@ class Joss:
         if not self.cluster.pods[hid.pod].hosts:
             queues.evacuate_pod(hid.pod)
 
+    def pod_degraded(self, pod: int) -> None:
+        """Graceful degradation (PR 10): quarantine emptied ``pod``'s
+        offerable set. Its hosts are still leased (so ``host_lost`` never
+        fired), but nothing will serve the pod's queues until probation
+        ends — evacuate them to the global FIFO queues now, the same
+        re-bucketing an emptied pod gets, so queued work re-acquires
+        whatever locality healthy pods can still offer."""
+        self.scheduler.queues.evacuate_pod(pod)
+
     def replica_restored(self, shard_id, hid: HostId,
                          pod_covered: bool) -> None:
         """Re-replication (PR 3): a repair copy landed on ``hid`` — re-patch

@@ -292,6 +292,15 @@ class DurabilitySubsystem(Subsystem):
             self._copying = False
             self._pump(tn)
 
-        self.sim.fabric.start_flow(now, mb, src_pod, pod,
-                                   self.mgr.cfg.rerep_bandwidth, "rerep",
+        bw = self.mgr.cfg.rerep_bandwidth
+        dyn = self.sim.dyn_disk
+        if dyn:
+            # disk-slow chaos episode (PR 10): the repair writes at the
+            # worst degraded disk of the destination pod. Per-stream
+            # rerep completions are precomputed at loss time (the target
+            # is not chosen yet), so only fabric mode models this.
+            pf = max((f for h, f in dyn.items() if h.pod == pod),
+                     default=1.0)
+            bw /= pf
+        self.sim.fabric.start_flow(now, mb, src_pod, pod, bw, "rerep",
                                    copied)

@@ -251,7 +251,8 @@ class MigrationSubsystem(Subsystem):
             if (not isinstance(t, MapTask) or t.shard_id != shard_id
                     or tid in self.pending
                     or log.locality is not Locality.OFF_POD
-                    or log.host in sim.draining):
+                    or log.host in sim.draining
+                    or log.host in sim.quarantined):
                 continue
             if self._progress(log, now) > self.cfg.repair_max_frac:
                 continue
@@ -320,7 +321,8 @@ class MigrationSubsystem(Subsystem):
         preemption away from re-shipping the same bytes."""
         sim = self.sim
         cands = [h for h in sim.all_hosts
-                 if h != src and h not in sim.draining]
+                 if h != src and h not in sim.draining
+                 and h not in sim.quarantined]
         if not cands:
             return None
         book = sim.elastic.book
@@ -335,7 +337,8 @@ class MigrationSubsystem(Subsystem):
         self._out_keys.difference_update((p.jid, m) for m in p.midxs)
         sim = self.sim
         if (p.src in sim.departed or not sim.cluster.has_host(p.dst)
-                or p.dst in sim.draining or sim.reds_left[p.jid] == 0):
+                or p.dst in sim.draining or p.dst in sim.quarantined
+                or sim.reds_left[p.jid] == 0):
             self._abort_out(p, now, "stale")
             return
         moved = 0
@@ -450,7 +453,7 @@ class MigrationSubsystem(Subsystem):
         if hid not in free:
             return          # host departed meanwhile
         free[hid] += 1
-        if hid not in sim.draining:
+        if hid not in sim.draining and hid not in sim.quarantined:
             (sim.free_map_hosts if is_map
              else sim.free_red_hosts).add(hid)
 
@@ -514,7 +517,8 @@ class MigrationSubsystem(Subsystem):
         sim = self.sim
         log = sim.running.get(tid)
         valid = (log is not None and sim.cluster.has_host(p.dst)
-                 and p.dst not in sim.draining)
+                 and p.dst not in sim.draining
+                 and p.dst not in sim.quarantined)
         if valid and p.is_map:
             t = log.task
             # a speculative twin may have finished the pair meanwhile

@@ -333,6 +333,14 @@ class TelemetrySubsystem(Subsystem):
             self._trace.instant("fleet", "migration", what, now,
                                args=args or None)
 
+    def note_chaos(self, now: float, what: str) -> None:
+        """Chaos layer note (PR 10): one injection or response decision
+        (``what`` is the log action, e.g. outage_kill / timeout /
+        quarantine). Counter + trace instant, same shape as migration."""
+        self.registry.counter(f"chaos.{what}").inc()
+        if self._trace is not None:
+            self._trace.instant("fleet", "chaos", what, now)
+
     # -- live O(1) views ------------------------------------------------------
     def job_progress(self, job_id: int) -> Tuple[float, float]:
         sim = self.sim

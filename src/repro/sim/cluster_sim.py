@@ -73,6 +73,13 @@ class SimConfig:
     # It owns no event kinds and consumes no RNG, so telemetry-on runs
     # are bit-identical to telemetry-off; None = zero overhead
     telemetry: Optional["TelemetryConfig"] = None
+    # chaos layer (PR 10): a ChaosConfig replays a deterministic fault
+    # campaign (correlated pod outages, gray/disk episodes, link faults,
+    # hung tasks); a ResponseConfig attaches the progress-timeout /
+    # quarantine loop. Either None (or an empty campaign) executes the
+    # exact pre-chaos code path — bit-identical to the 25 goldens
+    chaos: Optional["ChaosConfig"] = None
+    response: Optional["ResponseConfig"] = None
 
     def read_bw(self, loc: Locality) -> float:
         return {Locality.HOST: self.disk_bw, Locality.POD: self.pod_bw,
@@ -133,6 +140,14 @@ class SimResult:
     n_mig_aborted: int = 0      # migrations abandoned (races, lost hosts)
     # -- observability outputs (PR 7; None without a telemetry config) -------
     telemetry: object = None    # TelemetrySubsystem (registry/trace/scoreboard)
+    # -- chaos outputs (PR 10; all zero/None without the chaos layer) --------
+    chaos: object = None        # ChaosSummary when run with injection
+    response: object = None     # ResponseSummary when run with the loop
+    n_chaos_events: int = 0     # primary campaign injections applied
+    n_hung: int = 0             # hung-task injections
+    n_timeouts: int = 0         # attempts killed by progress timeout
+    n_quarantined: int = 0      # hosts sent to quarantine
+    n_surfaced: int = 0         # task pairs escalated to job-level failures
 
     def jtt(self, job: Job) -> float:
         return self.job_finish[job.job_id] - self.job_submit[job.job_id]
@@ -290,6 +305,16 @@ class Simulator:
         # leave the free-offer sets, so dispatch stops feeding them
         self.draining: set = set()
         self.migration = None
+        # chaos (PR 10): dynamic fault overlays. Every consumer below
+        # gates on truthiness, so with no campaign attached these stay
+        # empty and the pre-chaos code path runs instruction-for-
+        # instruction (bit-identity to the goldens)
+        self.dyn_slow: Dict[HostId, float] = {}   # chaos slowdown overlay
+        self.dyn_disk: Dict[HostId, float] = {}   # ckpt/rerep write stretch
+        self.chaos_hung: Dict[object, float] = {}  # tid -> stall seconds
+        self.quarantined: set = set()   # response-layer blacklist
+        self.chaos = None           # ChaosSubsystem (set on attach)
+        self.chaos_response = None  # ResponseSubsystem (set on attach)
 
         subs: List[Subsystem] = []
         if self.elastic is not None:
@@ -308,6 +333,15 @@ class Simulator:
         if cfg.fabric is not None:
             self.fabric = make_fabric(self.cluster, cfg.fabric)
             subs.append(self.fabric)
+        # chaos + response (PR 10): injection attaches before response so
+        # a same-instant injection is visible to that tick's deadline
+        # scan, and both before telemetry so their notes are observable
+        if cfg.chaos is not None and cfg.chaos.enabled:
+            from repro.chaos.inject import ChaosSubsystem
+            subs.append(ChaosSubsystem(cfg.chaos))
+        if cfg.response is not None and cfg.response.enabled:
+            from repro.chaos.response import ResponseSubsystem
+            subs.append(ResponseSubsystem(cfg.response))
         # telemetry (PR 7): attached last so its samples see the fabric;
         # hook-only (no event kinds, no RNG), so trajectories don't move
         self.telemetry = None
@@ -346,9 +380,13 @@ class Simulator:
         return (t.job_id in self.submitted and self.maps_left[t.job_id] == 0)
 
     def _host_slow(self, hid: HostId) -> float:
-        if self.cfg.slow_hosts:
-            return self.cfg.slow_hosts.get(hid, 1.0)
-        return 1.0
+        s = (self.cfg.slow_hosts.get(hid, 1.0)
+             if self.cfg.slow_hosts else 1.0)
+        if self.dyn_slow:
+            # chaos overlay (PR 10): gray episodes / outage prodromes
+            # multiply into the static straggler map
+            s *= self.dyn_slow.get(hid, 1.0)
+        return s
 
     # ------------------------------------------------ draining (PR 6) --
     def drain_host(self, hid: HostId) -> None:
@@ -361,11 +399,103 @@ class Simulator:
     def undrain_host(self, hid: HostId) -> None:
         """Reopen a drained host (notice cancelled / nothing to move)."""
         self.draining.discard(hid)
-        if self.cluster.has_host(hid):
+        if self.cluster.has_host(hid) and hid not in self.quarantined:
             if self.map_free.get(hid, 0) > 0:
                 self.free_map_hosts.add(hid)
             if self.red_free.get(hid, 0) > 0:
                 self.free_red_hosts.add(hid)
+
+    # ------------------------------------------- quarantine (PR 10) --
+    def quarantine_host(self, hid: HostId) -> None:
+        """Blacklist an unhealthy host: same mechanics as draining
+        (slot counters stay live, running tasks finish or time out,
+        nothing new is offered), but owned by the response layer."""
+        self.quarantined.add(hid)
+        self.free_map_hosts.discard(hid)
+        self.free_red_hosts.discard(hid)
+
+    def readmit_host(self, hid: HostId) -> None:
+        """Probation over: re-enter the host in the offer sets (unless
+        it is meanwhile draining toward an announced departure)."""
+        self.quarantined.discard(hid)
+        if self.cluster.has_host(hid) and hid not in self.draining:
+            if self.map_free.get(hid, 0) > 0:
+                self.free_map_hosts.add(hid)
+            if self.red_free.get(hid, 0) > 0:
+                self.free_red_hosts.add(hid)
+
+    def kill_task(self, tid, now: float) -> Optional[TaskLog]:
+        """Kill one running attempt (PR 10 timeout response): free its
+        slot, cancel its in-flight fabric flow, drop any pending hang,
+        and leave re-dispatch to the caller. Returns the attempt's log,
+        or None when it already finished (the timeout raced the done
+        event inside one instant)."""
+        log = self.running.pop(tid, None)
+        if log is None:
+            return None
+        self.chaos_hung.pop(tid, None)
+        if self.fabric is not None:
+            fid = self._task_flows.pop(tid, None)
+            if fid is not None:
+                self.fabric.cancel(fid, now)
+        t = log.task
+        t.state = TaskState.FAILED
+        self.algo.task_finished(t)
+        hid = log.host
+        offerable = (hid not in self.draining
+                     and hid not in self.quarantined)
+        if isinstance(t, MapTask):
+            if hid in self.map_free:
+                self.map_free[hid] += 1
+                if offerable:
+                    self.free_map_hosts.add(hid)
+        elif hid in self.red_free:
+            self.red_free[hid] += 1
+            if offerable:
+                self.free_red_hosts.add(hid)
+        return log
+
+    def requeue_failed_attempt(self, log: TaskLog, now: float) -> bool:
+        """Queue a fresh attempt of a killed task (PR 10 timeout
+        response), mirroring ``lose_host``'s kill+requeue bookkeeping.
+        Returns False when requeueing is moot: the pair finished in the
+        meantime (a speculative twin) or another attempt is running."""
+        t = log.task
+        jid = t.job_id
+        if jid in self.job_finish:
+            return False
+        if isinstance(t, MapTask):
+            pair = (jid, t.index)
+            if pair in self.done_pairs:
+                return False
+            if any(isinstance(ls.task, MapTask)
+                   and (ls.task.job_id, ls.task.index) == pair
+                   for ls in self.running.values()):
+                return False
+            requeue_map = getattr(self.algo, "requeue_map_task", None)
+            if requeue_map is None:
+                return False
+            requeue_map(self._remake_map(jid, t.index))
+            self.map_backlog += 1
+            self.n_reexec += 1
+            return True
+        if self.job_by_id[jid].reduce_tasks[t.index].state is TaskState.DONE:
+            return False
+        if any(isinstance(ls.task, ReduceTask) and ls.task.job_id == jid
+               and ls.task.index == t.index
+               for ls in self.running.values()):
+            return False
+        requeue_red = getattr(self.algo, "requeue_reduce_task", None)
+        if requeue_red is None:
+            return False
+        requeue_red(self._remake_reduce(jid, t.index))
+        self.reds_unassigned[jid] += 1
+        self.n_reexec += 1
+        if self.maps_left[jid] == 0:
+            self.red_ready_backlog += 1
+            if self.notify_maps_done is not None:
+                self.notify_maps_done(jid)
+        return True
 
     def host_is_idle(self, hid: HostId) -> bool:
         """True iff the host is alive with every slot free (used to
@@ -412,6 +542,9 @@ class Simulator:
             # synchronous persist of the map output to the pod object
             # store before the task reports done (PR 3 checkpointing)
             write_t = rem * job.true_fp / self.dur.cfg.ckpt_write_bw
+            if self.dyn_disk:
+                # disk-slow chaos episode stretches the persist
+                write_t *= self.dyn_disk.get(hid, 1.0)
         dur_s = (cfg.task_overhead + read_t + comp_t + write_t) \
             * self._host_slow(hid)
         t.state = TaskState.RUNNING
@@ -481,9 +614,12 @@ class Simulator:
                 return
             if write_mb > 0.0:
                 # persist to the pod object store: pod-internal hop
+                bw = self.dur.cfg.ckpt_write_bw
+                if self.dyn_disk:
+                    # disk-slow chaos episode caps the persist stream
+                    bw /= self.dyn_disk.get(hid, 1.0)
                 self._task_flow(tid, tn, write_mb, hid.pod, hid.pod,
-                                self.dur.cfg.ckpt_write_bw, "ckpt_write",
-                                fin)
+                                bw, "ckpt_write", fin)
             else:
                 fin(tn)
 
@@ -687,7 +823,8 @@ class Simulator:
                 continue
             cands = [h for h in self.all_hosts
                      if map_free[h] > 0 and h != log.host
-                     and h not in self.draining]
+                     and h not in self.draining
+                     and h not in self.quarantined]
             if not cands:
                 continue
             cands.sort(key=lambda h: (h.pod == log.host.pod,
@@ -715,7 +852,7 @@ class Simulator:
         while progress:
             progress = False
             for hid in order:
-                if hid in self.draining:
+                if hid in self.draining or hid in self.quarantined:
                     continue
                 while map_free[hid] > 0:
                     t = algo.next_map_task(hid)
@@ -843,6 +980,7 @@ class Simulator:
         dead = self.cluster.remove_host(hid)
         self.departed.add(hid)
         self.draining.discard(hid)
+        self.quarantined.discard(hid)
         self.map_free.pop(hid, None)
         self.red_free.pop(hid, None)
         self.free_map_hosts.discard(hid)
@@ -969,7 +1107,9 @@ class Simulator:
                     busy += 1
                     # compaction candidates (PR 6): one straggling task
                     # pins the lease; skip hosts already being drained
-                    if need_light and occ == 1 and hid not in self.draining:
+                    if (need_light and occ == 1
+                            and hid not in self.draining
+                            and hid not in self.quarantined):
                         light_list.append(hid)
             idle = tuple(sorted(idle_list,
                                 key=lambda h: (h.pod, h.index)))
@@ -1016,6 +1156,14 @@ class Simulator:
             h(job, now)
 
     def _on_map_done(self, now: float, t: MapTask):
+        if self.chaos_hung:
+            # hung-task injection (PR 10): swallow the completion once
+            # and re-fire it after the stall — no churn event, no freed
+            # slot, nothing fail-stop detection could see
+            stall = self.chaos_hung.pop(t.tid, None)
+            if stall is not None and t.tid in self.running:
+                self.kernel.push(now + stall, "map_done", t)
+                return True
         log = self.running.pop(t.tid, None)
         if log is None:
             return True     # killed by churn: stale event, no dispatch
@@ -1025,7 +1173,8 @@ class Simulator:
             # slot waits for the next real event (returning True skips the
             # post-step, matching the old loop's ``continue``)
             self.map_free[log.host] += 1
-            if log.host not in self.draining:
+            if (log.host not in self.draining
+                    and log.host not in self.quarantined):
                 self.free_map_hosts.add(log.host)
             self.algo.task_finished(t)
             return True
@@ -1049,7 +1198,8 @@ class Simulator:
         self.maps_left[t.job_id] = left
         self.unfinished -= 1
         self.map_free[log.host] += 1
-        if log.host not in self.draining:
+        if (log.host not in self.draining
+                and log.host not in self.quarantined):
             self.free_map_hosts.add(log.host)
         self.algo.task_finished(t)
         for h in self._hooks_task_finish:
@@ -1066,6 +1216,11 @@ class Simulator:
                 self._finish_job(job, now)
 
     def _on_reduce_done(self, now: float, t: ReduceTask):
+        if self.chaos_hung:
+            stall = self.chaos_hung.pop(t.tid, None)
+            if stall is not None and t.tid in self.running:
+                self.kernel.push(now + stall, "reduce_done", t)
+                return True
         log = self.running.pop(t.tid, None)
         if log is None:
             return True     # killed by churn: stale event, no dispatch
@@ -1079,7 +1234,8 @@ class Simulator:
         self.reds_left[t.job_id] -= 1
         self.unfinished -= 1
         self.red_free[log.host] += 1
-        if log.host not in self.draining:
+        if (log.host not in self.draining
+                and log.host not in self.quarantined):
             self.free_red_hosts.add(log.host)
         self.algo.task_finished(t)
         for h in self._hooks_task_finish:
@@ -1140,4 +1296,15 @@ class Simulator:
                 res.storage_dollars += ms.storage_dollars
         if self.telemetry is not None:
             res.telemetry = self.telemetry.finalize(end)
+        if self.chaos is not None:
+            cs = self.chaos.finalize()
+            res.chaos = cs
+            res.n_chaos_events = cs.n_injected
+            res.n_hung = cs.n_hung
+        if self.chaos_response is not None:
+            rs = self.chaos_response.finalize()
+            res.response = rs
+            res.n_timeouts = rs.n_timeouts
+            res.n_quarantined = rs.n_quarantined
+            res.n_surfaced = rs.n_surfaced
         return res

@@ -64,6 +64,12 @@ class Summary:
     n_migrated: int = 0           # tasks restored from shipped state
     migrate_mb: float = 0.0       # migration state traffic (MB)
     n_mig_aborted: int = 0        # transfers abandoned (races, lost hosts)
+    # -- chaos outputs (PR 10; zero without the chaos layer) -----------------
+    n_chaos_events: int = 0       # primary campaign injections applied
+    n_hung: int = 0               # hung-task injections
+    n_timeouts: int = 0           # attempts killed by progress timeout
+    n_quarantined: int = 0        # hosts sent to quarantine
+    n_surfaced: int = 0           # pairs escalated to job-level failures
 
 
 def _bench_of(log) -> str:
@@ -156,7 +162,10 @@ def summarize(res: SimResult, *, benchmarks: Optional[List[str]] = None
                         for k, v in getattr(res.fabric, "by_kind", {}).items()}
         if res.fabric is not None else {},
         n_migrated=res.n_migrated, migrate_mb=res.migrate_mb,
-        n_mig_aborted=res.n_mig_aborted)
+        n_mig_aborted=res.n_mig_aborted,
+        n_chaos_events=res.n_chaos_events, n_hung=res.n_hung,
+        n_timeouts=res.n_timeouts, n_quarantined=res.n_quarantined,
+        n_surfaced=res.n_surfaced)
 
 
 def normalized_jtt(summaries: List[Summary], reference: str = "joss-t"

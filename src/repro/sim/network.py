@@ -249,6 +249,9 @@ class _FabricBase(Subsystem):
         self._caps: Dict[LinkKey, float] = {}
         self._carried: Dict[LinkKey, float] = {}  # MB integral
         self._load: Dict[LinkKey, float] = {}     # current sum rate
+        # chaos derating (PR 10): link -> surviving capacity fraction;
+        # empty (the default) leaves every capacity untouched
+        self._derate: Dict[LinkKey, float] = {}
         self.summary = FabricSummary()
         self._tel = None   # TelemetrySubsystem (PR 7), cached at attach
 
@@ -300,12 +303,50 @@ class _FabricBase(Subsystem):
         self._caps[(DOWN, pod)] = el.host_down * n
         if el.wan_per_host > 0.0:
             self._caps[(WAN, 0)] = el.wan_per_host * self.cluster.n_hosts
+        if self._derate:
+            # chaos derates survive elastic recapacitation (PR 10)
+            for k, f in self._derate.items():
+                self._caps[k] = self._base_cap(k) * f
         self._caps_changed()
         self._reschedule(now)
 
     def _caps_changed(self) -> None:
         """Capacity-refresh hook; the fast allocator re-packs its caps
         vector here, the reference allocator needs nothing."""
+
+    # -- chaos link faults (PR 10) -------------------------------------------
+    def _base_cap(self, key: LinkKey) -> float:
+        """Re-derive one link's nominal (underate) capacity from the
+        live cluster state — the same arithmetic as ``attach`` /
+        ``_refresh_caps``, factored out so derating composes with
+        elastic recapacitation instead of compounding on itself."""
+        tag, idx = key
+        el = self.cfg.elastic
+        if tag == WAN:
+            return (el.wan_per_host * self.cluster.n_hosts
+                    if el is not None and el.wan_per_host > 0.0
+                    else self.links.wan)
+        n = self.cluster.pods[idx].n_hosts
+        if tag == UP:
+            return el.host_up * n if el is not None else self.links.pod_up
+        return el.host_down * n if el is not None else self.links.pod_down
+
+    def set_derate(self, key: LinkKey, factor: float, now: float) -> None:
+        """Derate one link to ``factor`` of its nominal capacity (0.0 =
+        full partition: flows park on the starved link until restore;
+        1.0 = restore). Settle-then-recapacitate, the same discipline as
+        the elastic refreshes: progress accrued at the old rates is
+        banked before the new capacity takes effect at exactly ``now``."""
+        if key not in self._caps:
+            raise KeyError(f"unknown link {key!r}")
+        self._settle(now)
+        if factor == 1.0:
+            self._derate.pop(key, None)
+        else:
+            self._derate[key] = factor
+        self._caps[key] = self._base_cap(key) * self._derate.get(key, 1.0)
+        self._caps_changed()
+        self._reschedule(now)
 
     # -- shared helpers ----------------------------------------------------------
     def path(self, src_pod: Optional[int], dst_pod: int) -> Path:

@@ -228,6 +228,38 @@ def migration_scenarios() -> Dict[str, dict]:
     return out
 
 
+def chaos_scenarios() -> Dict[str, dict]:
+    """Named fault campaigns for the chaos layer (PR 10): kwargs for
+    ``repro.chaos.ChaosConfig`` (minus the seed, which callers supply so
+    campaign and workload seeds stay independent).
+
+      * ``calm``     — no injections at all: an attached-but-empty chaos
+        subsystem, which must be bit-identical to running without one.
+      * ``gray``     — partial failures only: slowdown ramps, disk-slow
+        episodes and one hung task; nothing fail-stop ever fires.
+      * ``outages``  — two correlated pod-scoped outages (gray prodrome,
+        whole-pod kill, later rejoin) — the co-tenant/rack failure mode
+        independent per-host churn cannot express.
+      * ``hostile``  — the bench_chaos gate campaign: outages plus gray/
+        disk episodes and hung tasks, the mix the timeout+quarantine
+        response loop is claimed to beat detection-off under.
+      * ``partition``— fabric faults: link derating and a full pod
+        partition (per-stream runs log-and-skip these).
+    """
+    return {
+        "calm": dict(),
+        "gray": dict(n_gray=2, gray_factor=6.0, n_disk=1, n_hung=1,
+                     horizon=1200.0),
+        "outages": dict(n_outages=2, outage_gray_s=240.0,
+                        outage_gray_factor=6.0, horizon=1200.0),
+        "hostile": dict(n_outages=2, outage_gray_s=240.0,
+                        outage_gray_factor=6.0, n_gray=1, gray_factor=6.0,
+                        n_disk=1, n_hung=2, horizon=1200.0),
+        "partition": dict(n_link=2, link_factor=0.25, link_s=120.0,
+                          n_partition=1, partition_s=45.0, horizon=1200.0),
+    }
+
+
 def replication_scenarios() -> Dict[str, int]:
     """Replication factors for the durability-vs-storage sweep (PR 4
     satellite). The paper runs 1 replica per block; HDFS defaults to 3.

@@ -17,7 +17,13 @@ Families registered here:
     oversubscription level;
   * ``elastic_churn``     — the bench_elastic churn matrix: elastic
     fleet under a named ``repro.sim.workloads.churn_scenarios`` entry
-    with the scenario-appropriate autoscaler.
+    with the scenario-appropriate autoscaler;
+  * ``chaos``             — a named ``chaos_scenarios`` fault campaign
+    with the timeout+quarantine response loop on or off (PR 10);
+  * ``selftest``          — engine-robustness probes that crash or hang
+    the worker process on purpose (PR 10). Built in (not test-local)
+    because spawned workers import this module fresh and must be able
+    to resolve the family without conftest side effects.
 
 A cell returns a flat ``{metric: value}`` dict — every scalar field of
 ``repro.sim.metrics.Summary`` plus bookkeeping — which is what the
@@ -211,9 +217,85 @@ def _elastic_churn_cell(spec: CellSpec) -> Dict[str, float]:
     return summary_metrics(res)
 
 
+def _chaos_cell(spec: CellSpec) -> Dict[str, float]:
+    """A named fault campaign from ``chaos_scenarios`` against one
+    algorithm, with the detection/response loop toggled by the
+    ``detect`` param (the bench_chaos A/B cell, parameterized by seed).
+    The campaign seed is derived from the cell key too, so replica *i*
+    of ``detect=True`` and ``detect=False`` cells see *different*
+    campaigns — A/B pairs that must share a campaign pin it with an
+    explicit ``chaos_seed`` param instead."""
+    from repro.chaos import ChaosConfig, ResponseConfig
+    from repro.core.joss import make_algorithm
+    from repro.sim.cluster_sim import SimConfig, Simulator
+    from repro.sim.workloads import (chaos_scenarios, make_cluster,
+                                     small_workload)
+    hosts_per_pod = tuple(spec.param("hosts_per_pod", (5, 5)))
+    n_jobs = int(spec.param("n_jobs", 20))
+    seed = spec.sim_seed()
+    camp_kw = chaos_scenarios()[spec.scenario]
+    cluster = make_cluster(hosts_per_pod)
+    jobs = small_workload(cluster, seed=seed, n_jobs=n_jobs)
+    algo = make_algorithm(spec.algo, cluster)
+    _warm_registry(algo, cluster)
+    chaos = ChaosConfig(seed=int(spec.param("chaos_seed", seed + 1)),
+                        **camp_kw)
+    response = None
+    if spec.param("detect", True):
+        response = ResponseConfig(
+            grace=float(spec.param("grace", 2.0)),
+            quarantine_at=float(spec.param("quarantine_at", 1.0)))
+    cfg = SimConfig(chaos=chaos, response=response)
+    res = Simulator(cluster, algo, jobs, config=cfg, seed=seed).run()
+    assert len(res.job_finish) == n_jobs, \
+        f"{spec.algo}/{spec.scenario}#{spec.seed}: " \
+        f"{len(res.job_finish)}/{n_jobs} jobs finished"
+    return summary_metrics(res)
+
+
+def _selftest_cell(spec: CellSpec) -> Dict[str, float]:
+    """Engine-robustness probe. Scenarios:
+
+      * ``ok``           — return a tiny metric dict immediately;
+      * ``crash_once``   — hard-kill the worker (``os._exit``) on the
+        first attempt, succeed on the retry;
+      * ``hang_once``    — sleep past any sane cell timeout on the
+        first attempt, succeed on the retry;
+      * ``crash_always`` — hard-kill the worker on every attempt (the
+        poisoned-cell path).
+
+    "First attempt" is tracked with a flag file under the required
+    ``flag_dir`` param — worker processes share no memory, so the
+    filesystem is the only attempt counter a retried cell can see."""
+    import os
+    import time
+    metrics = {"ok": 1.0, "seed": float(spec.seed)}
+    if spec.scenario == "ok":
+        return metrics
+    if spec.scenario == "crash_always":
+        os._exit(17)
+    if spec.scenario not in ("crash_once", "hang_once"):
+        raise ValueError(f"unknown selftest scenario {spec.scenario!r}")
+    flag_dir = spec.param("flag_dir")
+    if flag_dir is None:
+        raise ValueError("selftest crash_once/hang_once cells need a "
+                         "flag_dir param")
+    flag = os.path.join(str(flag_dir),
+                        f"{stable_hash(spec.key()):x}.attempted")
+    if not os.path.exists(flag):
+        with open(flag, "w") as f:
+            f.write(spec.key())
+        if spec.scenario == "crash_once":
+            os._exit(17)
+        time.sleep(float(spec.param("hang_s", 600.0)))
+    return metrics
+
+
 CELL_FAMILIES: Dict[str, Callable[[CellSpec], Dict[str, float]]] = {
     "fabric_contention": _fabric_contention_cell,
     "elastic_churn": _elastic_churn_cell,
+    "chaos": _chaos_cell,
+    "selftest": _selftest_cell,
 }
 
 #: families the lockstep executor can drive: builder(spec) -> (sim,

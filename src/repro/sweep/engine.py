@@ -54,6 +54,15 @@ class SweepStats:
     n_executed: int = 0   # actually simulated this run
     workers: int = 1
     wall_s: float = 0.0
+    # -- robustness accounting (PR 10) -----------------------------------
+    n_retried: int = 0        # cell attempts re-queued after crash/hang
+    n_poisoned: int = 0       # cells abandoned after max_attempts
+    n_timeouts: int = 0       # attempts killed by the per-cell timeout
+    n_pool_rebuilds: int = 0  # pools rebuilt after a crash or a hang
+    #: per-cell execution report, keyed by cell key: ``{"attempts",
+    #: "crashes", "timeouts", "status"}`` with status one of
+    #: ``ok | poisoned``. Only cells that missed the cache appear.
+    cell_report: Dict[str, dict] = dataclasses.field(default_factory=dict)
 
     @property
     def cells_per_s(self) -> float:
@@ -91,16 +100,42 @@ class SweepEngine:
     per-cell metrics, same store entries), so the two backends share
     one cache; ``workers`` is ignored in lockstep mode. The executor's
     accounting lands in ``self.lockstep_stats`` after ``run``.
+
+    ``cell_timeout`` (PR 10) bounds each cell attempt's wall-clock in
+    the pool backend: an attempt still running past the deadline is
+    charged a timeout, the pool (the only way to reclaim a hung spawned
+    worker) is torn down and rebuilt, and innocent in-flight cells are
+    re-queued uncharged. A worker hard-crash (``BrokenProcessPool``)
+    likewise charges every in-flight attempt — the culprit is
+    indistinguishable from the victims — rebuilds the pool, and retries
+    after a capped exponential backoff. A cell that keeps failing is
+    *poisoned* after ``max_attempts``: recorded with
+    ``status="poisoned"`` in ``SweepStats.cell_report`` and omitted
+    from the result dict, so one bad cell cannot sink a whole sweep —
+    and because results are keyed by canonical cell key, the aggregate
+    rows of unaffected cells stay byte-identical to a crash-free run.
+    The inline (``workers=1``) and lockstep backends run in-process,
+    where a hard crash cannot be contained; they do not retry. Lockstep
+    lanes are instead guarded by the executor's own deadlock check,
+    which raises if an epoch advances no lane.
     """
 
     def __init__(self, *, workers: int = 1,
                  store: Optional[ResultStore] = None,
-                 backend: str = "pool"):
+                 backend: str = "pool",
+                 cell_timeout: Optional[float] = None,
+                 max_attempts: int = 3,
+                 retry_backoff_s: float = 0.5,
+                 retry_backoff_cap_s: float = 30.0):
         if backend not in ("pool", "lockstep"):
             raise ValueError(f"unknown sweep backend {backend!r}")
         self.workers = max(1, int(workers))
         self.store = store
         self.backend = backend
+        self.cell_timeout = cell_timeout
+        self.max_attempts = max(1, int(max_attempts))
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
         self.lockstep_stats = None
 
     def run(self, specs: Sequence[CellSpec]
@@ -139,26 +174,136 @@ class SweepEngine:
             elif self.workers == 1:
                 fresh = map(_worker_run, misses)
             else:
-                # spawn: fresh interpreters, nothing inherited (see
-                # module docstring). chunksize keeps IPC overhead small
-                # without serializing whole scenario groups to one
-                # worker.
-                ctx = multiprocessing.get_context("spawn")
-                pool = concurrent.futures.ProcessPoolExecutor(
-                    max_workers=self.workers, mp_context=ctx,
-                    initializer=_poison_worker_rng)
-                chunk = max(1, len(misses) // (self.workers * 8))
-                fresh = pool.map(_worker_run, misses, chunksize=chunk)
+                fresh = self._execute_pool(misses, stats).items()
             for k, metrics in fresh:
                 results[k] = metrics
                 stats.n_executed += 1
                 if self.store is not None:
                     self.store.put(k, metrics)
-            if self.backend == "pool" and self.workers > 1:
-                pool.shutdown()
 
         stats.wall_s = time.perf_counter() - t0
         return {k: results[k] for k in sorted(results)}, stats
+
+    # -- robust pool execution (PR 10) -----------------------------------
+    def _new_pool(self):
+        # spawn: fresh interpreters, nothing inherited (see module
+        # docstring)
+        ctx = multiprocessing.get_context("spawn")
+        return concurrent.futures.ProcessPoolExecutor(
+            max_workers=self.workers, mp_context=ctx,
+            initializer=_poison_worker_rng)
+
+    @staticmethod
+    def _kill_pool(pool) -> None:
+        """Tear a pool down even when its workers are hung or dead:
+        SIGTERM every worker, then a non-blocking shutdown (a blocking
+        one would wait on a worker that is asleep forever)."""
+        procs = list(getattr(pool, "_processes", {}).values())
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+        pool.shutdown(wait=False, cancel_futures=True)
+        for p in procs:
+            p.join(timeout=5.0)
+
+    def _execute_pool(self, misses: Sequence[str], stats: SweepStats
+                      ) -> Dict[str, MetricRow]:
+        """Run cache-missed cells through spawned workers with crash
+        recovery, per-cell timeouts, and poisoned-cell accounting (see
+        the class docstring)."""
+        from concurrent.futures.process import BrokenProcessPool
+        report = stats.cell_report
+        for k in misses:
+            report[k] = {"attempts": 0, "crashes": 0, "timeouts": 0,
+                         "status": "pending"}
+        done: Dict[str, MetricRow] = {}
+        queue: List[str] = list(misses)
+        pool = None
+        try:
+            while queue:
+                if pool is None:
+                    pool = self._new_pool()
+                futs: Dict[concurrent.futures.Future, str] = {}
+                for k in queue:
+                    report[k]["attempts"] += 1
+                    futs[pool.submit(_worker_run, k)] = k
+                queue = []
+                started: Dict[concurrent.futures.Future, float] = {}
+                failed: List[str] = []
+                while futs:
+                    waited = concurrent.futures.wait(
+                        set(futs),
+                        timeout=None if self.cell_timeout is None
+                        else min(0.05, self.cell_timeout / 4),
+                        return_when=concurrent.futures.FIRST_COMPLETED)
+                    now = time.monotonic()
+                    broken = False
+                    for f in waited.done:
+                        k = futs.pop(f)
+                        started.pop(f, None)
+                        try:
+                            _, metrics = f.result()
+                            done[k] = metrics
+                            report[k]["status"] = "ok"
+                        except BrokenProcessPool:
+                            report[k]["crashes"] += 1
+                            failed.append(k)
+                            broken = True
+                    if broken:
+                        # the pool is dead and every in-flight future is
+                        # lost with it; the culprit is indistinguishable
+                        # from the victims, so all of them are charged
+                        for f, k in sorted(futs.items(),
+                                           key=lambda i: i[1]):
+                            report[k]["crashes"] += 1
+                            failed.append(k)
+                        futs.clear()
+                        self._kill_pool(pool)
+                        pool = None
+                        stats.n_pool_rebuilds += 1
+                        break
+                    if self.cell_timeout is None:
+                        continue
+                    overdue: List[concurrent.futures.Future] = []
+                    for f in list(futs):
+                        if f.running():
+                            t0 = started.setdefault(f, now)
+                            if now - t0 > self.cell_timeout:
+                                overdue.append(f)
+                    if overdue:
+                        # a hung spawned worker can only be reclaimed by
+                        # killing the whole pool (there is no per-future
+                        # kill); charge the overdue cells, re-queue the
+                        # innocent in-flight ones uncharged
+                        for f in overdue:
+                            k = futs.pop(f)
+                            report[k]["timeouts"] += 1
+                            stats.n_timeouts += 1
+                            failed.append(k)
+                        for f, k in futs.items():
+                            report[k]["attempts"] -= 1
+                            queue.append(k)
+                        futs.clear()
+                        self._kill_pool(pool)
+                        pool = None
+                        stats.n_pool_rebuilds += 1
+                        break
+                for k in sorted(failed):
+                    if report[k]["attempts"] >= self.max_attempts:
+                        report[k]["status"] = "poisoned"
+                        stats.n_poisoned += 1
+                    else:
+                        stats.n_retried += 1
+                        queue.append(k)
+                if failed and queue:
+                    wave = max(report[k]["attempts"] for k in queue)
+                    time.sleep(min(self.retry_backoff_cap_s,
+                                   self.retry_backoff_s
+                                   * (2 ** max(0, wave - 1))))
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
+        return done
 
 
 def run_serial(specs: Sequence[CellSpec]) -> Dict[str, MetricRow]:

@@ -92,6 +92,15 @@ def _stub_measurements(gate, monkeypatch):
         return fresh
     monkeypatch.setattr(gate, "_fresh_migration", _echo_migration)
 
+    def _echo_chaos(stored_chaos, perturb=0.0):
+        fresh = {a: dict(v, wtt=v["wtt"] + perturb)
+                 for a, v in stored_chaos["algos"].items()}
+        for key in ("chaos_signature", "response_signature"):
+            sig = stored_chaos[key]
+            fresh[key] = sig + "!" if perturb else sig
+        return fresh
+    monkeypatch.setattr(gate, "_fresh_chaos", _echo_chaos)
+
     def _echo_obs(stored_obs, perturb=False):
         p = stored_obs["probe"]
         return {"sha256": p["sha256"] + "!" if perturb else p["sha256"],
@@ -315,6 +324,84 @@ def test_migration_gate_matches_stored_row_live(gate, stored_elastic):
     exactly reproducible — the probe is deterministic per seed."""
     m = stored_elastic["migration"]
     assert gate.compare_migration(m, gate._fresh_migration(m)) == []
+
+
+# ------------------------------------------------- chaos gate (PR 10) --
+@pytest.fixture(scope="module")
+def stored_chaos():
+    with open(os.path.join(_ROOT, "BENCH_chaos.json")) as f:
+        return json.load(f)
+
+
+def _chaos_fresh_from_stored(c):
+    fresh = {a: dict(v) for a, v in c["algos"].items()}
+    fresh["chaos_signature"] = c["chaos_signature"]
+    fresh["response_signature"] = c["response_signature"]
+    return fresh
+
+
+def test_chaos_row_committed(stored_chaos):
+    """The committed gate row must cover all five algorithms, hold the
+    detection-beats-off envelope, and actually exercise the response
+    loop (else the gate asserts nothing)."""
+    c = stored_chaos["algos"]
+    assert set(c) == {"joss-t", "joss-j", "fifo", "fair", "capacity"}
+    for v in c.values():
+        assert v["wtt"] < v["off_wtt"]
+        assert v["reexec"] < v["off_reexec"]
+    assert sum(v["n_timeouts"] for v in c.values()) > 0
+    assert sum(v["n_quarantined"] for v in c.values()) > 0
+    assert stored_chaos["chaos_signature"]
+    assert stored_chaos["response_signature"]
+    assert stored_chaos["gate"]["campaign"]["n_outages"] > 0
+
+
+def test_compare_chaos_passes_on_identical_row(gate, stored_chaos):
+    assert gate.compare_chaos(
+        stored_chaos, _chaos_fresh_from_stored(stored_chaos)) == []
+
+
+def test_compare_chaos_fails_on_broken_envelope(gate, stored_chaos):
+    fresh = _chaos_fresh_from_stored(stored_chaos)
+    fresh["joss-t"]["wtt"] = fresh["joss-t"]["off_wtt"] + 1.0
+    failures = gate.compare_chaos(stored_chaos, fresh)
+    assert any("did not cut WTT" in f for f in failures)   # envelope
+    assert any("drifted" in f for f in failures)           # determinism
+
+
+def test_compare_chaos_fails_on_signature_drift(gate, stored_chaos):
+    fresh = _chaos_fresh_from_stored(stored_chaos)
+    fresh["response_signature"] = "0000decafbad"
+    failures = gate.compare_chaos(stored_chaos, fresh)
+    assert len(failures) == 1 and "signature drifted" in failures[0]
+
+
+def test_compare_chaos_fails_on_dead_response_loop(gate, stored_chaos):
+    fresh = _chaos_fresh_from_stored(stored_chaos)
+    for a, v in fresh.items():
+        if isinstance(v, dict):
+            v["n_timeouts"] = v["n_quarantined"] = 0
+    failures = gate.compare_chaos(stored_chaos, fresh)
+    assert any("response loop" in f for f in failures)
+
+
+def test_main_trips_on_chaos_perturbation(gate, monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--chaos-perturb", "64.0"]) == 1
+
+
+def test_main_fails_cleanly_without_chaos_trajectory(gate, tmp_path,
+                                                     monkeypatch):
+    _stub_measurements(gate, monkeypatch)
+    assert gate.main(["--chaos-json",
+                      str(tmp_path / "missing.json")]) == 1
+
+
+def test_chaos_gate_matches_stored_row_live(gate, stored_chaos):
+    """One real re-simulation (not stubbed): the committed row must be
+    exactly reproducible — the probe is deterministic per seed."""
+    assert gate.compare_chaos(stored_chaos,
+                              gate._fresh_chaos(stored_chaos)) == []
 
 
 # --------------------------------------------------- obs gate (PR 7) --

@@ -62,6 +62,56 @@ def test_settle_guard_refuses_undelivered_fill():
         sim.step()          # no pause predicate: nothing delivers
 
 
+def _deferred_fabric():
+    """A bare fabric with a pending deferred fill (no simulator): one
+    flow started under the deferred backend leaves fill_pending set."""
+    from repro.core.topology import LinkCapacities
+    from repro.sim.engine import EventKernel
+    from repro.sim.network import NetworkFabric
+    from repro.sim.workloads import make_cluster
+
+    class _Sim:
+        pass
+    cluster = make_cluster((2, 2),
+                           links=LinkCapacities(pod_up=1e6, pod_down=1e6,
+                                                wan=100.0))
+    fab = NetworkFabric(cluster)
+    fab.attach(_Sim(), EventKernel())
+    fab.fill_backend = DeferredFillBackend()
+    fab.start_flow(0.0, 50.0, 0, 1, cap=1e6, kind="t",
+                   done=lambda now: None)
+    assert fab.fill_pending
+    return fab
+
+
+def test_settle_time_advance_guard_direct():
+    """The ``_settle`` guard itself (PR 10 satellite — previously only
+    reachable through the executor): advancing simulated time across an
+    undelivered fill raises; a dt == 0 re-settle of the same instant is
+    legal (the barrier settles before delivering)."""
+    fab = _deferred_fabric()
+    fab._settle(0.0)        # same instant: no integration, no error
+    assert fab.fill_pending
+    with pytest.raises(RuntimeError,
+                       match="time advanced across a deferred fill"):
+        fab._settle(1.0)
+    # delivery clears the flag and time may advance again
+    fab.solve_fill_inline()
+    assert not fab.fill_pending
+    fab._settle(1.0)
+
+
+def test_fill_delivery_without_pending_raises():
+    """Both delivery entry points refuse to run with no deferred fill
+    outstanding — a double delivery would re-arm from stale state."""
+    fab = _deferred_fabric()
+    fab.solve_fill_inline()
+    with pytest.raises(RuntimeError, match="no fill pending"):
+        fab.solve_fill_inline()
+    with pytest.raises(RuntimeError, match="no fill pending"):
+        fab.apply_fill([0.0])
+
+
 # ------------------------------------------------- executor (no jax) --
 def test_executor_scalar_path_matches_run_cell(scalar_results):
     ex = LockstepExecutor(use_jax=False)

@@ -1,0 +1,129 @@
+"""Sweep-engine robustness (PR 10 satellites): worker-crash recovery
+with pool rebuilds, per-cell wall-clock timeouts, poisoned cells after
+``max_attempts``, and the chaos cell family.
+
+The ``selftest`` cell family crashes (``os._exit``) or hangs worker
+processes *on purpose* — every engine here runs with ``workers >= 2``
+so the sabotage lands in a spawned pool worker, never in the pytest
+process. The headline claim is the acceptance criterion from the
+issue: a sweep with an injected worker crash and a hung cell completes,
+and its aggregates are byte-identical (for the unaffected cells) to a
+crash-free run.
+"""
+import pytest
+
+from repro.sweep import (CellSpec, SweepEngine, aggregate_json,
+                         make_params, run_cell)
+
+FAST = dict(retry_backoff_s=0.05, retry_backoff_cap_s=0.2)
+
+
+def _ok_cells(n=4):
+    return [CellSpec("selftest", "a", "ok", i) for i in range(n)]
+
+
+# ------------------------------------------------------- crash recovery --
+def test_worker_crash_is_retried_and_sweep_completes(tmp_path):
+    """A hard worker crash (BrokenProcessPool) poisons nothing on the
+    first strike: the pool is rebuilt, the cell retried, and every cell
+    — including the crasher — delivers a result."""
+    ok = _ok_cells()
+    crash = [CellSpec("selftest", "a", "crash_once", 0,
+                      make_params(flag_dir=str(tmp_path)))]
+    eng = SweepEngine(workers=2, **FAST)
+    res, stats = eng.run(ok + crash)
+    assert len(res) == 5
+    assert stats.n_pool_rebuilds >= 1
+    assert stats.n_retried >= 1
+    assert stats.n_poisoned == 0
+    row = stats.cell_report[crash[0].key()]
+    assert row["status"] == "ok" and row["crashes"] >= 1
+
+
+def test_crash_leaves_unaffected_aggregates_byte_identical(tmp_path):
+    """The acceptance criterion: aggregates of the cells untouched by
+    the crash are byte-identical to a crash-free run's."""
+    ok = _ok_cells()
+    crash = [CellSpec("selftest", "a", "crash_once", 0,
+                      make_params(flag_dir=str(tmp_path)))]
+    noisy, _ = SweepEngine(workers=2, **FAST).run(ok + crash)
+    clean, _ = SweepEngine(workers=2, **FAST).run(ok)
+    unaffected = {k: v for k, v in noisy.items() if k in clean}
+    assert aggregate_json(unaffected, metrics=("ok",)) \
+        == aggregate_json(clean, metrics=("ok",))
+
+
+# ------------------------------------------------------- hung cells -------
+def test_hung_cell_times_out_and_retries(tmp_path):
+    """A cell that outlives ``cell_timeout`` is reclaimed (the only way
+    to kill a hung spawn worker is killing the pool), charged a timeout,
+    and retried to completion."""
+    ok = _ok_cells()
+    hang = [CellSpec("selftest", "a", "hang_once", 0,
+                     make_params(flag_dir=str(tmp_path), hang_s=600.0))]
+    # generous timeout: it must absorb spawn-worker boot (~seconds under
+    # load) so only the genuine hang trips it
+    eng = SweepEngine(workers=2, cell_timeout=15.0, **FAST)
+    res, stats = eng.run(ok + hang)
+    assert len(res) == 5
+    assert stats.n_timeouts == 1
+    assert stats.n_poisoned == 0
+    row = stats.cell_report[hang[0].key()]
+    assert row["status"] == "ok" and row["timeouts"] == 1
+
+
+# ------------------------------------------------------ poisoned cells ----
+def test_always_crashing_cell_is_poisoned_not_fatal():
+    """After ``max_attempts`` crashes the cell is poisoned: absent from
+    the results, present in the report, and run() returns instead of
+    raising. (The cell runs alone: a broken pool cannot attribute the
+    crash, so innocent in-flight cells are charged too — co-scheduling
+    an always-crasher with tight ``max_attempts`` would poison
+    bystanders by design.)"""
+    poison = [CellSpec("selftest", "a", "crash_always", 0)]
+    eng = SweepEngine(workers=2, max_attempts=2, **FAST)
+    res, stats = eng.run(poison)
+    assert stats.n_poisoned == 1
+    assert stats.n_pool_rebuilds == 2
+    row = stats.cell_report[poison[0].key()]
+    assert row == {"attempts": 2, "crashes": 2, "timeouts": 0,
+                   "status": "poisoned"}
+    assert res == {}
+
+
+def test_inline_engine_rejects_nothing_but_does_not_retry():
+    """``workers=1`` runs cells in-process: no pool, no crash
+    containment — the robustness knobs are pool-path only and the
+    stats stay zero on a clean inline run."""
+    res, stats = SweepEngine(workers=1).run(_ok_cells())
+    assert len(res) == 4
+    assert stats.n_retried == stats.n_poisoned == stats.n_timeouts \
+        == stats.n_pool_rebuilds == 0
+
+
+# ------------------------------------------------------ chaos cell family --
+def test_chaos_cell_family_runs_and_is_deterministic():
+    spec = CellSpec("chaos", "fifo", "gray", 0,
+                    make_params(n_jobs=8, chaos_seed=5))
+    a = run_cell(spec)
+    assert a["n_jobs_finished"] == 8.0
+    assert a["n_chaos_events"] >= 1.0
+    assert a == run_cell(spec)
+
+
+def test_chaos_cell_detect_toggle_changes_the_trajectory():
+    on = run_cell(CellSpec("chaos", "fifo", "hostile", 0,
+                           make_params(n_jobs=12, chaos_seed=5)))
+    off = run_cell(CellSpec("chaos", "fifo", "hostile", 0,
+                            make_params(n_jobs=12, chaos_seed=5,
+                                        detect=False)))
+    assert on["n_timeouts"] > 0
+    assert off["n_timeouts"] == 0
+    assert on["n_jobs_finished"] == off["n_jobs_finished"] == 12.0
+
+
+def test_selftest_cells_need_flag_dir():
+    with pytest.raises(ValueError, match="flag_dir"):
+        run_cell(CellSpec("selftest", "a", "hang_once", 0))
+    with pytest.raises(ValueError, match="scenario"):
+        run_cell(CellSpec("selftest", "a", "nonsense", 0))
